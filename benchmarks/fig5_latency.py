@@ -1,0 +1,78 @@
+"""Paper Fig. 5: single-batch inference latency of the GA-refined HPU
+(Hetero-BLS, ~100 mm^2) vs synthesized NVDLA-large (nv_full: 2048-MAC
+INT8+FP16, 512 KB CBUF) on every NVDLA-supported workload.
+
+Paper: latency parity on ResNet-50 INT8 (NVDLA's design target), 1.5-2.4x
+faster on INT8/SSM/ViT, 1.2-1.3x on FP16 dense-LLM decodes; the four
+workloads NVDLA cannot execute (three INT4 LLMs + RT-2) are excluded.
+"""
+from __future__ import annotations
+
+from repro.core import compile_workload, simulate
+from repro.core.arch import (ChipConfig, Sparsity, TileTemplate, big_tile,
+                             little_tile, special_tile)
+from repro.core.calibrate.nvdla import NVDLA_FULL, nvdla_chip
+from repro.core.ir import Precision
+from repro.core.workloads import build, workload_names
+
+from .common import csv_row, load_json, save_json
+
+# NVDLA-large cannot execute INT4 weights or RT-2's action operators
+UNSUPPORTED = {"llama7b_int4", "mixtral_int4", "nemotron_h_int4", "rt2"}
+
+
+def ga_refined_100mm2() -> ChipConfig:
+    """Representative GA-refined Hetero-BLS at ~100 mm^2 (fig7's winner
+    family re-expressed as a canned config so this benchmark is
+    deterministic; re-derive with benchmarks/fig7_ga.py --paper-scale)."""
+    return ChipConfig(
+        name="hpu-100mm2-bls",
+        tiles=(
+            (big_tile(rows=64, cols=64, sram_kb=2048), 1),
+            (little_tile(rows=32, cols=32, sram_kb=1024,
+                         sparsity=Sparsity.TWO_SIDED, clock_mhz=1200), 3),
+            (special_tile(sram_kb=512), 1),
+        ),
+        dram_gbps=128.0,
+    )
+
+
+def run(force: bool = False) -> list:
+    cached = load_json("fig5_latency")
+    if cached is not None and not force:
+        return cached
+    hpu = ga_refined_100mm2()
+    nvdla = nvdla_chip(NVDLA_FULL)
+    rows = []
+    for name in workload_names():
+        if name in UNSUPPORTED:
+            continue
+        g = build(name)
+        r_h = simulate(hpu, compile_workload(g, hpu))
+        r_n = simulate(nvdla, compile_workload(g, nvdla))
+        rows.append({
+            "workload": name,
+            "hpu_ms": r_h.latency_s * 1e3,
+            "nvdla_ms": r_n.latency_s * 1e3,
+            "speedup": r_n.latency_s / r_h.latency_s,
+            "hpu_energy_ratio": r_h.energy_pj / r_n.energy_pj,
+            "hpu_area_mm2": r_h.area_mm2,
+        })
+    save_json("fig5_latency", rows)
+    return rows
+
+
+def main() -> list:
+    rows = run()
+    out = []
+    for r in rows:
+        out.append(csv_row(
+            f"fig5_{r['workload']}", 0.0,
+            f"speedup={r['speedup']:.2f}x "
+            f"energy_ratio={r['hpu_energy_ratio']:.2f}x"))
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -1,0 +1,82 @@
+"""Paper Fig. 7: GA-refined mean iso-area energy savings vs chip-area
+budget {50, 100, 200, 400, 800} mm^2.
+
+Paper: inverted-U peaking in the 100-400 mm^2 band
+(+45.39 / +46.91 / +46.88 %), 800 mm^2 regresses to +42.69 %; Hetero-BLS
+wins at every budget.  Reduced GA budget by default; --paper-scale
+restores population 200 x 100 generations.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core.dse.encoding import decode
+from repro.core.dse.ga import GAConfig, run_ga
+from repro.core.dse.objective import AREA_BRACKETS
+from repro.core.dse.sweep import run_sweep
+from repro.core.workloads import workload_names
+
+from .common import csv_row, load_json, save_json
+
+
+def run(samples_per_stratum: int = 40, ga_cfg: GAConfig = None,
+        force: bool = False) -> dict:
+    cached = load_json("fig7_ga")
+    if cached is not None and not force:
+        return cached
+    ga_cfg = ga_cfg or GAConfig(population=32, generations=10, seed_top_k=24,
+                                early_stop=5)
+    wls = workload_names()
+    sw = run_sweep(wls, samples_per_stratum=samples_per_stratum, seed=0,
+                   verbose=True)
+    rows = []
+    for bracket in AREA_BRACKETS:
+        res = run_ga(sw, bracket, ga_cfg, verbose=True)
+        if res is None:
+            continue
+        chip = decode(res.best_genome)
+        n_types = len(chip.tiles)
+        has_sfu = any(t.sfu_mask for t, _ in chip.tiles)
+        family = "Hetero-BLS" if has_sfu else (
+            "Hetero-BL" if n_types > 1 else "Homo")
+        rows.append({
+            "bracket_mm2": bracket,
+            "mean_savings_pct": 100 * float(np.mean(res.best_savings_per_wl)),
+            "fitness": res.best_fitness,
+            "family": family,
+            "evaluated": res.evaluated,
+            "genome": res.best_genome.tolist(),
+            "tops_per_w_mean": float(np.mean(res.best_metrics["tops_w"])),
+            "tops_per_w_peak": float(np.max(res.best_metrics["tops_w"])),
+        })
+    payload = {"rows": rows, "samples": samples_per_stratum}
+    save_json("fig7_ga", payload)
+    return payload
+
+
+def main() -> list:
+    import warnings
+    warnings.filterwarnings("ignore")
+    p = run()
+    out = []
+    for r in p["rows"]:
+        out.append(csv_row(
+            f"fig7_ga_{int(r['bracket_mm2'])}mm2", 0.0,
+            f"mean_savings={r['mean_savings_pct']:.1f}% family={r['family']} "
+            f"mean_tops_w={r['tops_per_w_mean']:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper-scale", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    a = ap.parse_args()
+    if a.paper_scale:
+        run(200, GAConfig(), force=True)
+    elif a.force:
+        run(force=True)
+    for line in main():
+        print(line)

@@ -1,0 +1,94 @@
+"""Paper §5.1.3: system-level RTL gating study, analytical side.
+
+The silicon study synthesized a homogeneous 2x 4x4 dual-datapath chip
+(FP16 path clock-gated under INT8) against an iso-area heterogeneous
+5x5 FP16+INT8 + 4x4 INT4+INT8 chip (idle tile power-gated): 93.6 % less
+power, 28.1 % more MACs (41 vs 32), 8.3 % less area.  The paper's
+analytical power-gating model (95 % leakage elimination) agreed within
+6 %.  This benchmark reproduces the analytical side of that comparison
+with our calibration tables.
+"""
+from __future__ import annotations
+
+from repro.core.arch import Sparsity, TileTemplate
+from repro.core.calibrate.asap7 import DEFAULT_CALIB
+from repro.core.ir import Precision
+from repro.core.simulator.area import tile_area
+
+from .common import csv_row, save_json
+
+PAPER = {"power_reduction_pct": 93.6, "mac_increase_pct": 28.1,
+         "area_reduction_pct": 8.3, "analytical_leak_elim_pct": 95.0}
+
+
+def run() -> dict:
+    c = DEFAULT_CALIB
+    # homogeneous: two 4x4 dual-datapath (FP16+INT8) tiles, FP16 clock-gated
+    homo = TileTemplate(name="homo", rows=4, cols=4, sram_kb=64,
+                        precisions=frozenset({Precision.INT8, Precision.FP16}),
+                        dsp_count=0, clock_mhz=1000)
+    # heterogeneous: 5x5 FP16+INT8 + 4x4 INT4+INT8, little tile power-gated
+    big = TileTemplate(name="b", rows=5, cols=5, sram_kb=64,
+                       precisions=frozenset({Precision.INT8, Precision.FP16}),
+                       dsp_count=0, clock_mhz=1000)
+    little = TileTemplate(name="l", rows=4, cols=4, sram_kb=64,
+                          precisions=frozenset({Precision.INT4, Precision.INT8}),
+                          dsp_count=0, clock_mhz=1000)
+
+    a_homo = 2 * tile_area(homo, c)
+    a_het = tile_area(big, c) + tile_area(little, c)
+    macs_homo = 2 * homo.num_macs
+    macs_het = big.num_macs + little.num_macs
+
+    # idle-phase power: homogeneous clock-gates (leakage remains on the full
+    # dual-datapath area); heterogeneous power-gates the idle INT4 tile to
+    # the 5 % residual
+    leak = c.leak_mw_per_mm2
+    p_homo_idle = leak * a_homo                       # clock gating: full leak
+    p_het_idle = leak * tile_area(big, c) \
+        + leak * tile_area(little, c) * c.power_gate_residual
+    # the study reports the INT8-only phase where the hetero design also
+    # runs on the (cheaper) INT8 datapath vs homo's residual-toggling wide
+    # path; dynamic part at equal throughput:
+    e_homo_dyn = c.mac_energy(int(Precision.INT8), 0, int(Precision.FP16))
+    e_het_dyn = c.mac_energy(int(Precision.INT8), 0, int(Precision.INT8))
+    # idle-dominated comparison (the 93.6 % figure is reported at idle/gated
+    # operation of the secondary tile)
+    power_red = 100 * (1 - (p_het_idle - leak * tile_area(big, c))
+                       / (p_homo_idle - leak * tile_area(homo, c)))
+    leak_elim = 100 * (1 - c.power_gate_residual)
+
+    payload = {
+        "analytical": {
+            "mac_increase_pct": 100 * (macs_het / macs_homo - 1),
+            "area_delta_pct": 100 * (1 - a_het / a_homo),
+            "gated_tile_power_reduction_pct": power_red,
+            "leak_elimination_pct": leak_elim,
+            "dyn_energy_reduction_pct": 100 * (1 - e_het_dyn / e_homo_dyn),
+        },
+        "paper_silicon": PAPER,
+        "agreement": {
+            "leak_model_vs_silicon_pct": abs(leak_elim - PAPER["power_reduction_pct"]),
+        },
+    }
+    save_json("rtl_gating", payload)
+    return payload
+
+
+def main() -> list:
+    p = run()
+    a = p["analytical"]
+    return [
+        csv_row("rtl_gating_macs", 0.0,
+                f"mac_increase={a['mac_increase_pct']:.1f}% (paper 28.1%)"),
+        csv_row("rtl_gating_power", 0.0,
+                f"leak_elim={a['leak_elimination_pct']:.1f}% "
+                f"(paper silicon 93.6%, model 95%)"),
+        csv_row("rtl_gating_dyn", 0.0,
+                f"int8_dyn_energy_saving={a['dyn_energy_reduction_pct']:.1f}%"),
+    ]
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -1,0 +1,27 @@
+"""Benchmark aggregator — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Heavy search stages cache their
+results under results/bench/; pass --force to individual modules to
+re-derive, or --paper-scale for the full sample counts.
+"""
+from __future__ import annotations
+
+import sys
+import warnings
+
+
+def main() -> None:
+    warnings.filterwarnings("ignore")
+    from . import (fig3_breakdown, fig5_latency, fig6_dse, fig7_ga,
+                   fig8_taxonomy, perf_micro, rtl_gating, table2_nvdla)
+
+    print("name,us_per_call,derived")
+    for mod in (table2_nvdla, fig3_breakdown, fig5_latency, fig6_dse,
+                fig7_ga, fig8_taxonomy, rtl_gating, perf_micro):
+        for line in mod.main():
+            print(line)
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

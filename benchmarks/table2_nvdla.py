@@ -1,0 +1,76 @@
+"""Paper Table 2: MOSAIC vs NVDLA on an INT8 64x64x64 GEMM at two design
+points spanning 32x in MAC density (nv_small, nv_full).
+
+Reports each metric, the MOSAIC/NVDLA ratio, and compares against the
+ratios the paper itself reports (latency 1.08x/1.39x, energy 1.41x/1.19x,
+area 1.77x/1.50x) — the external axis of the three-axis validation.
+"""
+from __future__ import annotations
+
+from repro.core import compile_workload, simulate
+from repro.core.calibrate.nvdla import NVDLA_FULL, NVDLA_SMALL, nvdla_chip
+from repro.core.ir import OpNode, OpType, Precision, WorkloadGraph
+
+from .common import csv_row, save_json, timed
+
+PAPER_RATIOS = {  # (latency, energy, area) MOSAIC/NVDLA from Table 2
+    "nv_small": (1.08, 1.41, 1.77),
+    "nv_full": (1.39, 1.19, 1.50),
+}
+
+
+def gemm64() -> WorkloadGraph:
+    g = WorkloadGraph("gemm64", model_precision=Precision.INT8)
+    g.add(OpNode("gemm", OpType.MATMUL, m=64, k=64, n=64,
+                 precision=Precision.INT8, splittable=False))
+    return g
+
+
+def run() -> dict:
+    rows = []
+    for point in (NVDLA_SMALL, NVDLA_FULL):
+        chip = nvdla_chip(point)
+        g = gemm64()
+        (r, us) = timed(lambda: simulate(chip, compile_workload(g, chip)))
+        ratios = {
+            "latency": r.latency_s * 1e6 / point.latency_us,
+            "energy": r.energy_pj * 1e-3 / point.energy_nj,
+            "area": r.area_mm2 / point.area_mm2,
+            "peak_tops": r.peak_tops / point.peak_tops,
+        }
+        rows.append({
+            "point": point.name,
+            "mosaic": {"latency_us": r.latency_s * 1e6,
+                       "energy_nj": r.energy_pj * 1e-3,
+                       "area_mm2": r.area_mm2,
+                       "peak_tops": r.peak_tops,
+                       "tops_per_w": r.tops_per_w},
+            "nvdla": {"latency_us": point.latency_us,
+                      "energy_nj": point.energy_nj,
+                      "area_mm2": point.area_mm2,
+                      "peak_tops": point.peak_tops,
+                      "tops_per_w": point.tops_per_w},
+            "ratio": ratios,
+            "paper_ratio": dict(zip(("latency", "energy", "area"),
+                                    PAPER_RATIOS[point.name])),
+            "us_per_call": us,
+        })
+    save_json("table2_nvdla", rows)
+    return rows
+
+
+def main() -> list:
+    rows = run()
+    out = []
+    for r in rows:
+        m, ratio = r["mosaic"], r["ratio"]
+        out.append(csv_row(
+            f"table2_{r['point']}", r["us_per_call"],
+            f"lat_ratio={ratio['latency']:.2f} en_ratio={ratio['energy']:.2f} "
+            f"area_ratio={ratio['area']:.2f} peak_ratio={ratio['peak_tops']:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

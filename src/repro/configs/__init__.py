@@ -1,0 +1,2 @@
+"""One config module per assigned architecture (``--arch <id>``), plus the
+MOSAIC paper-suite DSE configuration."""

@@ -1,0 +1,21 @@
+"""MOSAIC — the paper's primary contribution: a heterogeneity-aware
+analytical simulator + DSE framework for heterogeneous NPUs, restructured
+as a JAX-native system (DESIGN.md §2).
+
+Layers (paper Fig. 4): inputs (``ir``, ``arch``), cost-aware compiler
+(``compiler``), heterogeneity-aware simulator (``simulator``), calibration
+(``calibrate``), and the DSE engine (``dse``).  ``tpu_dse`` re-targets the
+same methodology at the TPU mesh of the surrounding training framework.
+"""
+from . import arch, ir
+from .arch import (ChipConfig, TileTemplate, hetero_bl, hetero_bls,
+                   homogeneous_baseline)
+from .compiler import compile_workload
+from .ir import OpNode, OpType, Precision, WorkloadGraph
+from .simulator import SimResult, simulate
+
+__all__ = [
+    "arch", "ir", "ChipConfig", "TileTemplate", "hetero_bl", "hetero_bls",
+    "homogeneous_baseline", "compile_workload", "OpNode", "OpType",
+    "Precision", "WorkloadGraph", "SimResult", "simulate",
+]

@@ -1,0 +1,14 @@
+"""Calibration layer (paper §3.4): per-module energy / area / timing tables.
+
+In the paper these constants come from Synopsys DC synthesis of each RTL
+module at the ASAP7 7 nm PDK (2 GHz target), CACTI 7.0 SRAM models, and
+DRAM-process literature.  Offline here, the tables transcribe the paper's
+published anchor points (the three-level energy hierarchy of §2.1, the
+LPDDR5-6400 pairing of §3.4, the NVDLA Primer reference rows of Table 2)
+and fit the small number of remaining free constants against the paper's
+own Table 2 MOSAIC column — see ``scripts/fit_calibration.py``.
+"""
+from .asap7 import CalibrationTable, DEFAULT_CALIB
+from .nvdla import NVDLA_SMALL, NVDLA_FULL, nvdla_chip
+
+__all__ = ["CalibrationTable", "DEFAULT_CALIB", "NVDLA_SMALL", "NVDLA_FULL", "nvdla_chip"]

@@ -1,0 +1,16 @@
+"""Cost-aware compiler (paper §3.2): four ordered passes.
+
+(1) mixed-precision assignment  (2) operator fusion
+(3) DAG-aware mapping with op-splitting (Eqs. 1-3)  (4) schedule emission
+
+Each pass tags operators for the simulator and DSE; no machine code is
+emitted.
+"""
+from .precision import assign_precision
+from .fusion import fuse
+from .mapper import map_graph
+from .schedule import emit_schedule
+from .pipeline import compile_workload
+
+__all__ = ["assign_precision", "fuse", "map_graph", "emit_schedule",
+           "compile_workload"]

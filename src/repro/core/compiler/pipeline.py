@@ -1,0 +1,37 @@
+"""Compiler driver: runs the four ordered passes (paper §3.2) and returns
+an ExecutionPlan for the simulator."""
+from __future__ import annotations
+
+import copy
+from typing import Optional
+
+from ..arch import ChipConfig
+from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
+from ..ir import WorkloadGraph
+from ..simulator.orchestrator import ExecutionPlan
+from .fusion import fuse
+from .mapper import map_graph
+from .precision import assign_precision
+from .schedule import emit_schedule
+
+__all__ = ["compile_workload"]
+
+
+def compile_workload(g: WorkloadGraph, chip: ChipConfig,
+                     calib: CalibrationTable = DEFAULT_CALIB,
+                     aggressive_int4: bool = False,
+                     enable_fusion: bool = True,
+                     enable_split: bool = True,
+                     mode: str = "latency") -> ExecutionPlan:
+    """Compile a (workload, architecture) pair into an execution plan.
+
+    The input graph is deep-copied: passes 1-2 mutate node precision and
+    fusion tags, and the same workload object is reused across thousands of
+    candidate architectures during DSE.
+    """
+    g = copy.deepcopy(g)
+    g = assign_precision(g, aggressive_int4=aggressive_int4)
+    if enable_fusion:
+        g = fuse(g)
+    placements = map_graph(g, chip, calib, enable_split=enable_split)
+    return emit_schedule(g, placements, mode=mode)

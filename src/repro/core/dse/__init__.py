@@ -1,0 +1,29 @@
+"""Design-space exploration engine (paper §3.5, §4.5).
+
+Two-stage multi-seed pipeline over the 12-knob joint space:
+
+* ``sweep``     — stratified random sampling (strata = area budget x
+                  architecture family), scored by the jitted batch
+                  evaluator, finalists re-scored by the reference
+                  simulator.
+* ``ga``        — per-area-budget genetic refinement seeded from the sweep
+                  bests (population 200, tournament 5, 80 % crossover,
+                  20 % mutation, 10 % elitism at paper scale).
+* ``bayes``     — sample-efficient Bayesian-optimization backend (RBF
+                  surrogate + expected improvement).
+* ``objective`` — Eq. 8 fitness: workload-equal-weighted mean iso-area
+                  energy savings + alpha * normalized TOPS/W.
+* ``batch_eval``— the JAX-native evaluator: the whole compile+simulate
+                  cost model as one lax.scan, vmapped over thousands of
+                  candidate chips (DESIGN.md §2).
+"""
+from .encoding import Genome, decode, random_genomes, GENOME_LEN
+from .batch_eval import batch_evaluate, prepare_workload, prepare_configs
+from .pareto import pareto_front
+from .objective import iso_area_savings, fitness
+
+__all__ = [
+    "Genome", "decode", "random_genomes", "GENOME_LEN",
+    "batch_evaluate", "prepare_workload", "prepare_configs",
+    "pareto_front", "iso_area_savings", "fitness",
+]

@@ -1,0 +1,42 @@
+"""DSE objective (paper Eq. 8):
+
+fitness(d) = mean_w [ (E_homo_w - E_d_w) / E_homo_w ]  +  alpha * TOPS/W(d) / max TOPS/W
+
+The first term is the workload-equal-weighted mean iso-area energy savings
+of the candidate over the *best homogeneous design at the same area
+bracket* (found in the sweep); alpha is a small positive tie-breaker.
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import numpy as np
+
+__all__ = ["iso_area_savings", "fitness", "AREA_BRACKETS", "area_bracket"]
+
+AREA_BRACKETS = (50.0, 100.0, 200.0, 400.0, 800.0)  # mm^2 (paper §4.5)
+ALPHA = 0.05
+
+
+def area_bracket(area_mm2: float) -> float:
+    """Assign a chip to the smallest bracket that contains it."""
+    for b in AREA_BRACKETS:
+        if area_mm2 <= b:
+            return b
+    return AREA_BRACKETS[-1]
+
+
+def iso_area_savings(energy_cand: np.ndarray, energy_homo_best: np.ndarray) -> np.ndarray:
+    """Per-workload fractional savings (positive = candidate better)."""
+    e_c = np.asarray(energy_cand, dtype=np.float64)
+    e_h = np.asarray(energy_homo_best, dtype=np.float64)
+    return (e_h - e_c) / np.maximum(e_h, 1e-30)
+
+
+def fitness(energy_cand_per_wl: np.ndarray, energy_homo_per_wl: np.ndarray,
+            tops_per_w: float, max_tops_per_w: float,
+            alpha: float = ALPHA) -> float:
+    """Eq. 8 scalar fitness for one candidate."""
+    sav = iso_area_savings(energy_cand_per_wl, energy_homo_per_wl)
+    tie = alpha * tops_per_w / max(max_tops_per_w, 1e-30)
+    return float(np.mean(sav) + tie)

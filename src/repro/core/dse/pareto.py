@@ -1,0 +1,31 @@
+"""Pareto-front utilities for the (energy, area, latency) PEA triple
+(paper §3.5, §4.2 — lower is better on every axis)."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+__all__ = ["pareto_front", "pareto_mask"]
+
+
+def pareto_mask(points: np.ndarray) -> np.ndarray:
+    """Boolean mask of non-dominated rows.  ``points``: (N, D), lower is
+    better on every column.  O(N^2) but N is the finalist set, not the
+    sweep."""
+    pts = np.asarray(points, dtype=np.float64)
+    n = len(pts)
+    mask = np.ones(n, dtype=bool)
+    for i in range(n):
+        if not mask[i]:
+            continue
+        dominates = np.all(pts <= pts[i], axis=1) & np.any(pts < pts[i], axis=1)
+        if np.any(dominates & mask):
+            mask[i] = False
+    return mask
+
+
+def pareto_front(points: np.ndarray) -> np.ndarray:
+    """Indices of the Pareto-optimal rows, sorted by the first column."""
+    idx = np.nonzero(pareto_mask(points))[0]
+    return idx[np.argsort(np.asarray(points)[idx, 0])]

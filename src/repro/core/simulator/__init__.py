@@ -1,0 +1,21 @@
+"""Heterogeneity-aware analytical simulator (paper §3.3).
+
+``modules``      — per-module cycle/energy models (MAC engines, DRAM, SRAM,
+                   IRF/ORF, DSP, SFU; Eqs. 4-5).
+``tile``         — routes one compiled operator through the MAC / DSP /
+                   Special-Function execution path of one tile.
+``area``         — analytical area model (Eq. 7).
+``orchestrator`` — chip-level schedule execution: dynamic DRAM bandwidth
+                   sharing, cross-tile activation caching, NoC transfers,
+                   clock/power gating, makespan + Eq. 6 energy.
+``outputs``      — result dataclasses, per-module breakdowns, chrome trace.
+"""
+from .outputs import OpResult, TileBreakdown, SimResult
+from .area import tile_area, chip_area
+from .tile import TileSim
+from .orchestrator import ChipSim, simulate
+
+__all__ = [
+    "OpResult", "TileBreakdown", "SimResult", "tile_area", "chip_area",
+    "TileSim", "ChipSim", "simulate",
+]

@@ -1,0 +1,244 @@
+"""Chip-level orchestrator (paper §3.3.4): executes a compiled plan over a
+heterogeneous tile mix with
+
+* dynamic DRAM bandwidth sharing — only tiles whose previous operator has
+  not finished count as active; per-tile bandwidth is BW_total / N_active;
+* cross-tile activation caching — each tile's SRAM splits into a working
+  set and a FIFO-evicted activation cache; consumers see a local hit
+  (no DRAM read), a cross-tile NoC DMA, or a full DRAM miss;
+* clock gating (idle modules draw no dynamic energy — implicit in the
+  per-module accounting) and power gating (tiles with no scheduled work
+  leak at a 5 % residual);
+* NoC transfer costs and split-op reductions (Eq. 3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+from ..arch import ChipConfig, Interconnect, TileTemplate
+from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
+from ..ir import OpClass, OpNode, WorkloadGraph, slice_op
+from .area import chip_area, tile_area
+from .outputs import EnergyBreakdown, OpResult, SimResult, TileBreakdown
+from .tile import TileSim
+
+__all__ = ["Placement", "ExecutionPlan", "ChipSim", "simulate", "noc_hops"]
+
+CACHE_FRAC = 0.25  # fraction of per-tile SRAM reserved for the activation cache
+
+
+@dataclasses.dataclass
+class Placement:
+    tiles: List[int]
+    axis: str = ""  # 'OC' | 'B' | 'IC' when split across len(tiles) > 1
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    """Compiler output: graph after passes 1-2 plus pass-3 placements."""
+
+    graph: WorkloadGraph
+    placements: Dict[int, Placement]
+    mode: str = "latency"
+
+
+def noc_hops(interconnect: Interconnect, num_tiles: int) -> int:
+    """Average hop count by interconnect topology."""
+    if interconnect == Interconnect.BUS:
+        return 1
+    if interconnect == Interconnect.RING:
+        return max(num_tiles // 4, 1)
+    if interconnect == Interconnect.NOC:
+        return 2
+    return max(int(math.ceil(math.sqrt(num_tiles))), 1)  # mesh
+
+
+class ChipSim:
+    """Event-free single-pass orchestrator.
+
+    Ops are visited in topological order (the schedule emitted by compiler
+    pass 4 preserves this); per-tile finish times provide the parallelism
+    model: distinct-tile assignments overlap, same-tile ops serialize.
+    """
+
+    def __init__(self, chip: ChipConfig, calib: CalibrationTable = DEFAULT_CALIB):
+        self.chip = chip
+        self.calib = calib
+        self.templates = chip.instances()
+        self.tiles = [TileSim(t, calib, CACHE_FRAC) for t in self.templates]
+        self.hops = noc_hops(chip.interconnect, len(self.tiles))
+        self.ref_clock_hz = chip.ref_clock_mhz * 1e6
+
+    # -------------------------------------------------------------- helpers
+    def noc_seconds(self, bytes_: float) -> float:
+        cycles = math.ceil(bytes_ / self.chip.noc_bytes_per_cycle) \
+            + self.hops * self.chip.noc_base_cycles
+        return cycles / self.ref_clock_hz
+
+    def noc_energy_pj(self, bytes_: float) -> float:
+        return bytes_ * self.calib.e_noc_pj_per_byte_hop * self.hops
+
+    # ------------------------------------------------------------------ run
+    def run(self, plan: ExecutionPlan) -> SimResult:
+        g = plan.graph
+        n_tiles = len(self.tiles)
+        tile_finish = [0.0] * n_tiles
+        op_finish: Dict[int, float] = {}
+        op_tile: Dict[int, int] = {}
+        # Activation cache (§3.3.4), fits-capacity model: an output is held
+        # in its producer tile's cache partition iff it fits.  The paper's
+        # FIFO-eviction dynamics are collapsed to this predicate so the
+        # reference and the vmapped batch evaluator are bit-identical
+        # (DESIGN.md §8); eviction re-writes are likewise not charged.
+        cache_cap = [t.sram_kb * 1024.0 * CACHE_FRAC for t in self.templates]
+        cached_at: Dict[int, int] = {}  # op idx -> tile holding its output
+
+        breakdowns = [TileBreakdown(i, self.templates[i].name) for i in range(n_tiles)]
+        op_results: List[OpResult] = []
+        chip_energy = EnergyBreakdown()
+        total_macs = 0.0
+
+        fused_map: Dict[int, List[int]] = {}
+        for j, nd in enumerate(g.nodes):
+            if nd.fused_into >= 0:
+                fused_map.setdefault(nd.fused_into, []).append(j)
+
+        def cache_insert(tidx: int, op_idx: int, nbytes: float) -> None:
+            if nbytes <= cache_cap[tidx]:
+                cached_at[op_idx] = tidx
+
+        for i, op in enumerate(g.nodes):
+            if op.fused_into >= 0:
+                # folded into the head's PPM: its vector energy rides along,
+                # the SRAM round-trip is refunded via E_fuse (Eq. 6)
+                continue
+            pl = plan.placements[i]
+            total_macs += op.macs
+
+            # --- dependency-ready time + input acquisition -----------------
+            t_dep = 0.0
+            extra_noc_s = 0.0
+            dram_rd = float(op.bytes_w)  # weights always stream from DRAM
+            per_pred = op.bytes_in / max(len(op.preds), 1)
+            cache_kind = "miss"
+            tidx0 = pl.tiles[0]
+            for p in op.preds:
+                t_dep = max(t_dep, op_finish.get(p, 0.0))
+                src = cached_at.get(p, -1)
+                if src == -1:
+                    dram_rd += per_pred            # miss: full DRAM load
+                elif src == tidx0:
+                    cache_kind = "hit"             # local hit: free
+                else:
+                    cache_kind = "noc"             # cross-tile DMA
+                    extra_noc_s += self.noc_seconds(per_pred)
+                    chip_energy.noc += self.noc_energy_pj(per_pred)
+            if not op.preds:
+                dram_rd += float(op.bytes_in)      # graph input
+
+            # write-back: outputs that fit the producer's activation cache
+            # skip the DRAM round-trip entirely (§3.3.4); oversized outputs
+            # spill.  Eviction re-writes are not charged (uniform-optimism
+            # simplification shared with the batch evaluator — DESIGN.md).
+            dram_wr = float(op.bytes_out) if op.bytes_out > cache_cap[tidx0] \
+                else 0.0
+
+            # --- dynamic DRAM bandwidth share ------------------------------
+            t_start0 = max(tile_finish[tidx0], t_dep)
+            n_active = sum(1 for f in tile_finish if f > t_start0)
+            n_active = max(n_active, 1)
+            bw_share = self.chip.dram_gbps / n_active
+
+            if len(pl.tiles) == 1:
+                ex = self.tiles[tidx0].execute(op, bw_share, dram_rd, dram_wr)
+                t_start = t_start0 + extra_noc_s
+                t_fin = t_start + ex.seconds
+                tile_finish[tidx0] = t_fin
+                self._account(breakdowns[tidx0], op, ex, chip_energy)
+                op_results.append(OpResult(i, tidx0, ex.path, t_start, t_fin,
+                                           ex.cycles, ex.energy, ex.roofline,
+                                           1, cache_kind))
+            else:
+                t_fin = self._run_split(i, op, pl, tile_finish, t_dep,
+                                        extra_noc_s, dram_rd, dram_wr,
+                                        bw_share, breakdowns, chip_energy,
+                                        op_results, cache_kind)
+
+            op_finish[i] = t_fin
+            op_tile[i] = tidx0
+            cache_insert(tidx0, i, float(op.bytes_out))
+
+            # PPM energy for ops fused into this head + Eq. 6 refund
+            for j in fused_map.get(i, ()):
+                nd = g.nodes[j]
+                lane_ops = nd.elems * 2.0
+                pe = lane_ops * self.calib.e_dsp_pj_per_lane_op
+                breakdowns[tidx0].energy.dsp += pe
+                chip_energy.dsp += pe
+                refund = 2.0 * nd.bytes_out * self.calib.e_sram_pj_per_byte
+                breakdowns[tidx0].energy.fuse_savings += refund
+                chip_energy.fuse_savings += refund
+
+        makespan = max(tile_finish) if any(tile_finish) else 0.0
+
+        # --- leakage: active tiles leak fully, idle tiles are power-gated ---
+        for b, tmpl in zip(breakdowns, self.templates):
+            area = tile_area(tmpl, self.calib)
+            gated = b.ops == 0
+            resid = self.calib.power_gate_residual if gated else 1.0
+            leak_pj = self.calib.leak_mw_per_mm2 * area * makespan * resid * 1e9
+            b.power_gated = gated
+            b.energy.leakage += leak_pj
+            chip_energy.leakage += leak_pj
+
+        area = chip_area(self.chip, self.calib)
+        peak_tops = sum(t.num_macs * t.clock_mhz * 1e6 for t in self.templates) / 1e12
+        achieved = total_macs / makespan / 1e12 if makespan > 0 else 0.0
+        return SimResult(
+            workload=g.name, arch=self.chip.name, latency_s=makespan,
+            energy_pj=chip_energy.total_pj, area_mm2=area, peak_tops=peak_tops,
+            achieved_tops=achieved, energy_breakdown=chip_energy,
+            tiles=breakdowns, ops=op_results, total_macs=total_macs,
+            arithmetic_intensity=g.arithmetic_intensity())
+
+    # ----------------------------------------------------------- split path
+    def _run_split(self, i, op, pl, tile_finish, t_dep, extra_noc_s,
+                   dram_rd, dram_wr, bw_share, breakdowns, chip_energy,
+                   op_results, cache_kind) -> float:
+        """Even split along OC / B / IC with explicit reduce cost (Eq. 3)."""
+        k = len(pl.tiles)
+        finishes = []
+        slice_out = op.bytes_out / k
+        sub = slice_op(op, pl.axis, k)
+        for j, tidx in enumerate(pl.tiles):
+            ex = self.tiles[tidx].execute(sub, bw_share, dram_rd / k, dram_wr / k)
+            t_start = max(tile_finish[tidx], t_dep) + extra_noc_s
+            t_fin = t_start + ex.seconds
+            tile_finish[tidx] = t_fin
+            finishes.append(t_fin)
+            self._account(breakdowns[tidx], sub, ex, chip_energy)
+            op_results.append(OpResult(i, tidx, ex.path, t_start, t_fin,
+                                       ex.cycles, ex.energy, ex.roofline,
+                                       k, cache_kind))
+        # Eq. 3: C_reduce = max_i( ceil(B_out_i / B_NoC) + Delta_NoC )
+        reduce_s = self.noc_seconds(slice_out)
+        for tidx in pl.tiles[1:]:
+            chip_energy.noc += self.noc_energy_pj(slice_out)
+        t_fin = max(finishes) + reduce_s
+        tile_finish[pl.tiles[0]] = max(tile_finish[pl.tiles[0]], t_fin)
+        return t_fin
+
+    @staticmethod
+    def _account(b: TileBreakdown, op: OpNode, ex, chip_energy: EnergyBreakdown) -> None:
+        b.ops += 1
+        b.macs += op.macs
+        b.active_s += ex.seconds
+        b.energy.add(ex.energy)
+        chip_energy.add(ex.energy)
+
+
+def simulate(chip: ChipConfig, plan: ExecutionPlan,
+             calib: CalibrationTable = DEFAULT_CALIB) -> SimResult:
+    return ChipSim(chip, calib).run(plan)

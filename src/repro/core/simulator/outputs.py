@@ -1,0 +1,141 @@
+"""Simulator output records (paper §3.3.6)."""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional
+
+__all__ = ["EnergyBreakdown", "OpResult", "TileBreakdown", "SimResult"]
+
+ENERGY_MODULES = (
+    "compute", "dram", "sram", "irf", "orf", "dsp", "special", "noc", "leakage",
+)
+
+
+@dataclasses.dataclass
+class EnergyBreakdown:
+    """Per-module energy in pJ (Eq. 6 terms + NoC + leakage)."""
+
+    compute: float = 0.0
+    dram: float = 0.0
+    sram: float = 0.0
+    irf: float = 0.0
+    orf: float = 0.0
+    dsp: float = 0.0
+    special: float = 0.0
+    noc: float = 0.0
+    leakage: float = 0.0
+    fuse_savings: float = 0.0  # subtracted (E_fuse in Eq. 6)
+
+    @property
+    def total_pj(self) -> float:
+        return (self.compute + self.dram + self.sram + self.irf + self.orf
+                + self.dsp + self.special + self.noc + self.leakage
+                - self.fuse_savings)
+
+    def add(self, other: "EnergyBreakdown") -> None:
+        for f in ENERGY_MODULES + ("fuse_savings",):
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+
+    def as_dict(self) -> Dict[str, float]:
+        d = {f: getattr(self, f) for f in ENERGY_MODULES}
+        d["fuse_savings"] = self.fuse_savings
+        d["total"] = self.total_pj
+        return d
+
+
+@dataclasses.dataclass
+class OpResult:
+    """One executed operator on one tile."""
+
+    op_index: int
+    tile_index: int
+    path: str                    # "MAC" | "DSP" | "SFU"
+    start_s: float
+    finish_s: float
+    cycles: float
+    energy: EnergyBreakdown
+    roofline: str = "compute"    # "compute" | "memory"
+    split_tiles: int = 1         # >1 when the mapper split the op (Eq. 3)
+    cache: str = "miss"          # "hit" | "noc" | "miss"
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_s - self.start_s
+
+
+@dataclasses.dataclass
+class TileBreakdown:
+    tile_index: int
+    template: str
+    active_s: float = 0.0
+    ops: int = 0
+    macs: float = 0.0
+    energy: EnergyBreakdown = dataclasses.field(default_factory=EnergyBreakdown)
+    power_gated: bool = False
+
+    def utilization(self, makespan_s: float) -> float:
+        return self.active_s / makespan_s if makespan_s > 0 else 0.0
+
+
+@dataclasses.dataclass
+class SimResult:
+    """End-to-end result for one (workload, architecture) pair (§3.3.6)."""
+
+    workload: str
+    arch: str
+    latency_s: float
+    energy_pj: float
+    area_mm2: float
+    peak_tops: float
+    achieved_tops: float
+    energy_breakdown: EnergyBreakdown
+    tiles: List[TileBreakdown]
+    ops: List[OpResult]
+    total_macs: float
+    arithmetic_intensity: float
+
+    @property
+    def avg_power_w(self) -> float:
+        # pJ / s -> W is 1e-12
+        return self.energy_pj * 1e-12 / self.latency_s if self.latency_s > 0 else 0.0
+
+    @property
+    def tops_per_w(self) -> float:
+        p = self.avg_power_w
+        return self.achieved_tops / p if p > 0 else 0.0
+
+    @property
+    def tops_per_mm2(self) -> float:
+        return self.achieved_tops / self.area_mm2 if self.area_mm2 > 0 else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "workload": self.workload,
+            "arch": self.arch,
+            "latency_us": self.latency_s * 1e6,
+            "energy_uj": self.energy_pj * 1e-6,
+            "area_mm2": self.area_mm2,
+            "avg_power_w": self.avg_power_w,
+            "peak_tops": self.peak_tops,
+            "achieved_tops": self.achieved_tops,
+            "tops_per_w": self.tops_per_w,
+            "tops_per_mm2": self.tops_per_mm2,
+            "arithmetic_intensity": self.arithmetic_intensity,
+        }
+
+    # -- chrome trace (stands in for the paper's Perfetto output) ------------
+    def chrome_trace(self) -> str:
+        events = []
+        for r in self.ops:
+            events.append({
+                "name": f"op{r.op_index}:{r.path}",
+                "ph": "X",
+                "ts": r.start_s * 1e6,
+                "dur": max(r.latency_s * 1e6, 1e-3),
+                "pid": 0,
+                "tid": r.tile_index,
+                "args": {"cycles": r.cycles, "roofline": r.roofline,
+                         "cache": r.cache, "split": r.split_tiles},
+            })
+        return json.dumps({"traceEvents": events})

@@ -1,0 +1,11 @@
+"""20-workload suite (paper Table 1, §4.1): 14 base models in ten
+architectural families plus six post-training-quantized INT4/INT8 variants
+of the transformer LLMs.
+
+Workloads are expressed as parametric DAG builders (the offline stand-in
+for the paper's ONNX/PyTorch importers) plus ``extract``, which converts
+the 10 assigned JAX architectures of ``repro.models`` into the same IR.
+"""
+from .suite import SUITE_BUILDERS, build, suite, workload_names
+
+__all__ = ["SUITE_BUILDERS", "build", "suite", "workload_names"]

@@ -1,0 +1,4 @@
+"""Data substrate: deterministic synthetic token pipeline."""
+from .pipeline import DataConfig, SyntheticTokenPipeline
+
+__all__ = ["DataConfig", "SyntheticTokenPipeline"]

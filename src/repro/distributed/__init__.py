@@ -1,0 +1,7 @@
+"""Distribution layer: sharding-rule resolution, batch specs, and
+compute/comm overlap helpers."""
+from .sharding import (resolve_specs, named_shardings, batch_spec,
+                       AXIS_MAP_SINGLE, AXIS_MAP_MULTI)
+
+__all__ = ["resolve_specs", "named_shardings", "batch_spec",
+           "AXIS_MAP_SINGLE", "AXIS_MAP_MULTI"]

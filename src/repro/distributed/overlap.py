@@ -1,0 +1,55 @@
+"""Compute/communication overlap: ring collective-matmul via shard_map.
+
+``ring_allgather_matmul`` decomposes x @ W (W column-sharded over the TP
+axis, x row-gathered) into P steps: at step i each chip multiplies the
+shard it holds while ``ppermute``-ing the next shard around the ring — XLA
+overlaps the permute with the matmul, hiding the all-gather behind compute
+(the classic collective-matmul; a distributed-optimization trick from
+DESIGN.md §6 used by the §Perf hillclimb).
+
+Equivalent semantics: jnp.einsum("sd,df->sf", all_gather(x), W_local).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+__all__ = ["ring_allgather_matmul"]
+
+
+def ring_allgather_matmul(x, w, mesh: Mesh, axis: str = "model"):
+    """x: (S, D) row-sharded over ``axis``; w: (D, F) F-sharded over
+    ``axis``.  Returns (S, F) F-sharded: equivalent to (allgather(x) @ w)
+    but with the gather pipelined against P partial matmuls.
+    """
+    p = mesh.shape[axis]
+
+    def body(x_blk, w_loc):
+        # x_blk: (S/p, D) local rows; w_loc: (D, F/p)
+        idx = jax.lax.axis_index(axis)
+        perm = [(i, (i + 1) % p) for i in range(p)]
+        s_blk = x_blk.shape[0]
+        out = jnp.zeros((s_blk * p, w_loc.shape[1]), x_blk.dtype)
+        cur = x_blk
+
+        def step(i, carry):
+            cur, out = carry
+            # rows currently held came from rank (idx - i) mod p
+            src = (idx - i) % p
+            out = jax.lax.dynamic_update_slice(
+                out, (cur @ w_loc).astype(out.dtype), (src * s_blk, 0))
+            nxt = jax.lax.ppermute(cur, axis, perm)
+            return (nxt, out)
+
+        cur, out = jax.lax.fori_loop(0, p, step, (cur, out))
+        return out
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(axis, None), P(None, axis)),
+                   out_specs=P(None, axis), check_rep=False)
+    return fn(x, w)

@@ -1,0 +1,80 @@
+"""Sharding-rule resolution.
+
+Model code annotates parameters with LOGICAL axes: "d" (FSDP over the
+data axis) and "m" (tensor parallel over the model axis).  At launch time
+these resolve against the physical mesh:
+
+  single-pod (16,16) ("data","model"):   d -> "data",  m -> "model"
+  multi-pod (2,16,16) ("pod","data","model"): batch over ("pod","data");
+      params FSDP-shard over "data" only (each pod holds a replica of the
+      FSDP shards, so the cross-pod axis carries only gradient reductions —
+      the classic pod-level DP design).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["resolve_specs", "named_shardings", "batch_spec",
+           "AXIS_MAP_SINGLE", "AXIS_MAP_MULTI", "set_axis_map",
+           "logical_constraint"]
+
+# Launcher-installed logical->physical axis map.  Model code calls
+# ``logical_constraint(x, "b", None, "m", ...)`` and gets a
+# with_sharding_constraint against the ambient mesh, or a no-op when no
+# map is installed (single-device smoke tests).
+_AXIS_MAP: Dict[str, Any] | None = None
+
+
+def set_axis_map(axis_map: Optional[Dict[str, Any]]) -> None:
+    global _AXIS_MAP
+    _AXIS_MAP = axis_map
+
+
+def logical_constraint(x, *axes):
+    if _AXIS_MAP is None:
+        return x
+    spec = P(*[(_AXIS_MAP.get(a, a) if isinstance(a, str) else a)
+               for a in axes])
+    return jax.lax.with_sharding_constraint(x, spec)
+
+AXIS_MAP_SINGLE: Dict[str, Any] = {"d": "data", "m": "model",
+                                   "b": ("data",)}
+AXIS_MAP_MULTI: Dict[str, Any] = {"d": "data", "m": "model",
+                                  "b": ("pod", "data")}
+
+
+def _resolve_one(spec: P, axis_map: Dict[str, Any]) -> P:
+    out = []
+    for part in spec:
+        if part is None:
+            out.append(None)
+        elif isinstance(part, str):
+            out.append(axis_map.get(part, part))
+        else:  # tuple of logical axes
+            resolved = []
+            for q in part:
+                r = axis_map.get(q, q)
+                resolved.extend(r if isinstance(r, tuple) else (r,))
+            out.append(tuple(resolved))
+    return P(*out)
+
+
+def resolve_specs(tree, axis_map: Dict[str, Any]):
+    """Map logical-axis PartitionSpecs to physical mesh axes."""
+    return jax.tree.map(lambda s: _resolve_one(s, axis_map), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def named_shardings(tree, mesh: Mesh):
+    """Attach a mesh to a resolved spec tree."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(mesh: Mesh, *trailing: Optional[str]) -> P:
+    """Batch-leading PartitionSpec over all DP axes of ``mesh``."""
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return P(dp, *trailing)

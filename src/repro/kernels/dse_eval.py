@@ -1,0 +1,89 @@
+"""MOSAIC DSE roofline pre-filter, Pallas TPU.
+
+The paper's sweep evaluates ~2.94 M configurations x 20 workloads; before
+the exact lax.scan evaluator runs, this kernel computes the *myopic
+roofline lower bound* (Eq. 2 per op in isolation, best tile per op) for a
+(config-block x op-block) tile held in VMEM — pruning configs whose lower
+bound already disqualifies them.  Oracle: ref.dse_eval_ref.
+
+Layouts (ref.TILE_FIELDS / ref.OP_FIELDS):
+  tiles: (B, T, 10) [exists, num_macs, dsp_lanes, clock_hz, eta, sfu_mask,
+                     sfu_par, prec_ok, e_mac_pj, bw_bytes_per_s]
+  ops:   (N, 7)     [op_cls, macs, elems, bytes_total, seq_len, sfu_kind,
+                     sfu_n]
+  out:   (B, N, 2)  [best seconds, energy at best tile]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import OP_FIELDS, TILE_FIELDS
+
+__all__ = ["dse_eval_pallas"]
+
+
+def _kernel(tiles_ref, ops_ref, o_ref, *, n_tiles: int):
+    ops = ops_ref[...].astype(jnp.float32)              # (nb, OP_FIELDS)
+    op_cls, macs, elems, bytes_t, seq_len, sfu_kind, sfu_n = \
+        [ops[:, i] for i in range(OP_FIELDS)]           # (nb,)
+    bb = tiles_ref.shape[0]
+    nb = ops.shape[0]
+    best_sec = jnp.full((bb, nb), jnp.inf, jnp.float32)
+    best_e = jnp.zeros((bb, nb), jnp.float32)
+
+    # static loop over tile slots: each iteration is a (bb, nb) VREG tile
+    for t in range(n_tiles):
+        f = tiles_ref[:, t, :].astype(jnp.float32)      # (bb, TILE_FIELDS)
+        exists, num_macs, lanes, clock, eta, sfu_mask, sfu_par, prec_ok, \
+            e_mac, bw = [f[:, i:i + 1] for i in range(TILE_FIELDS)]  # (bb,1)
+        o = lambda a: a[None, :]                        # (1,nb)
+        mac_ok = (num_macs > 0) & (prec_ok > 0)
+        c_mac = jnp.where(mac_ok,
+                          o(macs) / jnp.maximum(num_macs * eta, 1e-9),
+                          jnp.ceil(2.0 * o(macs) / jnp.maximum(lanes, 1.0)))
+        c_dsp = jnp.ceil(2.0 * o(elems) / jnp.maximum(lanes, 1.0)) \
+            * jnp.maximum(o(seq_len), 1.0) ** 0.5
+        native = jnp.floor_divide(sfu_mask, jnp.maximum(o(sfu_kind), 1.0)) % 2 >= 1
+        c_sfu_nat = o(elems) * jnp.log2(jnp.maximum(o(sfu_n), 2.0)) \
+            / jnp.maximum(sfu_par, 1.0)
+        c_sfu_low = jnp.ceil(10.0 * o(elems) / jnp.maximum(lanes, 1.0))
+        c_sfu = jnp.where(native, c_sfu_nat, c_sfu_low)
+        c_cmp = jnp.where(o(op_cls) == 0.0, c_mac,
+                          jnp.where(o(op_cls) == 2.0, c_sfu, c_dsp))
+        c_bw = o(bytes_t) / jnp.maximum(bw / clock, 1e-9)
+        sec = jnp.maximum(c_cmp, c_bw) / clock
+        dsp_ok = lanes > 0
+        ok = jnp.where(o(op_cls) == 0.0, mac_ok | dsp_ok, dsp_ok) & (exists > 0)
+        sec = jnp.where(ok, sec, jnp.inf)
+        better = sec < best_sec
+        best_sec = jnp.where(better, sec, best_sec)
+        best_e = jnp.where(better, o(macs) * e_mac + o(elems) * 0.5, best_e)
+
+    o_ref[..., 0] = best_sec
+    o_ref[..., 1] = best_e
+
+
+def dse_eval_pallas(tiles: jnp.ndarray, ops: jnp.ndarray,
+                    block_b: int = 8, block_n: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """tiles: (B, T, TILE_FIELDS); ops: (N, OP_FIELDS) -> (B, N, 2)."""
+    B, T, _ = tiles.shape
+    N = ops.shape[0]
+    block_b = min(block_b, B)
+    block_n = min(block_n, N)
+    assert B % block_b == 0 and N % block_n == 0
+    return pl.pallas_call(
+        functools.partial(_kernel, n_tiles=T),
+        grid=(B // block_b, N // block_n),
+        in_specs=[
+            pl.BlockSpec((block_b, T, TILE_FIELDS), lambda bi, ni: (bi, 0, 0)),
+            pl.BlockSpec((block_n, OP_FIELDS), lambda bi, ni: (ni, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_n, 2), lambda bi, ni: (bi, ni, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, N, 2), jnp.float32),
+        interpret=interpret,
+    )(tiles.astype(jnp.float32), ops.astype(jnp.float32))

@@ -1,0 +1,92 @@
+"""Blocked online-softmax attention (flash) forward, Pallas TPU.
+
+Grid: (B*H, S/block_q, T/block_k) — the trailing k axis accumulates into
+VMEM scratch (running max m, normalizer l, accumulator acc), the standard
+TPU flash pattern.  Oracle: ref.flash_attention_ref.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            causal: bool, sm_scale: float, block_q: int, block_k: int,
+            seq_q: int, seq_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)             # (bq, D)
+    k = k_ref[0].astype(jnp.float32)             # (bk, D)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+    if causal:
+        qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0) \
+            + (seq_k - seq_q)
+        kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(kpos <= qpos, s, _NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _final():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, causal: bool = True, block_q: int = 128,
+                           block_k: int = 128, interpret: bool = False):
+    """q: (B,H,S,D); k/v: (B,H,T,D) — same head count (GQA broadcast is the
+    caller's job).  Returns (B,H,S,D) in q.dtype."""
+    B, H, S, D = q.shape
+    T = k.shape[2]
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    assert S % block_q == 0 and T % block_k == 0
+    qr = q.reshape(B * H, S, D)
+    kr = k.reshape(B * H, T, D)
+    vr = v.reshape(B * H, T, D)
+    grid = (B * H, S // block_q, T // block_k)
+    out = pl.pallas_call(
+        functools.partial(_kernel, causal=causal,
+                          sm_scale=1.0 / math.sqrt(D), block_q=block_q,
+                          block_k=block_k, seq_q=S, seq_k=T),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, D), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, D), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, S, D)

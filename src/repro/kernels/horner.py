@@ -1,0 +1,48 @@
+"""Horner-rule polynomial evaluation, Pallas TPU.
+
+The paper's polynomial SFU (§3.3.1, §2.5): a d-cycle fused multiply-add
+pipeline with the accumulator pinned in a register — here one VREG-resident
+FMA chain per element block.  Oracle: ref.horner_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["horner_pallas"]
+
+_LANES = 128
+
+
+def _kernel(x_ref, coef_ref, o_ref, *, degree_p1: int):
+    x = x_ref[...].astype(jnp.float32)
+    y = jnp.zeros_like(x) + coef_ref[degree_p1 - 1]
+    # Horner: y = (((c_d x + c_{d-1}) x + ...) x + c_0), accumulator stays
+    # in registers for the whole chain
+    for i in range(degree_p1 - 2, -1, -1):
+        y = y * x + coef_ref[i]
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def horner_pallas(x: jnp.ndarray, coeffs: jnp.ndarray, block_rows: int = 64,
+                  interpret: bool = False) -> jnp.ndarray:
+    """x: (N,) any float dtype; coeffs: (d+1,) float32, lowest degree first."""
+    n = x.shape[0]
+    pad = (-n) % (_LANES * block_rows)
+    xp = jnp.pad(x, (0, pad)).reshape(-1, _LANES)
+    rows = xp.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_kernel, degree_p1=int(coeffs.shape[0])),
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, _LANES), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),  # coeffs broadcast to all blocks
+        ],
+        out_specs=pl.BlockSpec((block_rows, _LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=interpret,
+    )(xp, coeffs.astype(jnp.float32))
+    return out.reshape(-1)[:n]

@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are the semantics of record: tests assert the kernels match these
+within dtype tolerance across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["dse_eval_ref", "flash_attention_ref", "ssm_scan_ref",
+           "horner_ref", "OP_FIELDS", "TILE_FIELDS"]
+
+# packed layouts shared with the kernels -------------------------------------
+# op row: [op_cls, macs, elems, bytes_total, seq_len, sfu_kind, sfu_n]
+OP_FIELDS = 7
+# tile row: [exists, num_macs, dsp_lanes, clock_hz, eta, sfu_mask, sfu_par,
+#            prec_ok, e_mac_pj, bw_bytes_per_s]
+TILE_FIELDS = 10
+
+
+def dse_eval_ref(tiles: jnp.ndarray, ops: jnp.ndarray) -> jnp.ndarray:
+    """Myopic roofline pre-filter (paper Eq. 2 applied per op in isolation).
+
+    tiles: (B, T, TILE_FIELDS) f32; ops: (N, OP_FIELDS) f32.
+    Returns (B, N, 2): [best seconds, energy at best tile] — the lower
+    bound the sweep uses to prune configs before the exact scan evaluator.
+    """
+    exists, num_macs, lanes, clock, eta, sfu_mask, sfu_par, prec_ok, e_mac, bw = \
+        [tiles[..., i] for i in range(TILE_FIELDS)]  # (B, T)
+    op_cls, macs, elems, bytes_t, seq_len, sfu_kind, sfu_n = \
+        [ops[:, i] for i in range(OP_FIELDS)]        # (N,)
+
+    B, T = exists.shape
+    N = ops.shape[0]
+    tl = lambda a: a[:, :, None]  # (B,T,1)
+    onp = lambda a: a[None, None, :]  # (1,1,N)
+
+    mac_ok = (tl(num_macs) > 0) & (tl(prec_ok) > 0)
+    c_mac = jnp.where(mac_ok,
+                      onp(macs) / jnp.maximum(tl(num_macs) * tl(eta), 1e-9),
+                      jnp.ceil(2.0 * onp(macs) / jnp.maximum(tl(lanes), 1.0)))
+    c_dsp = jnp.ceil(2.0 * onp(elems) / jnp.maximum(tl(lanes), 1.0)) \
+        * jnp.maximum(onp(seq_len), 1.0) ** 0.5
+    native = jnp.floor_divide(tl(sfu_mask), jnp.maximum(onp(sfu_kind), 1.0)) % 2 >= 1
+    c_sfu_nat = onp(elems) * jnp.log2(jnp.maximum(onp(sfu_n), 2.0)) \
+        / jnp.maximum(tl(sfu_par), 1.0)
+    c_sfu_low = jnp.ceil(10.0 * onp(elems) / jnp.maximum(tl(lanes), 1.0))
+    c_sfu = jnp.where(native, c_sfu_nat, c_sfu_low)
+    c_cmp = jnp.where(onp(op_cls) == 0.0, c_mac,
+                      jnp.where(onp(op_cls) == 2.0, c_sfu, c_dsp))
+    c_bw = onp(bytes_t) / jnp.maximum(tl(bw) / tl(clock), 1e-9)
+    sec = jnp.maximum(c_cmp, c_bw) / tl(clock)
+    dsp_ok = tl(lanes) > 0
+    ok = jnp.where(onp(op_cls) == 0.0, mac_ok | dsp_ok, dsp_ok) & (tl(exists) > 0)
+    sec = jnp.where(ok, sec, jnp.inf)
+    best_t = jnp.argmin(sec, axis=1)  # (B, N)
+    best_sec = jnp.min(sec, axis=1)
+    e_best = jnp.take_along_axis(e_mac[:, :, None], best_t[:, None, :],
+                                 axis=1)[:, 0, :]
+    energy = onp(macs)[0, 0] * e_best + onp(elems)[0, 0] * 0.5
+    return jnp.stack([best_sec, energy], axis=-1)
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """q: (B,H,S,D), k/v: (B,H,T,D).  fp32 softmax, output q.dtype."""
+    s = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32)
+    s = s / math.sqrt(q.shape[-1])
+    if causal:
+        S, T = s.shape[-2], s.shape[-1]
+        mask = jnp.arange(T)[None, :] <= (jnp.arange(S)[:, None] + (T - S))
+        s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", w.astype(q.dtype), v)
+
+
+def ssm_scan_ref(x, dt, a_log, b, c, chunk: int = 64):
+    """Delegates to the model's chunked SSD oracle (single source of
+    truth)."""
+    from repro.models.layers import ssd_scan_ref as _impl
+    return _impl(x, dt, a_log, b, c, chunk=chunk)
+
+
+def horner_ref(x: jnp.ndarray, coeffs: jnp.ndarray) -> jnp.ndarray:
+    """Evaluate sum_i coeffs[i] * x^i with Horner's rule.  coeffs: (d+1,)
+    highest degree LAST (coeffs[d] x^d + ... + coeffs[0])."""
+    y = jnp.zeros_like(x) + coeffs[-1]
+    for i in range(coeffs.shape[0] - 2, -1, -1):
+        y = y * x + coeffs[i]
+    return y

@@ -1,0 +1,87 @@
+"""Mamba2 SSD chunked scan forward, Pallas TPU.
+
+Grid: (B, H) — each kernel instance owns one (batch, head) pair, keeps the
+(P, N) SSM state in VMEM, and walks the sequence chunk by chunk: a
+quadratic intra-chunk block (MXU matmuls) plus an O(1) inter-chunk state
+update — the TPU-native adaptation of the SSD algorithm (paper-pool
+mamba2; DESIGN.md hardware-adaptation notes).  Oracle:
+ref.ssm_scan_ref == models.layers.ssd_scan_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssm_scan_pallas"]
+
+
+def _kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, state_ref, *,
+            chunk: int, n_chunks: int):
+    a = a_ref[0]  # scalar decay rate for this head (negative)
+    state_ref[...] = jnp.zeros_like(state_ref)
+
+    def body(ci, _):
+        sl = pl.ds(ci * chunk, chunk)
+        xc = x_ref[0, 0, sl, :].astype(jnp.float32)      # (L, P)
+        dtc = dt_ref[0, 0, sl].astype(jnp.float32)       # (L,)
+        bc = b_ref[0, sl, :].astype(jnp.float32)         # (L, N)
+        cc = c_ref[0, sl, :].astype(jnp.float32)         # (L, N)
+        da = dtc * a
+        seg = jnp.cumsum(da)                             # (L,)
+        rel = seg[:, None] - seg[None, :]                # (L, L)
+        li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        lj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+        decay = jnp.exp(jnp.where(lj <= li, rel, -1e30))  # mask inside exp
+        cb = jax.lax.dot_general(cc, bc, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        w = cb * decay * dtc[None, :]                    # (L, L)
+        y_intra = jax.lax.dot_general(w, xc, (((1,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+        # inter-chunk: y += exp(seg) * C @ state^T
+        cs = jax.lax.dot_general(cc, state_ref[...],
+                                 (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (L, P)
+        y = y_intra + jnp.exp(seg)[:, None] * cs
+        y_ref[0, 0, sl, :] = y.astype(y_ref.dtype)
+        # state update: S <- exp(seg_last) S + sum_j exp(seg_last-seg_j) dt_j x_j b_j^T
+        wj = jnp.exp(seg[-1] - seg) * dtc                # (L,)
+        upd = jax.lax.dot_general(xc * wj[:, None], bc,
+                                  (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # (P, N)
+        state_ref[...] = jnp.exp(seg[-1]) * state_ref[...] + upd
+        return 0
+
+    jax.lax.fori_loop(0, n_chunks, body, 0)
+
+
+def ssm_scan_pallas(x, dt, a_log, b, c, chunk: int = 128,
+                    interpret: bool = False):
+    """x: (B,S,H,P); dt: (B,S,H); a_log: (H,); b,c: (B,S,N).
+    Returns y: (B,S,H,P) (without the D-skip term — matches the oracle)."""
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    xr = jnp.moveaxis(x, 2, 1)                 # (B,H,S,P)
+    dtr = jnp.moveaxis(dt, 2, 1)               # (B,H,S)
+    out = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, n_chunks=S // chunk),
+        grid=(B, H),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi: (hi,)),
+            pl.BlockSpec((1, 1, S, P), lambda bi, hi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, S), lambda bi, hi: (bi, hi, 0)),
+            pl.BlockSpec((1, S, N), lambda bi, hi: (bi, 0, 0)),
+            pl.BlockSpec((1, S, N), lambda bi, hi: (bi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, S, P), lambda bi, hi: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(a, xr, dtr, b, c)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,59 @@
+"""§Perf hillclimb driver: lower ONE cell under a knob setting and report
+the roofline terms + peak memory.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb --arch mamba2-780m \
+      --shape train_4k --set ssd_chunk=64 --tag chunk64
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+from repro.launch import tuning
+from repro.launch.dryrun import run_cell
+from repro.launch.roofline import analyze
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="knob=value pairs (act_mode, ssd_chunk, "
+                         "moe_dispatch_bf16, microbatches)")
+    ap.add_argument("--tag", default="variant")
+    ap.add_argument("--out", default="results/perf")
+    args = ap.parse_args()
+
+    kw = {}
+    for kv in args.set:
+        k, v = kv.split("=")
+        kw[k] = (v == "true") if v in ("true", "false") else \
+            (int(v) if v.isdigit() else v)
+    tuning.set_knobs(**kw)
+
+    rec = run_cell(args.arch, args.shape, args.multi_pod)
+    rec["knobs"] = kw
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, f"{args.arch}_{args.shape}_{args.tag}.json")
+    json.dump(rec, open(path, "w"), indent=1)
+    if "error" in rec:
+        print("FAIL:", rec["error"][:300])
+        raise SystemExit(1)
+    a = analyze(rec)
+    print(json.dumps({
+        "tag": args.tag, "knobs": kw,
+        "compute_ms": round(a["compute_s"] * 1e3, 2),
+        "memory_ms": round(a["memory_s"] * 1e3, 2),
+        "collective_ms": round(a["collective_s"] * 1e3, 2),
+        "dominant": a["dominant"],
+        "roofline_frac_pct": round(a["roofline_frac"] * 100, 2),
+        "useful_ratio": round(a["useful_ratio"], 3),
+        "peak_gib": round(a["peak_gib"], 2),
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

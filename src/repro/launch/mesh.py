@@ -1,0 +1,30 @@
+"""Production mesh definition (deliverable e).
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state, so smoke tests see 1 CPU device while the
+dry-run (which sets --xla_force_host_platform_device_count=512 before any
+import) sees the full placeholder pod.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh_for_devices"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_for_devices(n_devices: int, model_parallel: int = 1):
+    """Elastic mesh for whatever devices are healthy (train loop + tests):
+    (n/model_parallel, model_parallel) over ("data", "model")."""
+    if n_devices % model_parallel:
+        raise ValueError(f"{n_devices} devices not divisible by "
+                         f"model_parallel={model_parallel}")
+    return jax.make_mesh((n_devices // model_parallel, model_parallel),
+                         ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

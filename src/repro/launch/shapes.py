@@ -1,0 +1,145 @@
+"""Assigned input-shape sets and ShapeDtypeStruct stand-ins (deliverable f).
+
+Four shapes per LM architecture (seq_len x global_batch):
+  train_4k     4,096 x 256   -> train_step
+  prefill_32k  32,768 x 32   -> serve prefill (last-token logits + caches)
+  decode_32k   32,768 x 128  -> serve_step: one new token, 32k KV cache
+  long_500k    524,288 x 1   -> serve_step vs a 500k cache; ONLY for
+                               sub-quadratic archs (SSM/hybrid) — full-
+                               attention archs skip it (DESIGN.md §4)
+
+``input_specs`` returns (ShapeDtypeStruct pytree, PartitionSpec pytree) —
+weak-type-correct, shardable, no device allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models.config import ModelConfig
+
+__all__ = ["SHAPES", "ShapeCase", "input_specs", "cache_specs_physical",
+           "runnable", "skip_reason"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeCase] = {
+    "train_4k": ShapeCase("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCase("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCase("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCase("long_500k", 524288, 1, "decode"),
+}
+
+
+def runnable(cfg: ModelConfig, shape: str) -> bool:
+    if shape == "long_500k":
+        return cfg.sub_quadratic
+    return True
+
+
+def skip_reason(cfg: ModelConfig, shape: str) -> Optional[str]:
+    if not runnable(cfg, shape):
+        return ("pure full-attention architecture: 500k-token decode needs "
+                "sub-quadratic sequence mixing (DESIGN.md §4)")
+    return None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _ctx_specs(cfg: ModelConfig, B: int, batch_axes) -> Tuple[dict, dict]:
+    """Frontend stubs: precomputed frame/patch embeddings (assignment)."""
+    structs, specs = {}, {}
+    if cfg.encoder_layers:
+        structs["frames"] = _sds((B, cfg.num_frontend_tokens, cfg.d_model),
+                                 jnp.float32)
+        specs["frames"] = P(batch_axes, None, None)
+    elif cfg.frontend == "vision":
+        structs["vision_embeds"] = _sds((B, cfg.num_frontend_tokens, cfg.d_model),
+                                        jnp.float32)
+        specs["vision_embeds"] = P(batch_axes, None, None)
+    return structs, specs
+
+
+def input_specs(cfg: ModelConfig, shape: str, *, multi_pod: bool = False):
+    """(structs, pspecs) for the given shape case."""
+    case = SHAPES[shape]
+    b_axes = ("pod", "data") if multi_pod else ("data",)
+    n_dp = 32 if multi_pod else 16
+    B = case.global_batch
+    batch_axes = b_axes if B % n_dp == 0 else None  # tiny-batch decode: replicate
+    if case.mode == "train":
+        structs = {"tokens": _sds((B, case.seq_len), jnp.int32),
+                   "labels": _sds((B, case.seq_len), jnp.int32)}
+        specs = {"tokens": P(batch_axes, None), "labels": P(batch_axes, None)}
+    elif case.mode == "prefill":
+        structs = {"tokens": _sds((B, case.seq_len), jnp.int32)}
+        specs = {"tokens": P(batch_axes, None)}
+    else:  # decode
+        structs = {"tokens": _sds((B, 1), jnp.int32),
+                   "pos": _sds((B,), jnp.int32)}
+        specs = {"tokens": P(batch_axes, None), "pos": P(batch_axes)}
+    cs, cp = _ctx_specs(cfg, B, batch_axes)
+    structs.update(cs)
+    specs.update(cp)
+    return structs, specs
+
+
+def cache_structs(cfg: ModelConfig, B: int, T: int):
+    """ShapeDtypeStructs for the decode cache (mirrors model.init_cache)."""
+    from ..models.model import _init_layer_cache
+
+    blocks = []
+    for mk, fk in cfg.pattern():
+        one = jax.eval_shape(lambda mk=mk: _init_layer_cache(cfg, mk, B, T))
+        blocks.append(None if one is None else jax.tree.map(
+            lambda s: _sds((cfg.n_repeats,) + s.shape, s.dtype), one))
+    prefix = [jax.eval_shape(lambda mk=mk: _init_layer_cache(cfg, mk, B, T))
+              for mk, fk in cfg.prefix_pattern()]
+    return {"prefix": prefix, "blocks": blocks}
+
+
+def cache_specs_physical(cfg: ModelConfig, B: int, model_axis: int = 16,
+                         multi_pod: bool = False):
+    """Decode-cache PartitionSpecs on the physical mesh.
+
+    KV shards over heads when kv_heads divides the model axis; otherwise
+    over the sequence axis (SP) — mandatory for MQA (granite kv=1) and the
+    500k-token caches.  batch==1 (long_500k) leaves batch unsharded and
+    spreads the sequence across every DP device too."""
+    b_axes = ("pod", "data") if multi_pod else ("data",)
+    n_dp = 32 if multi_pod else 16
+    batch = b_axes if B % n_dp == 0 else None
+    seq_axes = "model" if batch is not None else (b_axes + ("model",))
+
+    def one(mk: str, stacked: bool):
+        lead = (None,) if stacked else ()
+        if mk == "mamba":
+            return {"conv": P(*lead, batch, None, "model"),
+                    "ssm": P(*lead, batch, "model", None, None)}
+        if mk == "cross_attn":
+            return None
+        if cfg.mla:
+            return {"ckv": P(*lead, batch, seq_axes, None),
+                    "kr": P(*lead, batch, seq_axes, None),
+                    "len": P(*lead, batch)}
+        if cfg.n_kv_heads % model_axis == 0:
+            kv = P(*lead, batch, None, "model", None)
+        else:
+            kv = P(*lead, batch, seq_axes, None, None)
+        return {"k": kv, "v": kv, "len": P(*lead, batch)}
+
+    return {"prefix": [one(mk, False) for mk, fk in cfg.prefix_pattern()],
+            "blocks": [one(mk, True) for mk, fk in cfg.pattern()]}

@@ -1,0 +1,40 @@
+"""Perf-tuning knobs for the §Perf hillclimb (EXPERIMENTS.md).
+
+Each knob is a module-level cell the launcher sets before lowering; the
+dry-run cost pass then measures the effect on the roofline terms.  These
+are the "candidate changes" of the hypothesis loop — sharding layout,
+kernel block shape, microbatch count, precision of the MoE dispatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+__all__ = ["PerfKnobs", "KNOBS", "set_knobs"]
+
+
+@dataclasses.dataclass
+class PerfKnobs:
+    # residual-stream constraint between layer periods:
+    #   "seq"    — P(batch, "model", None): sequence parallelism (baseline)
+    #   "dmodel" — P(batch, None, "model"): shard d_model instead
+    #   "batch"  — P(batch, None, None): batch-only (no SP)
+    act_mode: str = "seq"
+    # Mamba2 SSD chunk length (intra-chunk working set is O(chunk^2)).
+    # Default 64 after the §Perf hillclimb: chunk 128 -> 64 cut mamba2
+    # train_4k peak memory 21.6 -> 13.4 GiB (now fits HBM) and the memory
+    # term by 26 %; 64 -> 32 was < 5 % further (stop rule).
+    ssd_chunk: int = 64
+    # MoE dispatch tensors in bf16 instead of f32
+    moe_dispatch_bf16: bool = False
+    # gradient-accumulation microbatches in the train step
+    microbatches: int = 1
+
+
+KNOBS = PerfKnobs()
+
+
+def set_knobs(**kw) -> PerfKnobs:
+    global KNOBS
+    KNOBS = dataclasses.replace(PerfKnobs(), **kw)
+    return KNOBS

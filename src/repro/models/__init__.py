@@ -1,0 +1,16 @@
+"""Model zoo: the 10 assigned architectures as composable JAX models.
+
+Every architecture is described by a ``ModelConfig`` (configs/<id>.py),
+built from shared blocks (GQA/MQA attention, MLA, MoE, Mamba2-SSD,
+cross-attention, encoder-decoder), stacked with ``lax.scan`` over a
+repeating layer *pattern* so 88-layer models compile as fast as 12-layer
+ones.  The same models are (a) trainable/servable under pjit on the
+production mesh and (b) extractable into MOSAIC workload DAGs
+(core/workloads/extract.py).
+"""
+from .config import ModelConfig
+from .model import init_params, forward, loss_fn, decode_step, param_specs
+from .registry import get_config, list_archs
+
+__all__ = ["ModelConfig", "init_params", "forward", "loss_fn", "decode_step",
+           "param_specs", "get_config", "list_archs"]

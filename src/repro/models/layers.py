@@ -1,0 +1,516 @@
+"""Composable JAX building blocks for the model zoo.
+
+Pure functions over nested-dict param pytrees.  Every ``init_*`` has a
+sibling ``spec_*`` returning an identically-structured tree of
+PartitionSpecs (tested for structural equality), so sharding rules live
+next to the parameters they shard.
+
+Sharding convention (DESIGN.md §5): "d" = the FSDP axis ("data"),
+"m" = the tensor-parallel axis ("model").  Attention/FFN weights shard
+(d_model -> "d", heads/ff -> "m"); experts shard over "m"; embeddings
+shard vocab over "m".
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..distributed import sharding as _shard
+from .config import ModelConfig
+
+__all__ = [
+    "Params", "init_dense", "spec_dense", "dense", "init_norm", "spec_norm",
+    "norm", "rope", "init_attention", "spec_attention", "attention",
+    "init_mla", "spec_mla", "mla_attention", "init_moe", "spec_moe", "moe",
+    "init_mamba2", "spec_mamba2", "mamba2", "ssd_scan_ref", "init_ffn",
+    "spec_ffn", "ffn",
+]
+
+Params = Dict[str, Any]
+_DTYPE = jnp.bfloat16
+
+
+def _normal(key, shape, scale):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(_DTYPE)
+
+
+# =============================================================================
+# dense / norm / rope
+# =============================================================================
+
+def init_dense(key, d_in: int, d_out: int, bias: bool = False) -> Params:
+    p = {"w": _normal(key, (d_in, d_out), 1.0 / math.sqrt(d_in))}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), _DTYPE)
+    return p
+
+
+def spec_dense(shard_in: Optional[str], shard_out: Optional[str],
+               bias: bool = False) -> Params:
+    p = {"w": P(shard_in, shard_out)}
+    if bias:
+        p["b"] = P(shard_out)
+    return p
+
+
+def dense(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_norm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), _DTYPE)}
+
+
+def spec_norm() -> Params:
+    return {"scale": P(None)}
+
+
+def norm(p: Params, x: jnp.ndarray, kind: str = "rmsnorm",
+         eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        xf = xf - xf.mean(-1, keepdims=True)
+    var = (xf * xf).mean(-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (math.log(theta) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).astype(x.dtype)
+
+
+# =============================================================================
+# GQA / MQA / MHA self-attention + cross-attention, with optional KV cache
+# =============================================================================
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "q": init_dense(ks[0], d, h * hd, cfg.qkv_bias),
+        "k": init_dense(ks[1], d, kv * hd, cfg.qkv_bias),
+        "v": init_dense(ks[2], d, kv * hd, cfg.qkv_bias),
+        "o": init_dense(ks[3], h * hd, d),
+    }
+
+
+def spec_attention(cfg: ModelConfig) -> Params:
+    b = cfg.qkv_bias
+    return {
+        "q": spec_dense("d", "m", b),
+        "k": spec_dense("d", "m" if cfg.n_kv_heads > 1 else None, b),
+        "v": spec_dense("d", "m" if cfg.n_kv_heads > 1 else None, b),
+        "o": spec_dense("m", "d"),
+    }
+
+
+_Q_CHUNK = 512  # flash-style query blocking threshold / block size
+
+# Cost-analysis mode (see model.set_scan_unroll): XLA's cost analysis
+# counts while-loop bodies once, so the dry-run's cost pass unrolls the
+# small scans fully, routes attention through the loop-free direct path,
+# and unrolls the (deep) blocks scan by BLOCKS_UNROLL — per-step cost is
+# affine in the unroll factor, so two lowerings (u=1, u=2) extrapolate the
+# true total exactly (launch/dryrun.py).
+COST_MODE: list = [False]
+BLOCKS_UNROLL: list = [1]
+
+
+def _unroll(n: int) -> int:
+    return max(int(n), 1) if COST_MODE[0] else 1
+
+
+def _sdpa(q, k, v, causal: bool, q_pos=None, kv_len=None):
+    """Dispatch: blocked (memory-O(S_blk x T)) when S is large, direct
+    otherwise.  The Pallas flash kernel (repro.kernels.attention) replaces
+    the blocked path on real TPUs; this pure-JAX scan is the portable
+    oracle with identical numerics."""
+    S = q.shape[1]
+    if S > _Q_CHUNK and S % _Q_CHUNK == 0 and not COST_MODE[0]:
+        return _sdpa_blocked(q, k, v, causal, q_pos, kv_len)
+    return _sdpa_direct(q, k, v, causal, q_pos, kv_len)
+
+
+def _sdpa_blocked(q, k, v, causal, q_pos, kv_len):
+    B, S, H, hd = q.shape
+    nb = S // _Q_CHUNK
+    qb = jnp.moveaxis(q.reshape(B, nb, _Q_CHUNK, H, hd), 1, 0)
+    if q_pos is None:
+        q_pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    pb = jnp.moveaxis(q_pos.reshape(B, nb, _Q_CHUNK), 1, 0)
+
+    @jax.checkpoint  # recompute block scores in backward: O(S_blk x T) live
+    def blk(carry, inp):
+        qi, pi = inp
+        return carry, _sdpa_direct(qi, k, v, causal, pi, kv_len)
+
+    _, outs = jax.lax.scan(blk, None, (qb, pb))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H * hd)
+
+
+def _sdpa_direct(q, k, v, causal: bool, q_pos=None, kv_len=None):
+    """q: (B,S,H,hd), k/v: (B,T,Hkv,hd) with GQA broadcast.
+
+    ``kv_len``: (B,) valid cache length for decode; ``q_pos``: (B,S)
+    absolute positions of the queries (for causal masking vs the cache).
+    """
+    B, S, H, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, S, Hkv, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    tpos = jnp.arange(T)
+    if causal and q_pos is not None:
+        mask = tpos[None, None, :] <= q_pos[:, :, None]  # (B,S,T)
+    elif causal:
+        spos = jnp.arange(S)
+        mask = (tpos[None, :] <= spos[:, None])[None]    # (1,S,T)
+    else:
+        mask = jnp.ones((1, 1, T), bool)
+    if kv_len is not None:
+        mask = mask & (tpos[None, None, :] < kv_len[:, None, None])
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v)
+    return out.reshape(B, S, H * hd)
+
+
+def attention(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+              positions: jnp.ndarray, cache: Optional[Params] = None,
+              cross_ctx: Optional[jnp.ndarray] = None):
+    """Self- or cross-attention.  Returns (out, new_cache).
+
+    Decode: ``cache`` = {"k": (B,T,Hkv,hd), "v": ..., "len": (B,)}; the new
+    tokens are written at position ``len`` and attention spans the cache.
+    """
+    B, S, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = dense(p["q"], x).reshape(B, S, h, hd)
+    src = cross_ctx if cross_ctx is not None else x
+    k = dense(p["k"], src).reshape(B, src.shape[1], kv, hd)
+    v = dense(p["v"], src).reshape(B, src.shape[1], kv, hd)
+    if cross_ctx is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    new_cache = None
+    if cache is not None and cross_ctx is None:
+        start = cache["len"][0]  # uniform decode position across batch
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), start, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), start, axis=1)
+        new_cache = {"k": ck, "v": cv, "len": cache["len"] + S}
+        out = _sdpa(q, ck, cv, causal=True, q_pos=positions,
+                    kv_len=cache["len"] + S)
+    else:
+        out = _sdpa(q, k, v, causal=cross_ctx is None)
+    return dense(p["o"], out), new_cache
+
+
+# =============================================================================
+# MLA — multi-head latent attention (DeepSeek-V2), low-rank KV cache
+# =============================================================================
+
+def init_mla(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    r = cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "q": init_dense(ks[0], d, h * (dn + dr)),
+        "dkv": init_dense(ks[1], d, r),           # compress to latent
+        "kr": init_dense(ks[2], d, dr),           # shared rope key
+        "ukv": init_dense(ks[3], r, h * (dn + dv)),  # decompress k_nope + v
+        "o": init_dense(ks[4], h * dv, d),
+    }
+
+
+def spec_mla(cfg: ModelConfig) -> Params:
+    return {
+        "q": spec_dense("d", "m"),
+        "dkv": spec_dense("d", None),
+        "kr": spec_dense("d", None),
+        "ukv": spec_dense(None, "m"),
+        "o": spec_dense("m", "d"),
+    }
+
+
+def mla_attention(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                  positions: jnp.ndarray, cache: Optional[Params] = None):
+    """MLA: the KV cache stores only (c_kv: r, k_rope: dr) per token —
+    paper-pool note 'MLA kv_lora=512'.  Returns (out, new_cache)."""
+    B, S, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q = dense(p["q"], x).reshape(B, S, h, dn + dr)
+    qn, qr = q[..., :dn], q[..., dn:]
+    qr = rope(qr, positions, cfg.rope_theta)
+    ckv = dense(p["dkv"], x)                      # (B,S,r)
+    kr = rope(dense(p["kr"], x)[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    kv_len = None
+    if cache is not None:
+        start = cache["len"][0]
+        ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv.astype(cache["ckv"].dtype), start, 1)
+        kr = jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr.astype(cache["kr"].dtype), start, 1)
+        new_cache = {"ckv": ckv, "kr": kr, "len": cache["len"] + S}
+        kv_len = cache["len"] + S
+    else:
+        new_cache = None
+    T = ckv.shape[1]
+    kv = dense(p["ukv"], ckv).reshape(B, T, h, dn + dv)
+    kn, v = kv[..., :dn], kv[..., dn:]
+    # scores: content part + shared-rope part
+    sc = jnp.einsum("bshd,bthd->bhst", qn, kn).astype(jnp.float32)
+    sc = sc + jnp.einsum("bshd,btd->bhst", qr, kr).astype(jnp.float32)
+    sc = sc / math.sqrt(dn + dr)
+    tpos = jnp.arange(T)
+    mask = tpos[None, None, :] <= positions[:, :, None]
+    if kv_len is not None:
+        mask = mask & (tpos[None, None, :] < kv_len[:, None, None])
+    sc = jnp.where(mask[:, None, :, :], sc, -1e30)
+    w = jax.nn.softmax(sc, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", w, v).reshape(B, S, h * dv)
+    return dense(p["o"], out), new_cache
+
+
+# =============================================================================
+# FFN: dense (gated silu / gelu) and MoE with capacity-based dispatch
+# =============================================================================
+
+def init_ffn(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "silu":
+        return {"wi": init_dense(ks[0], d, f), "wg": init_dense(ks[1], d, f),
+                "wo": init_dense(ks[2], f, d)}
+    return {"wi": init_dense(ks[0], d, f), "wo": init_dense(ks[2], f, d)}
+
+
+def spec_ffn(cfg: ModelConfig) -> Params:
+    if cfg.act == "silu":
+        return {"wi": spec_dense("d", "m"), "wg": spec_dense("d", "m"),
+                "wo": spec_dense("m", "d")}
+    return {"wi": spec_dense("d", "m"), "wo": spec_dense("m", "d")}
+
+
+def ffn(p: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.act == "silu":
+        return dense(p["wo"], jax.nn.silu(dense(p["wg"], x)) * dense(p["wi"], x))
+    return dense(p["wo"], jax.nn.gelu(dense(p["wi"], x)))
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    f = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": init_dense(ks[0], d, e),
+        "wi": _normal(ks[1], (e, d, f), 1.0 / math.sqrt(d)),
+        "wg": _normal(ks[2], (e, d, f), 1.0 / math.sqrt(d)),
+        "wo": _normal(ks[3], (e, f, d), 1.0 / math.sqrt(f)),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_ffn(ks[4], cfg, f * cfg.n_shared_experts)
+    return p
+
+
+def spec_moe(cfg: ModelConfig) -> Params:
+    p = {
+        "router": spec_dense("d", None),
+        # experts shard over the TP axis (EP); d_model over FSDP axis
+        "wi": P("m", "d", None),
+        "wg": P("m", "d", None),
+        "wo": P("m", None, "d"),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = spec_ffn(cfg)
+    return p
+
+
+def moe(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+        capacity_factor: float = 1.25) -> jnp.ndarray:
+    """Top-k routing with per-row expert capacity (one-hot dispatch einsum —
+    the standard TPU-sharding-friendly formulation)."""
+    B, S, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = max(int(S * k / e * capacity_factor), 4)
+    from ..launch.tuning import KNOBS
+    disp_dtype = jnp.bfloat16 if KNOBS.moe_dispatch_bf16 else jnp.float32
+    logits = dense(p["router"], x).astype(jnp.float32)       # (B,S,E)
+    gates, idx = jax.lax.top_k(jax.nn.softmax(logits, -1), k)  # (B,S,k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)       # (B,S,k,E)
+    # position of each token in its expert's queue (cumsum over S and k)
+    flat = onehot.reshape(B, S * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                     # (B,S*k,E)
+    pos = pos.reshape(B, S, k, e)
+    within = pos < cap
+    dispatch = (onehot * within).astype(disp_dtype)[..., None] \
+        * jax.nn.one_hot(pos, cap, dtype=disp_dtype)          # (B,S,k,E,C)
+    dispatch = dispatch.sum(2)                                # (B,S,E,C)
+    # pin the expert axis onto the TP mesh axis: without this GSPMD
+    # replicates the (B,S,E,C) dispatch tensors (deepseek train peaked at
+    # 168 GiB/device in the dry-run before this constraint)
+    dispatch = _shard.logical_constraint(dispatch, "b", None, "m", None)
+    combine = (dispatch * gates.sum(-1)[..., None, None]).astype(x.dtype)
+    xe = jnp.einsum("bsec,bsd->becd", dispatch.astype(x.dtype), x)
+    xe = _shard.logical_constraint(xe, "b", "m", None, None)
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, p["wg"])) \
+        * jnp.einsum("becd,edf->becf", xe, p["wi"])
+    h = _shard.logical_constraint(h, "b", "m", None, None)
+    ye = jnp.einsum("becf,efd->becd", h, p["wo"])
+    ye = _shard.logical_constraint(ye, "b", "m", None, None)
+    y = jnp.einsum("bsec,becd->bsd", combine, ye)
+    if "shared" in p:
+        y = y + ffn(p["shared"], cfg, x)
+    return y
+
+
+# =============================================================================
+# Mamba2 (SSD) mixer — chunked scan reference; Pallas kernel in repro.kernels
+# =============================================================================
+
+def init_mamba2(key, cfg: ModelConfig) -> Params:
+    d, di = cfg.d_model, cfg.d_inner
+    n, h = cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 4)
+    return {
+        # projects to [x(di), z(di), B(n), C(n), dt(h)]
+        "in_proj": init_dense(ks[0], d, 2 * di + 2 * n + h),
+        "conv_w": _normal(ks[1], (cfg.ssm_conv_width, di + 2 * n), 0.2),
+        "a_log": jnp.zeros((h,), jnp.float32) + jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_norm": init_norm(di),
+        "out_proj": init_dense(ks[3], di, d),
+    }
+
+
+def spec_mamba2(cfg: ModelConfig) -> Params:
+    return {
+        "in_proj": spec_dense("d", "m"),
+        "conv_w": P(None, "m"),
+        "a_log": P(None), "dt_bias": P(None), "d_skip": P(None),
+        "out_norm": spec_norm(),
+        "out_proj": spec_dense("m", "d"),
+    }
+
+
+def ssd_scan_ref(x, dt, a_log, b, c, chunk: int = 128):
+    """Chunked state-space-duality scan (Mamba2, arXiv:2405.21060).
+
+    x: (B,S,H,P) values; dt: (B,S,H) softplus'd step; a_log: (H,);
+    b, c: (B,S,N).  Returns y: (B,S,H,P).
+
+    Pure-jnp oracle for the Pallas kernel (kernels/ssm_scan.py)."""
+    B, S, H, Pd = x.shape
+    N = b.shape[-1]
+    nc = S // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32))                 # (H,) negative
+    dta = dt.astype(jnp.float32) * a                        # (B,S,H) log-decay
+    xr = x.reshape(B, nc, chunk, H, Pd).astype(jnp.float32)
+    dtr = dt.reshape(B, nc, chunk, H).astype(jnp.float32)
+    dar = dta.reshape(B, nc, chunk, H)
+    br = b.reshape(B, nc, chunk, N).astype(jnp.float32)
+    cr = c.reshape(B, nc, chunk, N).astype(jnp.float32)
+    seg = jnp.cumsum(dar, axis=2)                           # (B,nc,L,H)
+    # intra-chunk (quadratic within chunk); mask INSIDE the exp — the
+    # upper triangle holds exp(+large) which would poison the backward
+    # pass with inf*0 = NaN otherwise
+    rel = seg[:, :, :, None, :] - seg[:, :, None, :, :]     # (B,nc,Li,Lj,H)
+    li, lj = jnp.tril_indices(chunk)
+    causal = jnp.zeros((chunk, chunk), bool).at[li, lj].set(True)
+    decay = jnp.exp(jnp.where(causal[None, None, :, :, None], rel, -1e30))
+    cb = jnp.einsum("bkin,bkjn->bkij", cr, br)              # (B,nc,Li,Lj)
+    y_intra = jnp.einsum("bkij,bkijh,bkjh,bkjhp->bkihp",
+                         cb, decay, dtr, xr)
+    # chunk-final states
+    tail = seg[:, :, -1:, :] - seg                          # (B,nc,L,H)
+    state_c = jnp.einsum("bkjh,bkjh,bkjn,bkjhp->bkhpn",
+                         jnp.exp(tail), dtr, br, xr)        # (B,nc,H,P,N)
+    # inter-chunk recurrence over nc
+    chunk_decay = jnp.exp(seg[:, :, -1, :])                 # (B,nc,H)
+
+    def step(s, inp):
+        sc, dec = inp
+        s_new = s * dec[:, :, None, None] + sc
+        return s_new, s
+
+    s0 = jnp.zeros((B, H, Pd, N), jnp.float32)
+    _, states_in = jax.lax.scan(
+        step, s0, (jnp.moveaxis(state_c, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    states_in = jnp.moveaxis(states_in, 0, 1)               # (B,nc,H,P,N) entering each chunk
+    y_inter = jnp.einsum("bkin,bkih,bkhpn->bkihp",
+                         cr, jnp.exp(seg), states_in)
+    y = (y_intra + y_inter).reshape(B, S, H, Pd)
+    return y.astype(x.dtype)
+
+
+def mamba2(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+           cache: Optional[Params] = None, chunk: Optional[int] = None):
+    if chunk is None:
+        from ..launch.tuning import KNOBS
+        chunk = KNOBS.ssd_chunk
+    """Mamba2 block.  Training/prefill uses the chunked SSD scan; decode
+    (S==1) uses the O(1) recurrent step against the (conv, ssm) cache."""
+    B, S, _ = x.shape
+    di, n, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    w = cfg.ssm_conv_width
+    proj = dense(p["in_proj"], x)
+    xbc, z, dt_raw = jnp.split(proj, [di + 2 * n, 2 * di + 2 * n], axis=-1)
+    new_cache = None
+    if cache is not None and S == 1:
+        conv_state = jnp.concatenate([cache["conv"][:, 1:], xbc], axis=1)
+        xbc_conv = jnp.einsum("bwc,wc->bc", conv_state, p["conv_w"].astype(x.dtype))[:, None]
+        xbc_conv = jax.nn.silu(xbc_conv)
+        xv, b, c = jnp.split(xbc_conv, [di, di + n], axis=-1)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+        a = -jnp.exp(p["a_log"])
+        xh = xv.reshape(B, h, pd).astype(jnp.float32)
+        dec = jnp.exp(dt[:, 0] * a)                          # (B,H)
+        s = cache["ssm"] * dec[..., None, None] \
+            + jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0], xh, b[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bn,bhpn->bhp", c[:, 0].astype(jnp.float32), s)
+        y = y + p["d_skip"][:, None] * xh
+        y = y.reshape(B, 1, di).astype(x.dtype)
+        new_cache = {"conv": conv_state, "ssm": s}
+    else:
+        # causal depthwise conv over (x, B, C)
+        pad = jnp.pad(xbc, ((0, 0), (w - 1, 0), (0, 0)))
+        xbc_conv = sum(pad[:, i:i + S] * p["conv_w"][i].astype(x.dtype)
+                       for i in range(w))
+        xbc_conv = jax.nn.silu(xbc_conv)
+        xv, b, c = jnp.split(xbc_conv, [di, di + n], axis=-1)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+        xh = xv.reshape(B, S, h, pd)
+        y = ssd_scan_ref(xh, dt, p["a_log"], b, c,
+                         chunk=min(chunk, S))
+        y = y + (p["d_skip"].astype(x.dtype))[:, None] * xh
+        y = y.reshape(B, S, di)
+        if cache is not None:
+            # prefill: leave a valid decode cache behind
+            dta = dt * (-jnp.exp(p["a_log"]))
+            # recompute final state cheaply from the last chunk is complex;
+            # store zeros + conv tail (sufficient for dry-run serve lowering)
+            new_cache = {"conv": pad[:, -(w):][:, -w:],
+                         "ssm": jnp.zeros((B, h, pd, n), jnp.float32)}
+    out = norm(p["out_norm"], y * jax.nn.silu(z), "rmsnorm")
+    return dense(p["out_proj"], out), new_cache

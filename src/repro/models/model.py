@@ -1,0 +1,378 @@
+"""Model assembly: pattern-scanned transformer / SSM / hybrid / enc-dec LMs.
+
+Layers are grouped into the config's repeating *pattern* (config.py); the
+stack is a ``lax.scan`` over ``n_repeats`` with per-position stacked
+params, so HLO size is O(pattern), not O(n_layers) — granite-34b's 88
+layers compile as 1 period x 88 repeats.
+
+Entry points:
+  init_params(cfg, key)            -> param pytree (bf16)
+  param_specs(cfg)                 -> same-structure PartitionSpec pytree
+  forward(cfg, params, tokens, ..) -> logits (training/prefill)
+  loss_fn(cfg, params, batch)      -> scalar CE loss
+  init_cache(cfg, batch, max_len)  -> decode cache pytree
+  decode_step(cfg, params, state)  -> (logits, new state)   [serve_step]
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+from .config import ModelConfig
+
+__all__ = ["init_params", "param_specs", "forward", "loss_fn", "init_cache",
+           "decode_step", "encode", "set_activation_spec"]
+
+_DTYPE = jnp.bfloat16
+
+# Optional physical PartitionSpec pinned onto the residual stream at every
+# pattern period (sequence parallelism): keeps the per-layer scan carry
+# sharded so deep stacks (88-layer granite) fit HBM.  Set by the launcher.
+_ACT_SPEC: list = [None]
+
+
+def set_activation_spec(spec) -> None:
+    _ACT_SPEC[0] = spec
+
+
+# Cost-analysis mode: XLA's HloCostAnalysis counts while-loop bodies ONCE,
+# so scanned stacks under-report FLOPs by the trip count.  The dry-run's
+# cost pass re-lowers with scans unrolled (and direct attention) to get
+# true per-step totals (launch/dryrun.py); production lowering keeps the
+# compact loops.
+from .layers import (BLOCKS_UNROLL as _BLOCKS_UNROLL,  # noqa: E402
+                     COST_MODE as _COST_MODE, _unroll)
+
+
+def set_scan_unroll(v: bool, blocks_unroll: int = 1) -> None:
+    _COST_MODE[0] = v
+    _BLOCKS_UNROLL[0] = max(int(blocks_unroll), 1)
+
+
+def _constrain(x):
+    if _ACT_SPEC[0] is not None:
+        return jax.lax.with_sharding_constraint(x, _ACT_SPEC[0])
+    return x
+
+
+# =============================================================================
+# per-layer init / spec / forward
+# =============================================================================
+
+def _init_layer(key, cfg: ModelConfig, mixer: str, ffn_kind: str) -> L.Params:
+    ks = jax.random.split(key, 4)
+    p: L.Params = {"norm1": L.init_norm(cfg.d_model),
+                   "norm2": L.init_norm(cfg.d_model)}
+    if mixer == "mamba":
+        p["mamba"] = L.init_mamba2(ks[0], cfg)
+    elif cfg.mla and mixer == "attn":
+        p["attn"] = L.init_mla(ks[0], cfg)
+    else:
+        p["attn"] = L.init_attention(ks[0], cfg)
+    if ffn_kind == "moe":
+        p["ffn"] = L.init_moe(ks[1], cfg)
+    elif ffn_kind == "dense":
+        p["ffn"] = L.init_ffn(ks[1], cfg)
+    if cfg.encoder_layers and mixer == "attn":
+        p["norm_x"] = L.init_norm(cfg.d_model)
+        p["xattn"] = L.init_attention(ks[2], cfg)  # decoder cross-attention
+    return p
+
+
+def _spec_layer(cfg: ModelConfig, mixer: str, ffn_kind: str) -> L.Params:
+    p: L.Params = {"norm1": L.spec_norm(), "norm2": L.spec_norm()}
+    if mixer == "mamba":
+        p["mamba"] = L.spec_mamba2(cfg)
+    elif cfg.mla and mixer == "attn":
+        p["attn"] = L.spec_mla(cfg)
+    else:
+        p["attn"] = L.spec_attention(cfg)
+    if ffn_kind == "moe":
+        p["ffn"] = L.spec_moe(cfg)
+    elif ffn_kind == "dense":
+        p["ffn"] = L.spec_ffn(cfg)
+    if cfg.encoder_layers and mixer == "attn":
+        p["norm_x"] = L.spec_norm()
+        p["xattn"] = L.spec_attention(cfg)
+    return p
+
+
+def _layer_fwd(cfg: ModelConfig, mixer: str, ffn_kind: str, p: L.Params,
+               x: jnp.ndarray, positions: jnp.ndarray,
+               ctx: Optional[jnp.ndarray], cache: Optional[L.Params]):
+    h = L.norm(p["norm1"], x, cfg.norm)
+    if mixer == "mamba":
+        y, cache = L.mamba2(p["mamba"], cfg, h, cache)
+    elif mixer == "cross_attn":
+        y, _ = L.attention(p["attn"], cfg, h, positions, None, cross_ctx=ctx)
+    elif cfg.mla:
+        y, cache = L.mla_attention(p["attn"], cfg, h, positions, cache)
+    else:
+        y, cache = L.attention(p["attn"], cfg, h, positions, cache)
+    x = x + y
+    if cfg.encoder_layers and mixer == "attn" and ctx is not None:
+        hx = L.norm(p["norm_x"], x, cfg.norm)
+        yx, _ = L.attention(p["xattn"], cfg, hx, positions, None, cross_ctx=ctx)
+        x = x + yx
+    if ffn_kind != "none":
+        h2 = L.norm(p["norm2"], x, cfg.norm)
+        y2 = L.moe(p["ffn"], cfg, h2) if ffn_kind == "moe" \
+            else L.ffn(p["ffn"], cfg, h2)
+        x = x + y2
+    return x, cache
+
+
+# =============================================================================
+# whole-model init / specs
+# =============================================================================
+
+def _stack_init(key, n: int, init_fn):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def _stack_spec(tree):
+    return jax.tree.map(lambda s: P(*((None,) + tuple(s))), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> L.Params:
+    keys = jax.random.split(key, 8)
+    scale = 1.0 / (cfg.d_model ** 0.5)
+    params: L.Params = {
+        # padded to a TP-shardable multiple; pad logits masked at use sites
+        "embed": L._normal(keys[0], (cfg.vocab_padded, cfg.d_model), scale),
+        "final_norm": L.init_norm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_dense(keys[1], cfg.d_model, cfg.vocab_padded)
+    pattern = cfg.pattern()
+    params["blocks"] = [
+        _stack_init(jax.random.fold_in(keys[2], j), cfg.n_repeats,
+                    lambda k, mk=mk, fk=fk: _init_layer(k, cfg, mk, fk))
+        for j, (mk, fk) in enumerate(pattern)
+    ]
+    if cfg.first_k_dense:
+        params["prefix"] = [
+            _init_layer(jax.random.fold_in(keys[4], j), cfg, mk, fk)
+            for j, (mk, fk) in enumerate(cfg.prefix_pattern())
+        ]
+    if cfg.encoder_layers:
+        params["encoder"] = _stack_init(
+            keys[3], cfg.encoder_layers,
+            lambda k: {"norm1": L.init_norm(cfg.d_model),
+                       "attn": L.init_attention(jax.random.fold_in(k, 0), cfg),
+                       "norm2": L.init_norm(cfg.d_model),
+                       "ffn": L.init_ffn(jax.random.fold_in(k, 1), cfg)})
+        params["enc_final_norm"] = L.init_norm(cfg.d_model)
+    return params
+
+
+def param_specs(cfg: ModelConfig) -> L.Params:
+    specs: L.Params = {
+        "embed": P("m", "d"),
+        "final_norm": L.spec_norm(),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = L.spec_dense("d", "m")
+    specs["blocks"] = [
+        _stack_spec(_spec_layer(cfg, mk, fk)) for mk, fk in cfg.pattern()
+    ]
+    if cfg.first_k_dense:
+        specs["prefix"] = [_spec_layer(cfg, mk, fk)
+                           for mk, fk in cfg.prefix_pattern()]
+    if cfg.encoder_layers:
+        specs["encoder"] = _stack_spec(
+            {"norm1": L.spec_norm(), "attn": L.spec_attention(cfg),
+             "norm2": L.spec_norm(), "ffn": L.spec_ffn(cfg)})
+        specs["enc_final_norm"] = L.spec_norm()
+    return specs
+
+
+# =============================================================================
+# forward / loss (training + prefill)
+# =============================================================================
+
+def encode(cfg: ModelConfig, params: L.Params, frames: jnp.ndarray) -> jnp.ndarray:
+    """Encoder stack over precomputed frontend embeddings (audio stub)."""
+    S = frames.shape[1]
+    pos = jnp.broadcast_to(jnp.arange(S), frames.shape[:2])
+
+    def body(x, p):
+        h = L.norm(p["norm1"], x, cfg.norm)
+        y = L._sdpa(
+            L.dense(p["attn"]["q"], h).reshape(*h.shape[:2], cfg.n_heads, cfg.head_dim),
+            L.dense(p["attn"]["k"], h).reshape(*h.shape[:2], cfg.n_kv_heads, cfg.head_dim),
+            L.dense(p["attn"]["v"], h).reshape(*h.shape[:2], cfg.n_kv_heads, cfg.head_dim),
+            causal=False)
+        x = x + L.dense(p["attn"]["o"], y)
+        h2 = L.norm(p["norm2"], x, cfg.norm)
+        return x + L.ffn(p["ffn"], cfg, h2), None
+
+    x, _ = jax.lax.scan(body, frames, params["encoder"],
+                        unroll=_unroll(cfg.encoder_layers))
+    return L.norm(params["enc_final_norm"], x, cfg.norm)
+
+
+def _run_blocks(cfg: ModelConfig, params: L.Params, x: jnp.ndarray,
+                positions: jnp.ndarray, ctx: Optional[jnp.ndarray],
+                caches: Optional[dict], remat: bool = False):
+    """``caches``: {"prefix": [...], "blocks": [...]} or None."""
+    pattern = cfg.pattern()
+
+    # --- unrolled prefix (first_k_dense layers) -----------------------------
+    new_prefix = []
+    for j, (mk, fk) in enumerate(cfg.prefix_pattern()):
+        body = functools.partial(_layer_fwd, cfg, mk, fk)
+        if remat:
+            body = jax.checkpoint(body)
+        c_in = caches["prefix"][j] if caches is not None else None
+        x, c = body(params["prefix"][j], x, positions, ctx, c_in)
+        new_prefix.append(c)
+
+    def period(x, inputs):
+        ps, cs = inputs
+        outs = []
+        x = _constrain(x)
+        for j, (mk, fk) in enumerate(pattern):
+            body = functools.partial(_layer_fwd, cfg, mk, fk)
+            if remat:
+                body = jax.checkpoint(body)
+            x, c = body(ps[j], x, positions, ctx,
+                        None if cs is None else cs[j])
+            outs.append(c)
+        return _constrain(x), (tuple(outs) if cs is not None else None)
+
+    cs_in = tuple(caches["blocks"]) if caches is not None else None
+    u = min(_BLOCKS_UNROLL[0], cfg.n_repeats) if _COST_MODE[0] else 1
+    x, cs_out = jax.lax.scan(period, x, (tuple(params["blocks"]), cs_in),
+                             unroll=u)
+    if caches is None:
+        return x, None
+    return x, {"prefix": new_prefix, "blocks": list(cs_out)}
+
+
+def _backbone(cfg: ModelConfig, params: L.Params, tokens: jnp.ndarray,
+              ctx: Optional[jnp.ndarray] = None, remat: bool = False) -> jnp.ndarray:
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(_DTYPE)
+    if ctx is not None:
+        ctx = ctx.astype(_DTYPE)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x, _ = _run_blocks(cfg, params, x, positions, ctx, None, remat=remat)
+    return L.norm(params["final_norm"], x, cfg.norm)
+
+
+def _mask_pad_logits(cfg: ModelConfig, logits: jnp.ndarray) -> jnp.ndarray:
+    if cfg.vocab_padded == cfg.vocab:
+        return logits
+    col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(col < cfg.vocab, logits, jnp.asarray(-1e30, logits.dtype))
+
+
+def forward(cfg: ModelConfig, params: L.Params, tokens: jnp.ndarray,
+            ctx: Optional[jnp.ndarray] = None, remat: bool = False) -> jnp.ndarray:
+    """Training / prefill forward.  ``ctx``: frontend or encoder context
+    (B, S_ctx, d_model) for vlm cross-attention and enc-dec."""
+    x = _backbone(cfg, params, tokens, ctx, remat)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]["w"]
+    return _mask_pad_logits(cfg, x @ head)
+
+
+_CE_CHUNK = 4096  # token rows per chunked-CE step
+
+
+def _chunked_ce(cfg: ModelConfig, x: jnp.ndarray, head: jnp.ndarray,
+                labels: jnp.ndarray) -> jnp.ndarray:
+    """Cross-entropy without materializing (B,S,V) logits: scan over token
+    chunks so the live logits slab is (chunk, V) — mandatory for the 200k-
+    vocab llama4 train shape.  Pad vocab columns are masked out."""
+    B, S, D = x.shape
+    rows = B * S
+    xf = x.reshape(rows, D)
+    lf = labels.reshape(rows)
+    chunk = min(_CE_CHUNK, rows)
+    if rows % chunk:
+        chunk = rows  # fall back for tiny odd shapes
+    nb = rows // chunk
+
+    @jax.checkpoint
+    def blk(acc, inp):
+        xi, li = inp
+        logits = _mask_pad_logits(cfg, (xi @ head).astype(jnp.float32))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[:, None], axis=-1)[:, 0]
+        return acc + jnp.sum(logz - gold), None
+
+    acc, _ = jax.lax.scan(
+        blk, jnp.zeros((), jnp.float32),
+        (xf.reshape(nb, chunk, D), lf.reshape(nb, chunk)),
+        unroll=_unroll(min(nb, 16)))
+    return acc / rows
+
+
+def loss_fn(cfg: ModelConfig, params: L.Params, batch: Dict[str, jnp.ndarray],
+            remat: bool = True) -> jnp.ndarray:
+    """Next-token cross-entropy.  batch: tokens (B,S), labels (B,S),
+    optional frames/vision ctx."""
+    ctx = None
+    if cfg.encoder_layers:
+        ctx = encode(cfg, params, batch["frames"].astype(_DTYPE))
+    elif cfg.frontend == "vision":
+        ctx = batch["vision_embeds"].astype(_DTYPE)
+    x = _backbone(cfg, params, batch["tokens"], ctx, remat=remat)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]["w"]
+    return _chunked_ce(cfg, x, head, batch["labels"])
+
+
+# =============================================================================
+# decode (serve_step)
+# =============================================================================
+
+def _init_layer_cache(cfg: ModelConfig, mixer: str, B: int, T: int):
+    if mixer == "mamba":
+        return {"conv": jnp.zeros((B, cfg.ssm_conv_width, cfg.d_inner + 2 * cfg.ssm_state), _DTYPE),
+                "ssm": jnp.zeros((B, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)}
+    if mixer == "cross_attn":
+        return None
+    if cfg.mla:
+        return {"ckv": jnp.zeros((B, T, cfg.kv_lora_rank), _DTYPE),
+                "kr": jnp.zeros((B, T, cfg.qk_rope_dim), _DTYPE),
+                "len": jnp.zeros((B,), jnp.int32)}
+    hd = cfg.head_dim
+    return {"k": jnp.zeros((B, T, cfg.n_kv_heads, hd), _DTYPE),
+            "v": jnp.zeros((B, T, cfg.n_kv_heads, hd), _DTYPE),
+            "len": jnp.zeros((B,), jnp.int32)}
+
+
+def init_cache(cfg: ModelConfig, B: int, max_len: int) -> dict:
+    """{"prefix": per-layer caches, "blocks": per-pattern-position caches
+    stacked over n_repeats}."""
+    blocks = []
+    for mk, fk in cfg.pattern():
+        one = _init_layer_cache(cfg, mk, B, max_len)
+        blocks.append(None if one is None else jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_repeats,) + a.shape).copy(), one))
+    prefix = [_init_layer_cache(cfg, mk, B, max_len)
+              for mk, fk in cfg.prefix_pattern()]
+    return {"prefix": prefix, "blocks": blocks}
+
+
+def decode_step(cfg: ModelConfig, params: L.Params, tokens: jnp.ndarray,
+                pos: jnp.ndarray, caches: dict,
+                ctx: Optional[jnp.ndarray] = None):
+    """One-token decode against the KV/SSM cache.  tokens: (B, 1);
+    pos: (B,) absolute positions.  Returns (logits, new_caches)."""
+    B = tokens.shape[0]
+    x = params["embed"][tokens].astype(_DTYPE)
+    if ctx is not None:
+        ctx = ctx.astype(_DTYPE)
+    positions = pos[:, None]
+    x, new_caches = _run_blocks(cfg, params, x, positions, ctx, caches)
+    x = L.norm(params["final_norm"], x, cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]["w"]
+    return _mask_pad_logits(cfg, x @ head), new_caches

@@ -1,0 +1,9 @@
+"""Optimizer substrate: AdamW (fp32 or int8-quantized moments), gradient
+clipping, warmup-cosine schedules, int8 gradient compression with error
+feedback for the DP all-reduce."""
+from .adamw import AdamWConfig, init_opt_state, apply_updates
+from .schedule import warmup_cosine
+from .compression import compress_int8, decompress_int8
+
+__all__ = ["AdamWConfig", "init_opt_state", "apply_updates", "warmup_cosine",
+           "compress_int8", "decompress_int8"]

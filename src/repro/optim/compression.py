@@ -1,0 +1,46 @@
+"""Int8 gradient compression with error feedback for the data-parallel
+all-reduce (distributed-optimization trick, DESIGN.md §6).
+
+The DP gradient all-reduce moves 2 bytes/param/step in bf16; quantizing to
+int8 with a per-tensor scale halves cross-pod ICI traffic.  Error feedback
+accumulates the quantization residual locally so the compression is
+unbiased over time (Karimireddy et al.-style EF-SGD).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_int8", "decompress_int8", "ef_compress_tree"]
+
+
+def compress_int8(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    return jnp.round(g / scale).astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_tree(grads, error_state):
+    """Compress a gradient pytree with error feedback.
+
+    Returns (compressed_tree_of_(q, scale), new_error_state).  The caller
+    all-reduces the int8 payload and decompresses after the collective."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = compress_int8(corrected)
+        new_e = corrected - decompress_int8(q, s)
+        return (q, s), new_e
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(error_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return tdef.unflatten([o[0] for o in out]), tdef.unflatten([o[1] for o in out])
+
+
+def init_error_state(grads_like):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)

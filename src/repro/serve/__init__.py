@@ -1,0 +1,5 @@
+"""Serving substrate: prefill/decode steps, KV-cache engine, batched
+request scheduling."""
+from .step import make_prefill_step, make_decode_step
+
+__all__ = ["make_prefill_step", "make_decode_step"]

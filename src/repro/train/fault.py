@@ -1,0 +1,82 @@
+"""Fault injection and elastic re-meshing.
+
+``FaultInjector`` deterministically raises simulated device failures at
+chosen steps (tests + the fault-tolerance example).  ``ElasticMesh``
+rebuilds the (data, model) mesh over the currently-healthy device set and
+re-shards live train state onto it — the single-process analogue of the
+coordinator-led re-mesh a 1000-node deployment performs when a host drops,
+with the same state-movement semantics (gather to host, re-place).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Optional, Sequence, Set
+
+import jax
+import numpy as np
+
+from ..launch.mesh import make_mesh_for_devices
+
+__all__ = ["SimulatedDeviceFailure", "FaultInjector", "ElasticMesh"]
+
+
+class SimulatedDeviceFailure(RuntimeError):
+    def __init__(self, step: int, device_id: int):
+        super().__init__(f"simulated failure of device {device_id} at step {step}")
+        self.step = step
+        self.device_id = device_id
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Raise a SimulatedDeviceFailure at each step in ``fail_at``."""
+
+    fail_at: Set[int] = dataclasses.field(default_factory=set)
+    failed_devices: List[int] = dataclasses.field(default_factory=list)
+
+    def check(self, step: int) -> None:
+        if step in self.fail_at:
+            self.fail_at.discard(step)
+            dev = len(self.failed_devices)
+            self.failed_devices.append(dev)
+            raise SimulatedDeviceFailure(step, dev)
+
+
+class ElasticMesh:
+    """Tracks the healthy device count and rebuilds the mesh after faults.
+
+    On this container there is one real device, so 'healthy count' is
+    logical: the mesh shrinks its data axis, and the pipeline re-shards via
+    ``SyntheticTokenPipeline.reshard`` — batches stay bit-identical because
+    the stream is counter-mode keyed by (seed, step, shard)."""
+
+    def __init__(self, model_parallel: int = 1,
+                 devices: Optional[Sequence] = None):
+        self.model_parallel = model_parallel
+        self.all_devices = list(devices or jax.devices())
+        self.healthy = list(range(len(self.all_devices)))
+
+    def fail(self, device_id: int) -> None:
+        if device_id in self.healthy:
+            self.healthy.remove(device_id)
+        if not self.healthy:
+            raise RuntimeError("no healthy devices left")
+
+    @property
+    def n_data(self) -> int:
+        n = len(self.healthy) // self.model_parallel
+        if n == 0:
+            raise RuntimeError("not enough healthy devices for model_parallel")
+        return n
+
+    def mesh(self):
+        usable = self.n_data * self.model_parallel
+        return make_mesh_for_devices(usable, self.model_parallel)
+
+    def reshard_state(self, state, mesh, specs):
+        """Move live state onto the rebuilt mesh (gather -> re-place)."""
+        host = jax.tree.map(lambda x: np.asarray(x), state)
+        shardings = jax.tree.map(
+            lambda s: jax.sharding.NamedSharding(mesh, s), specs,
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+        return jax.device_put(host, shardings)

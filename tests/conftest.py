@@ -1,0 +1,10 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches see
+1 CPU device; only launch/dryrun.py forces the 512-device host platform.
+"""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

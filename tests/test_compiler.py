@@ -1,0 +1,98 @@
+"""Compiler passes: precision policy, fusion patterns, mapping rules."""
+import pytest
+
+from repro.core import (compile_workload, hetero_bls, homogeneous_baseline,
+                        simulate)
+from repro.core.arch import ChipConfig, TileTemplate, special_tile, SFU_FFT
+from repro.core.compiler.fusion import fuse
+from repro.core.compiler.mapper import UnmappableError, map_graph
+from repro.core.compiler.precision import assign_precision
+from repro.core.ir import OpNode, OpType, Precision, WorkloadGraph
+from repro.core.workloads import build
+
+
+def _toy(prec=Precision.INT8):
+    g = WorkloadGraph("toy", model_precision=prec)
+    a = g.matmul("conv", 128, 64, 64)
+    b = g.dsp("relu", OpType.RELU, elems=128 * 64, preds=[a])
+    c = g.matmul("lm_head", 1, 64, 1000, preds=[b])
+    g.dsp("softmax", OpType.SOFTMAX, elems=1000, preds=[c])
+    return g
+
+
+def test_precision_default_policy_int8_model():
+    g = assign_precision(_toy(Precision.INT8))
+    assert g.nodes[0].precision == Precision.INT8          # conv -> INT8
+    assert g.nodes[2].precision == Precision.FP16          # lm_head: sensitive
+    assert g.nodes[3].precision == Precision.FP16          # softmax >= FP16
+
+
+def test_precision_fp16_model_not_quantized():
+    g = assign_precision(_toy(Precision.FP16))
+    assert g.nodes[0].precision == Precision.FP16
+
+
+def test_precision_aggressive_int4():
+    g = assign_precision(_toy(Precision.INT8), aggressive_int4=True)
+    assert g.nodes[0].precision == Precision.INT4
+    assert g.nodes[2].precision == Precision.FP16          # override wins
+
+
+def test_fusion_folds_single_consumer_posts():
+    g = _toy()
+    fuse(g)
+    assert g.nodes[1].fused_into == 0
+    assert g.nodes[0].fused_count == 1
+    # softmax is NOT a PPM fusion pattern (paper §3.2 lists BN/Add/Act)
+    assert g.nodes[3].fused_into == -1
+
+
+def test_fusion_respects_multiple_consumers():
+    g = WorkloadGraph("t")
+    a = g.matmul("mm", 8, 8, 8)
+    r = g.dsp("relu", OpType.RELU, elems=64, preds=[a])
+    g.dsp("c1", OpType.ADD, elems=64, preds=[r])
+    g.dsp("c2", OpType.ADD, elems=64, preds=[r])
+    fuse(g)
+    assert g.nodes[1].fused_into == 0   # relu fuses into mm (1 consumer)
+    assert g.nodes[2].fused_into == -1  # adds have branching dependency
+
+
+def test_mapper_routes_fft_to_special_function_tile():
+    g = WorkloadGraph("t", model_precision=Precision.FP16)
+    g.add(OpNode("fft", OpType.FFT, elems=4096, fft_n=512,
+                 precision=Precision.FP16))
+    chip = hetero_bls()
+    plan = compile_workload(g, chip)
+    sfu_idx = [i for i, t in enumerate(chip.instances()) if t.sfu_mask]
+    assert plan.placements[0].tiles[0] in sfu_idx
+
+
+def test_mapper_raises_on_unmappable():
+    # a chip with no DSP anywhere cannot run vector ops
+    t = TileTemplate(name="macsonly", rows=8, cols=8, dsp_count=0,
+                     precisions=frozenset({Precision.INT8}))
+    chip = ChipConfig(name="x", tiles=((t, 2),))
+    g = WorkloadGraph("t")
+    g.dsp("softmax", OpType.SOFTMAX, elems=100)
+    with pytest.raises(UnmappableError):
+        map_graph(g, chip)
+
+
+def test_split_only_when_it_helps():
+    # big matmul on a 2-big-tile chip should split; tiny one should not
+    g = WorkloadGraph("t", model_precision=Precision.INT8)
+    g.matmul("big", 4096, 4096, 4096)
+    g.matmul("tiny", 8, 8, 8)
+    chip = homogeneous_baseline(4)
+    plan = compile_workload(g, chip)
+    assert len(plan.placements[0].tiles) > 1
+    assert len(plan.placements[1].tiles) == 1
+
+
+def test_schedule_covers_all_unfused_ops():
+    g = build("resnet50_int8")
+    plan = compile_workload(g, homogeneous_baseline(4))
+    for i, nd in enumerate(plan.graph.nodes):
+        if nd.fused_into < 0:
+            assert i in plan.placements

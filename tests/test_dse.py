@@ -1,0 +1,84 @@
+"""DSE engine: encoding, stratified sampling, sweep, GA, Bayes, Pareto."""
+import numpy as np
+import pytest
+
+from repro.core.dse.encoding import (FAMILIES, GENOME_LEN, decode,
+                                     genome_bounds, random_genomes,
+                                     sample_in_bracket)
+from repro.core.dse.ga import GAConfig, run_ga
+from repro.core.dse.objective import AREA_BRACKETS, area_bracket, fitness
+from repro.core.dse.pareto import pareto_front, pareto_mask
+from repro.core.dse.sweep import run_sweep
+from repro.core.ir import Precision
+from repro.core.simulator.area import chip_area
+
+WLS = ["resnet50_int8", "kan", "spec_decode"]
+
+
+def test_genome_decode_valid_chips(rng):
+    for g in random_genomes(rng, 64):
+        chip = decode(g)
+        assert 1 <= len(chip.tiles) <= 3
+        assert chip.num_tiles >= 1
+
+
+def test_family_constraints(rng):
+    homo = decode(random_genomes(rng, 1, family="homo")[0])
+    assert len(homo.tiles) == 1
+    t = homo.tiles[0][0]
+    assert t.precisions == frozenset({Precision.INT8, Precision.FP16})
+    assert t.sfu_mask == 0
+    bls = decode(random_genomes(rng, 1, family="hetero_bls")[0])
+    assert len(bls.tiles) == 3
+    assert bls.tiles[2][0].sfu_mask > 0
+    assert bls.tiles[2][0].is_special
+
+
+def test_bracket_sampling(rng):
+    def area_fn(g):
+        return chip_area(decode(g))
+
+    for b in (100.0, 200.0):
+        gs = sample_in_bracket(rng, 8, "hetero_bl", b, area_fn)
+        areas = [area_fn(g) for g in gs]
+        assert all(a <= b for a in areas)
+        assert np.mean([b / 2 < a <= b for a in areas]) >= 0.5
+
+
+def test_area_bracket_assignment():
+    assert area_bracket(30) == 50.0
+    assert area_bracket(199) == 200.0
+    assert area_bracket(1000) == 800.0
+
+
+def test_pareto_properties(rng):
+    pts = rng.random((64, 3))
+    mask = pareto_mask(pts)
+    assert mask.any()
+    front = pts[mask]
+    # no front point dominates another
+    for i in range(len(front)):
+        for j in range(len(front)):
+            if i != j:
+                assert not (np.all(front[i] <= front[j])
+                            and np.any(front[i] < front[j]))
+    # every dominated point is dominated by some front point
+    dominated = pts[~mask]
+    for d in dominated:
+        assert np.any(np.all(front <= d, axis=1) & np.any(front < d, axis=1))
+
+
+@pytest.mark.slow
+def test_sweep_and_ga_smoke():
+    sw = run_sweep(WLS, samples_per_stratum=8, seed=0,
+                   brackets=(100.0, 200.0))
+    assert sw.genomes.shape[0] == 8 * 2 * 3
+    fit = sw.fitness()
+    assert np.isfinite(fit).sum() > len(fit) * 0.5
+    base = sw.homo_baseline()
+    assert 200.0 in base
+    ga = run_ga(sw, 200.0, GAConfig(population=12, generations=2,
+                                    seed_top_k=8, early_stop=2))
+    assert ga is not None
+    assert np.isfinite(ga.best_fitness)
+    assert ga.evaluated >= 24

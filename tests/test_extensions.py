@@ -1,0 +1,92 @@
+"""Coverage for the extension layers: Bayesian DSE backend, TPU-mesh DSE,
+ring collective-matmul (subprocess: needs >1 device), serve engine,
+workload extraction."""
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.tpu_dse import MeshKnobs, predict_cost, search_mesh
+from repro.models import get_config
+
+
+@pytest.mark.slow
+def test_bayes_backend_improves():
+    from repro.core.dse.bayes import BayesConfig, run_bayes
+
+    def objective(metrics):
+        # minimize mean energy at fixed-ish area: maximize -E/area
+        e = metrics["energy"].mean(axis=1)
+        return -np.log(np.maximum(e, 1e-9))
+
+    out = run_bayes(["kan", "resnet50_int8"], objective,
+                    BayesConfig(init_samples=16, rounds=2, batch_per_round=8,
+                                candidate_pool=256), seed=0)
+    assert np.isfinite(out["best_score"])
+    assert out["history"][-1] >= out["history"][0]
+
+
+def test_tpu_dse_prefers_fitting_configs():
+    cfg = get_config("granite-20b")
+    ranked = search_mesh(cfg, chips=256, global_batch=256, seq_len=4096)
+    assert ranked, "no mesh candidates"
+    fits = [c for c in ranked if c.fits]
+    assert fits, "nothing fits 16GiB HBM"
+    assert ranked[0].fits
+    # microbatching cuts live activation memory (FSDP shards the state
+    # over BOTH mesh axes, so hbm is microbatch- not tp-sensitive)
+    c1 = predict_cost(cfg, MeshKnobs(dp=128, tp=2, microbatches=1), 256, 4096)
+    c4 = predict_cost(cfg, MeshKnobs(dp=128, tp=2, microbatches=4), 256, 4096)
+    assert c4.hbm_gib < c1.hbm_gib
+
+
+def test_tpu_dse_collective_term_grows_with_tp():
+    cfg = get_config("starcoder2-15b")
+    lo = predict_cost(cfg, MeshKnobs(dp=128, tp=2), 256, 4096)
+    hi = predict_cost(cfg, MeshKnobs(dp=16, tp=16), 256, 4096)
+    assert hi.collective_s > lo.collective_s
+
+
+@pytest.mark.slow
+def test_ring_allgather_matmul_subprocess():
+    """Runs under 8 forced host devices in a fresh process."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.distributed.overlap import ring_allgather_matmul
+mesh = jax.make_mesh((8,), ("model",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+x = jnp.asarray(np.random.default_rng(0).normal(size=(64, 32)), jnp.float32)
+w = jnp.asarray(np.random.default_rng(1).normal(size=(32, 48)), jnp.float32)
+with mesh:
+    y = ring_allgather_matmul(x, w, mesh)
+assert float(jnp.abs(y - x @ w).max()) < 1e-4
+print("OK")
+"""
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=240,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              "HOME": "/root"})
+    assert "OK" in out.stdout, out.stderr[-2000:]
+
+
+@pytest.mark.slow
+def test_serve_engine_continuous_batching():
+    import jax
+    from repro.models import init_params
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = get_config("starcoder2-15b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=64)
+    rng = np.random.default_rng(0)
+    for rid in range(5):
+        eng.submit(Request(rid, rng.integers(0, cfg.vocab, 6, dtype=np.int32),
+                           max_new_tokens=4))
+    results = eng.run()
+    assert set(results) == set(range(5))
+    for toks in results.values():
+        assert len(toks) == 4
+        assert all(0 <= t < cfg.vocab for t in toks)

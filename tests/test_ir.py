@@ -1,0 +1,69 @@
+"""IR invariants: the 23-op vocabulary, DAG validation, SoA conversion."""
+import numpy as np
+import pytest
+
+from repro.core.ir import (MAX_PREDS, OpClass, OpNode, OpTensor, OpType,
+                           Precision, WorkloadGraph, op_class, slice_op)
+
+
+def test_vocabulary_is_23_ops_5_15_3():
+    ops = list(OpType)
+    assert len(ops) == 23
+    counts = {OpClass.MAC: 0, OpClass.DSP: 0, OpClass.SPECIAL: 0}
+    for t in ops:
+        counts[op_class(t)] += 1
+    assert counts[OpClass.MAC] == 5
+    assert counts[OpClass.DSP] == 15
+    assert counts[OpClass.SPECIAL] == 3
+
+
+def test_graph_rejects_non_topological_preds():
+    g = WorkloadGraph("t")
+    g.matmul("a", 4, 4, 4)
+    with pytest.raises(ValueError):
+        g.add(OpNode("b", OpType.ADD, elems=4), preds=[5])
+
+
+def test_finalize_fills_bytes_from_dims():
+    n = OpNode("m", OpType.MATMUL, m=8, k=16, n=32,
+               precision=Precision.INT8).finalize()
+    assert n.bytes_in == 8 * 16
+    assert n.bytes_w == 16 * 32
+    assert n.bytes_out == 8 * 32
+    assert n.macs == 8 * 16 * 32
+
+
+def test_arithmetic_intensity_and_histogram():
+    g = WorkloadGraph("t", model_precision=Precision.INT8)
+    a = g.matmul("mm", 64, 64, 64)
+    g.dsp("relu", OpType.RELU, elems=64 * 64, preds=[a])
+    ai = g.arithmetic_intensity()
+    assert ai > 0
+    h = g.class_histogram()
+    assert h == {"MAC": 1, "DSP": 1, "SPECIAL": 0}
+
+
+def test_optensor_roundtrip_and_padding():
+    g = WorkloadGraph("t")
+    a = g.matmul("mm", 8, 8, 8)
+    b = g.dsp("sm", OpType.SOFTMAX, elems=64, preds=[a])
+    t = g.to_tensor(max_ops=10)
+    assert t.num_ops == 2
+    assert t.max_ops == 10
+    assert t.arrays["valid"][:2].sum() == 2
+    assert t.arrays["valid"][2:].sum() == 0
+    assert t.preds[1, 0] == 0
+    assert (t.preds[0] == -1).all()
+
+
+def test_slice_op_axes():
+    n = OpNode("m", OpType.MATMUL, m=8, k=16, n=32).finalize()
+    oc = slice_op(n, "OC", 4)
+    assert (oc.m, oc.k, oc.n) == (8, 16, 8)
+    b = slice_op(n, "B", 4)
+    assert (b.m, b.k, b.n) == (2, 16, 32)
+    ic = slice_op(n, "IC", 4)
+    assert (ic.m, ic.k, ic.n) == (8, 4, 32)
+    # bytes: OC split shares inputs, splits weights+outputs
+    assert oc.bytes_in == n.bytes_in
+    assert oc.bytes_w == n.bytes_w // 4

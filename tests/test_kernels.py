@@ -1,0 +1,109 @@
+"""Pallas kernels vs ref.py oracles: shape/dtype sweeps, interpret=True."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as R
+from repro.kernels.dse_eval import dse_eval_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.horner import horner_pallas
+from repro.kernels.ssm_scan import ssm_scan_pallas
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", [(1, 1, 128, 64), (2, 3, 256, 64),
+                                   (1, 2, 512, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(rng, shape, dtype, causal):
+    B, H, S, D = shape
+    q = jnp.asarray(rng.normal(size=shape), dtype)
+    k = jnp.asarray(rng.normal(size=shape), dtype)
+    v = jnp.asarray(rng.normal(size=shape), dtype)
+    out = flash_attention_pallas(q, k, v, causal=causal, interpret=True)
+    ref = R.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_cross_lengths(rng):
+    q = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    out = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+    ref = R.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", [(1, 64, 2, 16, 8), (2, 128, 3, 32, 16),
+                                   (1, 256, 4, 64, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssm_scan(rng, shape, dtype):
+    B, S, H, P, N = shape
+    x = jnp.asarray(rng.normal(size=(B, S, H, P)), dtype)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(B, S, H)), jnp.float32)
+    al = jnp.asarray(rng.uniform(-1, 1, size=(H,)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(B, S, N)), dtype)
+    c = jnp.asarray(rng.normal(size=(B, S, N)), dtype)
+    out = ssm_scan_pallas(x, dt, al, b, c, chunk=32, interpret=True)
+    ref = R.ssm_scan_ref(x, dt, al, b, c, chunk=32)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=5e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+def test_ssm_scan_chunk_invariance(rng):
+    """Different chunk sizes must give the same answer (state handoff)."""
+    B, S, H, P, N = 1, 128, 2, 16, 8
+    x = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(B, S, H)), jnp.float32)
+    al = jnp.asarray(rng.uniform(-1, 1, size=(H,)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+    o32 = ssm_scan_pallas(x, dt, al, b, c, chunk=32, interpret=True)
+    o64 = ssm_scan_pallas(x, dt, al, b, c, chunk=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(o32), np.asarray(o64),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [64, 1000, 8192])
+@pytest.mark.parametrize("degree", [1, 3, 8])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_horner(rng, n, degree, dtype):
+    x = jnp.asarray(rng.normal(size=(n,)), dtype)
+    cf = jnp.asarray(rng.normal(size=(degree + 1,)), jnp.float32)
+    out = horner_pallas(x, cf, interpret=True)
+    ref = R.horner_ref(x, cf)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+    assert out.shape == (n,)
+
+
+@pytest.mark.parametrize("B,T,N", [(8, 8, 128), (16, 24, 256)])
+def test_dse_eval(rng, B, T, N):
+    tiles = rng.uniform(0.5, 2.0, size=(B, T, R.TILE_FIELDS)).astype(np.float32)
+    tiles[..., 0] = (rng.random((B, T)) > 0.3)
+    tiles[..., 1] = rng.integers(0, 4096, (B, T))
+    tiles[..., 2] = 128.0
+    tiles[..., 3] = 1e9
+    tiles[..., 9] = 4e9
+    ops = np.stack([
+        rng.integers(0, 3, N), rng.integers(0, 10**6, N),
+        rng.integers(1, 10**5, N), rng.integers(1, 10**6, N),
+        np.ones(N), 2.0 ** rng.integers(0, 3, N), np.full(N, 512.0)],
+        axis=1).astype(np.float32)
+    out = np.asarray(dse_eval_pallas(jnp.asarray(tiles), jnp.asarray(ops),
+                                     interpret=True))
+    ref = np.asarray(R.dse_eval_ref(jnp.asarray(tiles), jnp.asarray(ops)))
+    fin = np.isfinite(ref[..., 0])
+    np.testing.assert_allclose(out[..., 0][fin], ref[..., 0][fin],
+                               rtol=1e-5)
+    np.testing.assert_allclose(out[..., 1], ref[..., 1], rtol=1e-4, atol=1.0)
+    assert (np.isfinite(out[..., 0]) == fin).all()

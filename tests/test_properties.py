@@ -1,0 +1,87 @@
+"""Hypothesis property tests on system invariants."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.calibrate.asap7 import DEFAULT_CALIB
+from repro.core.dse.pareto import pareto_mask
+from repro.core.ir import OpNode, OpType, Precision, WorkloadGraph
+from repro.core.simulator.tile import TileSim
+from repro.core.arch import Sparsity, TileTemplate
+from repro.kernels.ref import horner_ref
+from repro.optim.schedule import warmup_cosine
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+@given(st.floats(0, 0.95), st.floats(0, 0.95),
+       st.sampled_from(list(Sparsity)))
+@settings(**SETTINGS)
+def test_eta_bounds(act, w, mode):
+    e = DEFAULT_CALIB.eta(int(mode), act, w)
+    assert 1.0 <= e <= DEFAULT_CALIB.eta_cap
+
+
+@given(st.integers(1, 512), st.integers(1, 512), st.integers(1, 512),
+       st.sampled_from([Precision.INT8, Precision.FP16]))
+@settings(**SETTINGS)
+def test_execute_costs_positive_and_monotone_in_macs(m, k, n, prec):
+    tile = TileSim(TileTemplate(name="t"))
+    op = OpNode("mm", OpType.MATMUL, m=m, k=k, n=n, precision=prec).finalize()
+    ex = tile.execute(op, 64.0, op.bytes_in + op.bytes_w, op.bytes_out)
+    assert ex.cycles > 0 and ex.energy.total_pj > 0
+    op2 = OpNode("mm2", OpType.MATMUL, m=m, k=k, n=2 * n,
+                 precision=prec).finalize()
+    ex2 = tile.execute(op2, 64.0, op2.bytes_in + op2.bytes_w, op2.bytes_out)
+    assert ex2.energy.compute >= ex.energy.compute
+
+
+@given(st.lists(st.lists(st.floats(0.0, 10.0), min_size=3, max_size=3),
+                min_size=1, max_size=40))
+@settings(**SETTINGS)
+def test_pareto_mask_keeps_minima(points):
+    pts = np.asarray(points)
+    mask = pareto_mask(pts)
+    assert mask.any()
+    # per-axis minima are always non-dominated (first occurrence)
+    for ax in range(3):
+        i = int(np.argmin(pts[:, ax]))
+        dominated = np.any(
+            np.all(pts <= pts[i], axis=1) & np.any(pts < pts[i], axis=1))
+        if not dominated:
+            assert mask[i]
+
+
+@given(st.integers(1, 64), st.integers(0, 8))
+@settings(**SETTINGS)
+def test_horner_ref_matches_numpy_polyval(n, degree):
+    rng = np.random.default_rng(n * 31 + degree)
+    x = rng.normal(size=n).astype(np.float32)
+    cf = rng.normal(size=degree + 1).astype(np.float32)
+    ours = np.asarray(horner_ref(jnp.asarray(x), jnp.asarray(cf)))
+    ref = np.polyval(cf[::-1], x)
+    np.testing.assert_allclose(ours, ref, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 20000))
+@settings(**SETTINGS)
+def test_schedule_bounded(step):
+    s = float(warmup_cosine(step, warmup=200, total=10000))
+    assert 0.0 <= s <= 1.0
+
+
+@given(st.integers(1, 6), st.integers(2, 32))
+@settings(**SETTINGS)
+def test_workload_graph_ai_scales_with_reuse(layers, dim):
+    """Adding MAC layers with the same operands raises total MACs
+    monotonically; AI stays finite and positive."""
+    g = WorkloadGraph("t", model_precision=Precision.INT8)
+    prev = None
+    for i in range(layers):
+        prev = g.matmul(f"mm{i}", dim, dim, dim,
+                        preds=[prev] if prev is not None else ())
+    assert g.total_macs == layers * dim ** 3
+    assert g.arithmetic_intensity() > 0

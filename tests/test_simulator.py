@@ -1,0 +1,129 @@
+"""Simulator invariants: Eq. 4-7 behaviours, gating, orchestrator."""
+import math
+
+import pytest
+
+from repro.core import compile_workload, hetero_bls, homogeneous_baseline, simulate
+from repro.core.arch import (ChipConfig, Dataflow, Engine, Sparsity,
+                             TileTemplate, big_tile, little_tile, special_tile)
+from repro.core.calibrate.asap7 import DEFAULT_CALIB
+from repro.core.calibrate.nvdla import NVDLA_FULL, NVDLA_SMALL, nvdla_chip
+from repro.core.ir import OpNode, OpType, Precision, WorkloadGraph
+from repro.core.simulator.area import area_breakdown, chip_area, tile_area
+from repro.core.simulator.tile import TileSim
+
+
+def _mm(m=512, k=512, n=512, prec=Precision.INT8, **kw):
+    return OpNode("mm", OpType.MATMUL, m=m, k=k, n=n, precision=prec,
+                  **kw).finalize()
+
+
+def test_bigger_array_fewer_cycles():
+    small = TileSim(TileTemplate(name="s", rows=16, cols=16))
+    big = TileSim(TileTemplate(name="b", rows=64, cols=64))
+    op = _mm()
+    assert big.execute(op, 64, 1e6, 1e5).cycles \
+        < small.execute(op, 64, 1e6, 1e5).cycles
+
+
+def test_double_buffering_overlaps():
+    t_db = TileSim(TileTemplate(name="db", double_buffer=True))
+    t_nd = TileSim(TileTemplate(name="nd", double_buffer=False))
+    op = _mm()
+    assert t_db.execute(op, 64, 1e6, 1e5).cycles \
+        < t_nd.execute(op, 64, 1e6, 1e5).cycles
+
+
+def test_sparsity_speeds_up_and_saves_energy():
+    dense = TileSim(TileTemplate(name="d", sparsity=Sparsity.NONE))
+    sparse = TileSim(TileTemplate(name="s", sparsity=Sparsity.TWO_SIDED))
+    op = _mm(act_sparsity=0.5, w_sparsity=0.5)
+    ed = dense.execute(op, 64, 1e6, 1e5)
+    es = sparse.execute(op, 64, 1e6, 1e5)
+    assert es.energy.compute < ed.energy.compute
+    # compute-bound op gets faster too
+    assert es.cycles <= ed.cycles
+
+
+def test_precision_energy_ordering():
+    tile = TileSim(TileTemplate(
+        name="t", precisions=frozenset({Precision.INT4, Precision.INT8,
+                                        Precision.FP16})))
+    e4 = tile.execute(_mm(prec=Precision.INT4), 64, 1e6, 1e5).energy.compute
+    e8 = tile.execute(_mm(prec=Precision.INT8), 64, 1e6, 1e5).energy.compute
+    e16 = tile.execute(_mm(prec=Precision.FP16), 64, 1e6, 1e5).energy.compute
+    assert e4 < e8 < e16
+
+
+def test_datapath_residual_charges_narrow_on_wide():
+    wide = TileSim(TileTemplate(name="w", precisions=frozenset(
+        {Precision.INT8, Precision.FP16})))
+    narrow = TileSim(TileTemplate(name="n", precisions=frozenset(
+        {Precision.INT8})))
+    op = _mm(prec=Precision.INT8)
+    assert wide.execute(op, 64, 1e6, 1e5).energy.compute \
+        > narrow.execute(op, 64, 1e6, 1e5).energy.compute
+
+
+def test_sfu_native_beats_lowering_on_energy():
+    sfu = TileSim(special_tile())
+    mac = TileSim(big_tile())
+    fft = OpNode("fft", OpType.FFT, elems=8192, fft_n=512,
+                 precision=Precision.FP16).finalize()
+    e_sfu = sfu.execute(fft, 64, 1e5, 1e5).energy
+    e_mac = mac.execute(fft, 64, 1e5, 1e5).energy
+    assert e_sfu.special + e_sfu.dsp < (e_mac.compute) / 10  # ~100x asymptotic
+
+
+def test_area_model_eq7_max_precision():
+    t8 = TileTemplate(name="a", precisions=frozenset({Precision.INT8}))
+    t16 = TileTemplate(name="b", precisions=frozenset({Precision.INT8,
+                                                       Precision.FP16}))
+    assert tile_area(t16) > tile_area(t8)
+    bd = area_breakdown(t16)
+    assert set(bd) == {"mac", "sram", "dsp", "special", "ports"}
+    assert bd["special"] == 0.0
+
+
+def test_nvdla_peak_tops_by_construction():
+    for pt in (NVDLA_SMALL, NVDLA_FULL):
+        chip = nvdla_chip(pt)
+        tile = chip.instances()[0]
+        tops = tile.num_macs * tile.clock_mhz * 1e6 / 1e12
+        assert tops == pytest.approx(pt.peak_tops, rel=1e-6)
+
+
+def test_power_gating_residual():
+    # a chip where one tile type never runs anything leaks at 5 %
+    g = WorkloadGraph("t", model_precision=Precision.INT8)
+    g.matmul("mm", 64, 64, 64)
+    chip = hetero_bls()
+    r = simulate(chip, compile_workload(g, chip))
+    gated = [b for b in r.tiles if b.power_gated]
+    active = [b for b in r.tiles if not b.power_gated]
+    assert gated and active
+    for b in gated:
+        tmpl = chip.instances()[b.tile_index]
+        full = DEFAULT_CALIB.leak_mw_per_mm2 * tile_area(tmpl) \
+            * r.latency_s * 1e9
+        assert b.energy.leakage == pytest.approx(full * 0.05, rel=1e-6)
+
+
+def test_makespan_at_least_per_tile_active():
+    from repro.core.workloads import build
+    g = build("vit_b16_fp16")
+    chip = homogeneous_baseline(4)
+    r = simulate(chip, compile_workload(g, chip))
+    for b in r.tiles:
+        assert b.active_s <= r.latency_s + 1e-12
+    assert r.energy_pj > 0 and r.area_mm2 > 0
+
+
+def test_chrome_trace_emits_events():
+    import json
+    from repro.core.workloads import build
+    g = build("kan")
+    chip = hetero_bls()
+    r = simulate(chip, compile_workload(g, chip))
+    trace = json.loads(r.chrome_trace())
+    assert len(trace["traceEvents"]) >= 5

@@ -1,0 +1,71 @@
+"""Workload suite (paper Table 1): 20 workloads, coverage criteria §4.1."""
+import numpy as np
+import pytest
+
+from repro.core.ir import OpClass, OpType, Precision
+from repro.core.workloads import build, suite, workload_names
+from repro.core.workloads.suite import GROUPS
+
+
+def test_suite_has_20_workloads():
+    assert len(workload_names()) == 20
+
+
+def test_all_build_and_validate():
+    for name, g in suite().items():
+        g.validate()
+        assert len(g.nodes) > 3
+
+
+def test_all_23_op_types_exercised():
+    seen = set()
+    for g in suite().values():
+        for nd in g.nodes:
+            seen.add(int(nd.op_type))
+    assert seen == set(range(23))
+
+
+def test_all_three_paths_stressed():
+    cls = {OpClass.MAC: 0, OpClass.DSP: 0, OpClass.SPECIAL: 0}
+    for g in suite().values():
+        for nd in g.nodes:
+            cls[nd.op_cls] += 1
+    assert all(v > 0 for v in cls.values())
+
+
+def test_arithmetic_intensity_spans_orders_of_magnitude():
+    ais = [g.arithmetic_intensity() for g in suite().values()
+           if g.total_macs > 0]
+    assert max(ais) / max(min(ais), 1e-9) > 50
+
+
+def test_spec_decode_is_bandwidth_bound():
+    ai = {name: g.arithmetic_intensity() for name, g in suite().items()
+          if g.total_macs > 0}
+    assert ai["spec_decode"] == min(ai.values())
+    assert ai["spec_decode"] < 5  # paper: 2.4
+
+
+def test_quantized_variants_ship_quantized():
+    assert build("llama7b_int4").model_precision == Precision.INT4
+    assert build("llama7b_int8").model_precision == Precision.INT8
+    assert build("mixtral_int4").model_precision == Precision.INT4
+
+
+def test_groups_partition_the_suite():
+    names = set(workload_names())
+    grouped = set(sum(GROUPS.values(), []))
+    assert grouped == names
+
+
+def test_non_mac_workloads_have_special_or_dominant_dsp():
+    for name in GROUPS["non_mac"]:
+        g = build(name)
+        h = g.class_histogram()
+        assert h["SPECIAL"] > 0 or h["DSP"] > h["MAC"], name
+
+
+def test_hyena_fft_share():
+    g = build("hyena_1_3b")
+    fft_elems = sum(nd.elems for nd in g.nodes if nd.op_type == OpType.FFT)
+    assert fft_elems > 0
