@@ -13,6 +13,7 @@ import argparse
 import numpy as np
 
 from repro.core.dse.encoding import decode
+from repro.core.dse.engine import EvalEngine
 from repro.core.dse.ga import GAConfig, run_ga
 from repro.core.dse.objective import AREA_BRACKETS
 from repro.core.dse.sweep import run_sweep
@@ -29,11 +30,14 @@ def run(samples_per_stratum: int = 40, ga_cfg: GAConfig = None,
     ga_cfg = ga_cfg or GAConfig(population=32, generations=10, seed_top_k=24,
                                 early_stop=5)
     wls = workload_names()
+    # one engine across the sweep and every bracket's GA: each GA's seed
+    # population (top-k sweep individuals) is already memoized
+    engine = EvalEngine(wls)
     sw = run_sweep(wls, samples_per_stratum=samples_per_stratum, seed=0,
-                   verbose=True)
+                   verbose=True, engine=engine)
     rows = []
     for bracket in AREA_BRACKETS:
-        res = run_ga(sw, bracket, ga_cfg, verbose=True)
+        res = run_ga(sw, bracket, ga_cfg, verbose=True, engine=engine)
         if res is None:
             continue
         chip = decode(res.best_genome)
@@ -51,7 +55,9 @@ def run(samples_per_stratum: int = 40, ga_cfg: GAConfig = None,
             "tops_per_w_mean": float(np.mean(res.best_metrics["tops_w"])),
             "tops_per_w_peak": float(np.max(res.best_metrics["tops_w"])),
         })
-    payload = {"rows": rows, "samples": samples_per_stratum}
+    payload = {"rows": rows, "samples": samples_per_stratum,
+               "cache_hit_rate": engine.stats.hit_rate(),
+               "evaluator_throughput_cfg_wl_per_s": engine.stats.throughput()}
     save_json("fig7_ga", payload)
     return payload
 

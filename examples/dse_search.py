@@ -9,6 +9,7 @@ import warnings
 import numpy as np
 
 from repro.core.dse.encoding import decode
+from repro.core.dse.engine import EvalEngine
 from repro.core.dse.ga import GAConfig, run_ga
 from repro.core.dse.pareto import pareto_front
 from repro.core.dse.sweep import run_sweep
@@ -24,9 +25,13 @@ def main():
         "kan", "spec_decode"])
     args = ap.parse_args()
 
+    # one cache-aware engine end to end: the GA re-scores sweep genomes
+    # (its seed population) and its own elites for free
+    engine = EvalEngine(args.workloads)
+
     print(f"[1/3] stratified sweep ({args.samples}/stratum x 15 strata)...")
     sw = run_sweep(args.workloads, samples_per_stratum=args.samples, seed=0,
-                   verbose=True)
+                   verbose=True, engine=engine)
     sav = sw.savings()
     best = np.nanmax(np.where((sw.family > 0)[:, None], sav, np.nan), axis=0)
     for w, s in zip(args.workloads, best):
@@ -35,7 +40,7 @@ def main():
     print(f"\n[2/3] GA refinement at {args.budget:.0f} mm^2 ...")
     ga = run_ga(sw, args.budget, GAConfig(population=24, generations=8,
                                           seed_top_k=16, early_stop=4),
-                verbose=True)
+                verbose=True, engine=engine)
     chip = decode(ga.best_genome)
     print(f"   winner: {len(chip.tiles)} tile types, "
           f"fitness {ga.best_fitness:+.3f}")
@@ -53,6 +58,11 @@ def main():
     for i in front[:5]:
         print(f"     E={pts[i,0]*1e-6:9.1f}uJ  A={pts[i,1]:6.1f}mm2  "
               f"L={pts[i,2]*1e3:8.2f}ms")
+
+    st = engine.stats
+    print(f"\nengine: {st.misses} simulated / {st.hits} cache hits / "
+          f"{st.skips} skipped ({st.hit_rate():.0%} hit rate, "
+          f"{st.throughput():,.0f} cfg*wl/s)")
 
 
 if __name__ == "__main__":

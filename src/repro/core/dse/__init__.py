@@ -1,11 +1,19 @@
 """Design-space exploration engine (paper §3.5, §4.5).
 
-Two-stage multi-seed pipeline over the 12-knob joint space:
+Two-stage multi-seed pipeline over the 12-knob joint space, with every
+search frontend scoring candidates through one cache-aware evaluation
+engine:
 
+* ``engine``    — the unified ``EvalEngine``: per-workload preparation
+                  cache, genome-level memoization (elites / duplicate
+                  children / cross-seed repeats are never re-simulated),
+                  vectorized genome→SoA config stacking (no per-genome
+                  Python objects in the hot loop; bitwise-parity with the
+                  reference ``decode`` path), and optional multi-device
+                  sharding of the candidate batch axis.
 * ``sweep``     — stratified random sampling (strata = area budget x
-                  architecture family), scored by the jitted batch
-                  evaluator, finalists re-scored by the reference
-                  simulator.
+                  architecture family), finalists re-scored by the
+                  reference simulator.
 * ``ga``        — per-area-budget genetic refinement seeded from the sweep
                   bests (population 200, tournament 5, 80 % crossover,
                   20 % mutation, 10 % elitism at paper scale).
@@ -15,15 +23,20 @@ Two-stage multi-seed pipeline over the 12-knob joint space:
                   energy savings + alpha * normalized TOPS/W.
 * ``batch_eval``— the JAX-native evaluator: the whole compile+simulate
                   cost model as one lax.scan, vmapped over thousands of
-                  candidate chips (DESIGN.md §2).
+                  candidate chips (DESIGN.md §2).  Carries the two
+                  documented simplifications the engine inherits: the
+                  FIFO-eviction-free activation-cache model, and Eq. 3
+                  split execution without the per-slice ragged remainder.
 """
 from .encoding import Genome, decode, random_genomes, GENOME_LEN
 from .batch_eval import batch_evaluate, prepare_workload, prepare_configs
+from .engine import EvalEngine, EngineStats, genomes_to_configs, genome_areas
 from .pareto import pareto_front
 from .objective import iso_area_savings, fitness
 
 __all__ = [
     "Genome", "decode", "random_genomes", "GENOME_LEN",
     "batch_evaluate", "prepare_workload", "prepare_configs",
+    "EvalEngine", "EngineStats", "genomes_to_configs", "genome_areas",
     "pareto_front", "iso_area_savings", "fitness",
 ]

@@ -15,8 +15,8 @@ import numpy as np
 
 from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
 from .encoding import GENOME_LEN, genome_bounds, random_genomes
+from .engine import EvalEngine
 from .objective import area_bracket
-from .sweep import evaluate_genomes
 
 __all__ = ["BayesConfig", "run_bayes"]
 
@@ -76,12 +76,17 @@ def _erf(x: float) -> float:
 def run_bayes(workloads: Sequence[str], objective_fn,
               cfg: BayesConfig = BayesConfig(), seed: int = 0,
               calib: CalibrationTable = DEFAULT_CALIB,
-              verbose: bool = False) -> Dict[str, object]:
+              verbose: bool = False,
+              engine: Optional[EvalEngine] = None) -> Dict[str, object]:
     """Maximize ``objective_fn(metrics) -> (N,) score`` over the genome
-    space.  Returns best genome/score plus the evaluation history."""
+    space.  Returns best genome/score plus the evaluation history.
+    Scoring goes through a (optionally shared) ``EvalEngine``, so a
+    candidate the acquisition re-picks in a later round is a cache hit."""
+    engine = (engine.check_workloads(workloads, calib)
+              if engine is not None else EvalEngine(workloads, calib))
     rng = np.random.default_rng(seed)
     genomes = random_genomes(rng, cfg.init_samples)
-    metrics = evaluate_genomes(genomes, workloads, calib)
+    metrics = engine.evaluate(genomes)
     scores = objective_fn(metrics)
     history = [float(np.nanmax(scores))]
     surr = _Surrogate(cfg.length_scale, cfg.ridge)
@@ -94,7 +99,7 @@ def run_bayes(workloads: Sequence[str], objective_fn,
         mu, sigma = surr.predict(_featurize(pool))
         ei = _expected_improvement(mu, sigma, best, cfg.explore)
         pick = pool[np.argsort(-ei)[:cfg.batch_per_round]]
-        m2 = evaluate_genomes(pick, workloads, calib)
+        m2 = engine.evaluate(pick)
         s2 = objective_fn(m2)
         genomes = np.concatenate([genomes, pick])
         scores = np.concatenate([scores, s2])

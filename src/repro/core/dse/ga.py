@@ -14,9 +14,10 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
-from .encoding import GENOME_LEN, decode, genome_bounds, random_genomes
+from .encoding import GENOME_LEN, genome_bounds, random_genomes
+from .engine import EvalEngine
 from .objective import ALPHA, AREA_BRACKETS, area_bracket
-from .sweep import SweepResult, evaluate_genomes
+from .sweep import SweepResult
 
 __all__ = ["GAConfig", "GAResult", "run_ga"]
 
@@ -51,11 +52,15 @@ def _fitness(en: np.ndarray, tw: np.ndarray, lat: np.ndarray,
     sav = (e_homo[None, :] - en) / np.maximum(e_homo[None, :], 1e-30)
     fit = sav.mean(axis=1)
     peak_tw = tw.max(axis=1)
-    max_tw = peak_tw.max() if len(peak_tw) else 1.0
-    fit = fit + alpha * peak_tw / max(max_tw, 1e-30)
     bad = ~np.isfinite(lat).all(axis=1) | ~(lat > 0).all(axis=1)
     # out-of-bracket designs are not iso-area comparable
     bad |= np.array([area_bracket(a) != bracket for a in area])
+    # normalize TOPS/W over comparable designs only: a -inf-fitness
+    # out-of-bracket child must not rescale the alpha term of the valid
+    # population (it also lets the engine skip simulating such children)
+    ok = ~bad
+    max_tw = peak_tw[ok].max() if ok.any() else 1.0
+    fit = fit + alpha * peak_tw / max(max_tw, 1e-30)
     fit[bad] = -np.inf
     return fit
 
@@ -63,8 +68,18 @@ def _fitness(en: np.ndarray, tw: np.ndarray, lat: np.ndarray,
 def run_ga(sweep: SweepResult, bracket: float,
            cfg: GAConfig = GAConfig(), seed: int = 0,
            calib: CalibrationTable = DEFAULT_CALIB,
-           verbose: bool = False) -> Optional[GAResult]:
-    """GA refinement at one area budget, seeded from the sweep."""
+           verbose: bool = False, engine: Optional[EvalEngine] = None,
+           prefilter: bool = True) -> Optional[GAResult]:
+    """GA refinement at one area budget, seeded from the sweep.
+
+    Scoring goes through a (optionally shared) ``EvalEngine``: the 10 %
+    elites re-entering every generation and duplicate children are cache
+    hits, and with ``prefilter`` (default) out-of-bracket children — whose
+    Eq. 8 fitness is -inf regardless of their metrics — skip simulation
+    entirely.  Both are fitness-preserving: ``best_fitness`` is bitwise
+    identical to the uncached, unfiltered evaluation."""
+    engine = (engine.check_workloads(sweep.workloads, calib)
+              if engine is not None else EvalEngine(sweep.workloads, calib))
     rng = np.random.default_rng(seed + int(bracket))
     base = sweep.homo_baseline()
     if bracket not in base:
@@ -82,8 +97,12 @@ def run_ga(sweep: SweepResult, bracket: float,
                               family="hetero_bls" if rng.random() < 0.5 else None)
         pop = np.concatenate([pop, fill])[:cfg.population]
 
+    def keep(areas: np.ndarray) -> np.ndarray:
+        return np.fromiter((area_bracket(a) == bracket for a in areas),
+                           bool, len(areas))
+
     def evaluate(genomes: np.ndarray):
-        m = evaluate_genomes(genomes, sweep.workloads, calib)
+        m = engine.evaluate(genomes, keep=keep if prefilter else None)
         fit = _fitness(m["energy"], m["tops_w"], m["latency"], m["area"],
                        bracket, e_homo, cfg.alpha)
         return fit, m

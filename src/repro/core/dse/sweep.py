@@ -23,9 +23,11 @@ from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
 from ..workloads import build
 from .batch_eval import batch_evaluate, prepare_configs, prepare_workload
 from .encoding import FAMILIES, decode, random_genomes
+from .engine import EvalEngine
 from .objective import ALPHA, AREA_BRACKETS, area_bracket
 
-__all__ = ["SweepResult", "run_sweep", "evaluate_genomes"]
+__all__ = ["SweepResult", "run_sweep", "evaluate_genomes",
+           "evaluate_genomes_reference"]
 
 
 @dataclasses.dataclass
@@ -89,7 +91,20 @@ class SweepResult:
 def evaluate_genomes(genomes: np.ndarray, workloads: Sequence[str],
                      calib: CalibrationTable = DEFAULT_CALIB,
                      batch: int = 1024) -> Dict[str, np.ndarray]:
-    """Score genomes on every workload with the batch evaluator."""
+    """Score genomes on every workload (one-shot ``EvalEngine``).
+
+    Search loops should hold their own engine so the genome memo and
+    workload-prep cache persist across calls; this wrapper exists for
+    single-batch scoring and backwards compatibility."""
+    return EvalEngine(workloads, calib, batch=batch).evaluate(genomes)
+
+
+def evaluate_genomes_reference(genomes: np.ndarray, workloads: Sequence[str],
+                               calib: CalibrationTable = DEFAULT_CALIB,
+                               batch: int = 1024) -> Dict[str, np.ndarray]:
+    """Pre-engine host loop, kept verbatim as the parity/benchmark
+    baseline: re-prepares every workload per batch and decodes every
+    genome into Python ChipConfig objects."""
     chips = [decode(g, f"g{i}") for i, g in enumerate(genomes)]
     n, w = len(chips), len(workloads)
     lat = np.zeros((n, w))
@@ -112,15 +127,20 @@ def evaluate_genomes(genomes: np.ndarray, workloads: Sequence[str],
 def run_sweep(workloads: Sequence[str], samples_per_stratum: int = 64,
               seed: int = 0, calib: CalibrationTable = DEFAULT_CALIB,
               brackets: Sequence[float] = AREA_BRACKETS,
-              verbose: bool = False) -> SweepResult:
-    """One seed of the stratified sweep (strata = bracket x family)."""
-    from ..simulator.area import chip_area
+              verbose: bool = False,
+              engine: Optional[EvalEngine] = None) -> SweepResult:
+    """One seed of the stratified sweep (strata = bracket x family).
+
+    Pass a shared ``engine`` to reuse its caches across seeds and into
+    the downstream GA refinement (repeated genomes are free)."""
     from .encoding import sample_in_bracket
 
+    engine = (engine.check_workloads(workloads, calib)
+              if engine is not None else EvalEngine(workloads, calib))
     rng = np.random.default_rng(seed)
 
     def area_fn(genome):
-        return chip_area(decode(genome), calib)
+        return float(engine.areas(genome[None, :])[0])
 
     genomes_all, fam_all = [], []
     for fi, fam in enumerate(FAMILIES):
@@ -132,11 +152,12 @@ def run_sweep(workloads: Sequence[str], samples_per_stratum: int = 64,
     family = np.concatenate(fam_all)
 
     t0 = time.time()
-    m = evaluate_genomes(genomes, workloads, calib)
+    m = engine.evaluate(genomes)
     bracket = np.array([area_bracket(a) for a in m["area"]])
     if verbose:
         print(f"[sweep seed {seed}] {len(genomes)} configs x "
-              f"{len(workloads)} workloads in {time.time() - t0:.1f}s")
+              f"{len(workloads)} workloads in {time.time() - t0:.1f}s "
+              f"(cache hit rate {engine.stats.hit_rate():.0%})")
     return SweepResult(seed=seed, workloads=list(workloads), genomes=genomes,
                        family=family, bracket=bracket, area=m["area"],
                        latency=m["latency"], energy=m["energy"],

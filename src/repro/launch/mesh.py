@@ -4,19 +4,34 @@ A FUNCTION, not a module-level constant: importing this module never
 touches jax device state, so smoke tests see 1 CPU device while the
 dry-run (which sets --xla_force_host_platform_device_count=512 before any
 import) sees the full placeholder pod.
+
+``mesh_axis_kwargs`` is the JAX-version compat shim shared by every mesh
+construction site in the repo (train substrate, collective tests, and the
+DSE evaluation engine's candidate-axis sharding): ``jax.sharding.AxisType``
+only exists in newer JAX releases, and older ``jax.make_mesh`` rejects the
+``axis_types`` keyword outright, so on old versions we simply build the
+mesh without it (the default axis behaviour there is the same Auto mode).
 """
 from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_mesh_for_devices"]
+__all__ = ["make_production_mesh", "make_mesh_for_devices",
+           "mesh_axis_kwargs"]
+
+
+def mesh_axis_kwargs(n_axes: int) -> dict:
+    """kwargs for ``jax.make_mesh``: ``axis_types`` when supported, else {}."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **mesh_axis_kwargs(len(axes)))
 
 
 def make_mesh_for_devices(n_devices: int, model_parallel: int = 1):
@@ -26,5 +41,4 @@ def make_mesh_for_devices(n_devices: int, model_parallel: int = 1):
         raise ValueError(f"{n_devices} devices not divisible by "
                          f"model_parallel={model_parallel}")
     return jax.make_mesh((n_devices // model_parallel, model_parallel),
-                         ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+                         ("data", "model"), **mesh_axis_kwargs(2))

@@ -1,0 +1,204 @@
+"""Cache-aware DSE evaluation engine: bitwise parity of the vectorized
+genome->SoA stacking against the reference decode() path, memoization
+identity, canonicalization soundness, prefilter semantics, and GA
+fixed-seed equivalence with the pre-refactor evaluation path."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.dse.batch_eval import (batch_evaluate, prepare_configs,
+                                       prepare_workload)
+from repro.core.dse.encoding import (FIELDS_PER_TILE, _TILE_FIELDS, decode,
+                                     random_genomes)
+from repro.core.dse.engine import (EvalEngine, canonical_genomes,
+                                   genome_areas, genomes_to_configs)
+from repro.core.dse.sweep import evaluate_genomes_reference
+from repro.core.workloads import build
+
+WLS = ["kan", "resnet50_int8"]
+
+
+def _mixed_genomes(n_per=32, seed=7):
+    rng = np.random.default_rng(seed)
+    return np.concatenate([random_genomes(rng, n_per, family=f)
+                           for f in (None, "homo", "hetero_bl",
+                                     "hetero_bls")])
+
+
+def test_vectorized_stacking_bitwise_parity():
+    g = _mixed_genomes()
+    ref = prepare_configs([decode(x, f"g{i}") for i, x in enumerate(g)])
+    vec = genomes_to_configs(g)
+    for grp in ("tile", "chip"):
+        assert set(ref[grp]) == set(vec[grp])
+        for k in ref[grp]:
+            assert np.array_equal(ref[grp][k], vec[grp][k]), (grp, k)
+
+
+def test_genome_areas_match_reference():
+    from repro.core.simulator.area import chip_area
+    g = _mixed_genomes(8)
+    areas = genome_areas(g)
+    for i, x in enumerate(g):
+        assert areas[i] == chip_area(decode(x))
+
+
+def test_memoized_results_identical_to_fresh():
+    rng = np.random.default_rng(1)
+    g = random_genomes(rng, 20)
+    eng = EvalEngine(WLS)
+    fresh = evaluate_genomes_reference(g, WLS)
+    first = eng.evaluate(g)
+    for k in fresh:
+        assert np.array_equal(fresh[k], first[k]), k
+    # second pass: all hits, bitwise identical
+    misses_before = eng.stats.misses
+    again = eng.evaluate(g)
+    assert eng.stats.misses == misses_before
+    for k in first:
+        assert np.array_equal(first[k], again[k]), k
+    # shuffled subset rides the memo and still matches
+    idx = rng.permutation(len(g))[:9]
+    sub = eng.evaluate(g[idx])
+    for k in first:
+        assert np.array_equal(first[k][idx], sub[k]), k
+    assert eng.stats.misses == misses_before
+    assert eng.stats.hit_rate() > 0
+
+
+def test_duplicates_within_one_call_simulated_once():
+    rng = np.random.default_rng(2)
+    g = random_genomes(rng, 6)
+    batch = np.concatenate([g, g[::-1]])
+    eng = EvalEngine(["kan"])
+    out = eng.evaluate(batch)
+    assert eng.stats.misses == 6
+    assert eng.stats.hits == 6
+    for k in ("latency", "energy", "tops_w", "area"):
+        assert np.array_equal(out[k][:6], out[k][6:][::-1]), k
+
+
+def test_canonical_genomes_zero_inactive_blocks():
+    rng = np.random.default_rng(3)
+    g = random_genomes(rng, 64)
+    c = canonical_genomes(g)
+    for i, genome in enumerate(g):
+        n_types = int(genome[0]) + 1
+        for t in range(n_types, 3):
+            sl = slice(1 + t * FIELDS_PER_TILE, 1 + (t + 1) * FIELDS_PER_TILE)
+            assert (c[i, sl] == 0).all()
+    # canonicalization never changes area or metrics
+    assert np.array_equal(genome_areas(g), genome_areas(c))
+    ws = prepare_workload(build("kan"))
+    r1 = batch_evaluate(ws, prepare_configs([decode(x) for x in g]))
+    r2 = batch_evaluate(ws, prepare_configs([decode(x) for x in c]))
+    for k in ("latency_s", "energy_pj", "achieved_tops"):
+        assert np.array_equal(r1[k], r2[k]), k
+
+
+def test_special_tile_inert_genes():
+    """Genes decode() ignores on Special-Function tiles (rows/cols and the
+    MAC-path knobs) produce bitwise-identical metrics and area."""
+    rng = np.random.default_rng(5)
+    g = random_genomes(rng, 12, family="hetero_bls")
+    g2 = g.copy()
+    base = 1 + 2 * FIELDS_PER_TILE
+    for f in ("rows", "cols", "engine", "prec", "sparsity", "dataflow",
+              "asym", "pipe"):
+        g2[:, base + _TILE_FIELDS.index(f)] = rng.integers(0, 3, len(g))
+    assert np.array_equal(canonical_genomes(g), canonical_genomes(g2))
+    ws = prepare_workload(build("kan"))
+    r1 = batch_evaluate(ws, prepare_configs([decode(x) for x in g]))
+    r2 = batch_evaluate(ws, prepare_configs([decode(x) for x in g2]))
+    for k in ("latency_s", "energy_pj", "achieved_tops"):
+        assert np.array_equal(r1[k], r2[k]), k
+
+
+def test_asym_equivalence_classes():
+    """asym_mac only acts through supports_precision; the canonical map
+    collapses variants that cannot change any op's support."""
+    rng = np.random.default_rng(6)
+    g = random_genomes(rng, 24)
+    g2 = g.copy()
+    col = _TILE_FIELDS.index("asym")
+    for t in range(3):
+        g2[:, 1 + t * FIELDS_PER_TILE + col] = rng.integers(0, 4, len(g))
+    same = np.all(canonical_genomes(g) == canonical_genomes(g2), axis=1)
+    assert same.any()
+    idx = np.nonzero(same)[0]
+    chips1 = [decode(g[i]) for i in idx]
+    chips2 = [decode(g2[i]) for i in idx]
+    ws = prepare_workload(build("resnet50_int8"), aggressive_int4=True)
+    r1 = batch_evaluate(ws, prepare_configs(chips1))
+    r2 = batch_evaluate(ws, prepare_configs(chips2))
+    for k in ("latency_s", "energy_pj", "achieved_tops"):
+        assert np.array_equal(r1[k], r2[k]), k
+
+
+def test_keep_prefilter_skips_without_poisoning_the_memo():
+    rng = np.random.default_rng(4)
+    g = random_genomes(rng, 12)
+    eng = EvalEngine(["kan"])
+    areas = eng.areas(g)
+    cut = float(np.median(areas))
+    out = eng.evaluate(g, keep=lambda a: a <= cut)
+    skipped = areas > cut
+    assert np.isinf(out["latency"][skipped]).all()
+    assert np.isinf(out["energy"][skipped]).all()
+    assert eng.stats.skips == int(skipped.sum())
+    # areas are exact even for skipped genomes
+    assert np.array_equal(out["area"], areas)
+    # an unfiltered follow-up simulates the skipped genomes for real
+    full = eng.evaluate(g)
+    fresh = EvalEngine(["kan"]).evaluate(g)
+    for k in full:
+        assert np.array_equal(full[k], fresh[k]), k
+
+
+def test_run_ga_fixed_seed_same_best_fitness():
+    """The cache-aware engine (memo + vectorized stacking + bracket
+    prefilter) reproduces the pre-refactor GA result bit-for-bit."""
+    from repro.core.dse.ga import GAConfig, run_ga
+    from repro.core.dse.sweep import run_sweep
+
+    sw = run_sweep(WLS, samples_per_stratum=4, seed=0,
+                   brackets=(100.0, 200.0))
+    cfg = GAConfig(population=10, generations=3, seed_top_k=6, early_stop=3)
+    legacy = run_ga(sw, 200.0, cfg, seed=1,
+                    engine=EvalEngine(WLS, memoize=False, vectorized=False),
+                    prefilter=False)
+    cached = run_ga(sw, 200.0, cfg, seed=1, engine=EvalEngine(WLS),
+                    prefilter=True)
+    assert legacy is not None and cached is not None
+    assert legacy.best_fitness == cached.best_fitness
+    assert np.array_equal(legacy.best_genome, cached.best_genome)
+    assert legacy.history == cached.history
+
+
+@pytest.mark.slow
+def test_sharded_evaluation_matches_single_device():
+    """Candidate-axis sharding over forced host devices is a pure layout
+    change: results match the unsharded engine bitwise."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np
+from repro.core.dse.encoding import random_genomes
+from repro.core.dse.engine import EvalEngine
+g = random_genomes(np.random.default_rng(0), 16)
+plain = EvalEngine(["kan"]).evaluate(g)
+shard = EvalEngine(["kan"], shard=True)
+assert shard._sharding is not None
+out = shard.evaluate(g)
+for k in plain:
+    assert np.array_equal(plain[k], out[k]), k
+print("OK")
+"""
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+           "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=240, env=env)
+    assert "OK" in out.stdout, out.stderr[-2000:]

@@ -1,6 +1,7 @@
 """Coverage for the extension layers: Bayesian DSE backend, TPU-mesh DSE,
 ring collective-matmul (subprocess: needs >1 device), serve engine,
 workload extraction."""
+import os
 import subprocess
 import sys
 
@@ -56,8 +57,8 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from repro.distributed.overlap import ring_allgather_matmul
-mesh = jax.make_mesh((8,), ("model",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import mesh_axis_kwargs
+mesh = jax.make_mesh((8,), ("model",), **mesh_axis_kwargs(1))
 x = jnp.asarray(np.random.default_rng(0).normal(size=(64, 32)), jnp.float32)
 w = jnp.asarray(np.random.default_rng(1).normal(size=(32, 48)), jnp.float32)
 with mesh:
@@ -65,10 +66,11 @@ with mesh:
 assert float(jnp.abs(y - x @ w).max()) < 1e-4
 print("OK")
 """
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+    # without an explicit platform, backend probing can hang in a bare env
+    env["JAX_PLATFORMS"] = os.environ.get("JAX_PLATFORMS", "cpu")
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, timeout=240,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"})
+                         text=True, timeout=240, env=env)
     assert "OK" in out.stdout, out.stderr[-2000:]
 
 

@@ -4,6 +4,8 @@ import math
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.calibrate.asap7 import DEFAULT_CALIB
