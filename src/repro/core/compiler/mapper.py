@@ -13,6 +13,12 @@ multiple compatible MAC tiles it evaluates an even split along OC / B / IC
 with the explicit reduce/concat cost of Eq. 3, accepting the split only if
 its finish time beats single-tile placement.
 
+Compatibility filters and roofline estimates are evaluated through the
+shared ``simulator.costs.CostModel`` — vectorized across the tile axis in
+one numpy call per (op, bandwidth) query, which is what makes the Python
+compile path fast enough to feed the batched plan executor — with values
+bitwise identical to the per-tile ``TileSim`` wrappers.
+
 Under a heterogeneous architecture this rule routes each op to the
 smallest compatible tile (the paper's FP16-MATMUL->Big / INT8-Conv->any /
 FFT->Special-Function behaviour) and partitions bulk MAC work across
@@ -24,11 +30,15 @@ from __future__ import annotations
 import math
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 from ..arch import ChipConfig
 from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
 from ..ir import OpClass, WorkloadGraph, slice_op
+from ..simulator.costs import TILE_COST_KEYS, cost_model
+from ..simulator.modules import tile_cost_dict
 from ..simulator.orchestrator import Placement, noc_hops
-from ..simulator.tile import TileSim, _SFU_FOR_OP
+from ..simulator.tile import TileSim, _SFU_FOR_OP, op_cost_dict
 
 __all__ = ["map_graph", "UnmappableError"]
 
@@ -43,8 +53,14 @@ def map_graph(g: WorkloadGraph, chip: ChipConfig,
               calib: CalibrationTable = DEFAULT_CALIB,
               enable_split: bool = True) -> Dict[int, Placement]:
     templates = chip.instances()
-    tiles = [TileSim(t, calib) for t in templates]
-    n = len(tiles)
+    n = len(templates)
+    cm = cost_model(calib)
+    # (n,) tile-field arrays: one vectorized CostModel query scores every
+    # tile at once (bitwise equal to per-tile TileSim calls)
+    dicts = [tile_cost_dict(t) for t in templates]
+    T = {k: np.asarray([d[k] for d in dicts], np.float64)
+         for k in TILE_COST_KEYS}
+    clock_hz = T["clock_hz"]
     hops = noc_hops(chip.interconnect, n)
     ref_hz = chip.ref_clock_mhz * 1e6
     # static per-tile bandwidth share for the estimate domain; the
@@ -64,7 +80,9 @@ def map_graph(g: WorkloadGraph, chip: ChipConfig,
     for i, op in enumerate(g.nodes):
         if op.fused_into >= 0:
             continue
-        compat = [t for t in range(n) if tiles[t].supports(op)]
+        opd = op_cost_dict(op)
+        compat_mask = np.asarray(cm.supports(T, opd))
+        compat = [t for t in range(n) if compat_mask[t]]
         if not compat:
             raise UnmappableError(
                 f"{g.name}: op {i} ({op.name}, {op.op_type.name}, "
@@ -91,11 +109,11 @@ def map_graph(g: WorkloadGraph, chip: ChipConfig,
             return max(tile_finish[t], dep)
 
         # --- single-tile candidates (Eq. 1 + Eq. 2) -------------------------
+        c_hat_s = np.asarray(cm.roofline_cycles(T, opd, bw_share)) / clock_hz
         best_t, best_fin, best_start = -1, float("inf"), 0.0
         for t in compat:
             ts = t_start_on(t)
-            c_hat = tiles[t].roofline_cycles(op, bw_share) / tiles[t].clock_hz
-            fin = ts + c_hat
+            fin = ts + float(c_hat_s[t])
             # tie-break toward the smallest compatible tile
             if fin < best_fin - 1e-15 or (
                     abs(fin - best_fin) <= 1e-15 and best_t >= 0
@@ -112,12 +130,9 @@ def map_graph(g: WorkloadGraph, chip: ChipConfig,
                 k = len(mac_tiles)
                 for axis in SPLIT_AXES:
                     sub = slice_op(op, axis, k)
-                    fins = []
-                    for t in mac_tiles:
-                        ts = t_start_on(t)
-                        c_hat = tiles[t].roofline_cycles(sub, bw_share / k) \
-                            / tiles[t].clock_hz
-                        fins.append(ts + c_hat)
+                    ch_s = np.asarray(cm.roofline_cycles(
+                        T, op_cost_dict(sub), bw_share / k)) / clock_hz
+                    fins = [t_start_on(t) + float(ch_s[t]) for t in mac_tiles]
                     # Eq. 3 reduce/concat cost over the NoC
                     fin = max(fins) + noc_s(op.bytes_out / k)
                     if fin < choice_fin:

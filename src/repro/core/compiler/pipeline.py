@@ -1,20 +1,23 @@
 """Compiler driver: runs the four ordered passes (paper §3.2) and returns
-an ExecutionPlan for the simulator."""
+an ExecutionPlan for the simulator, plus the plan -> op-table lowering
+consumed by the batched simulator backend."""
 from __future__ import annotations
 
 import copy
 from typing import Optional
 
+import numpy as np
+
 from ..arch import ChipConfig
 from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
-from ..ir import WorkloadGraph
+from ..ir import AXIS_CODES, PlanTensor, WorkloadGraph, bucket_ops
 from ..simulator.orchestrator import ExecutionPlan
 from .fusion import fuse
 from .mapper import map_graph
 from .precision import assign_precision
 from .schedule import emit_schedule
 
-__all__ = ["compile_workload"]
+__all__ = ["compile_workload", "lower_plan", "compile_to_table"]
 
 
 def compile_workload(g: WorkloadGraph, chip: ChipConfig,
@@ -35,3 +38,63 @@ def compile_workload(g: WorkloadGraph, chip: ChipConfig,
         g = fuse(g)
     placements = map_graph(g, chip, calib, enable_split=enable_split)
     return emit_schedule(g, placements, mode=mode)
+
+
+def lower_plan(plan: ExecutionPlan, num_tiles: int,
+               max_ops: Optional[int] = None) -> PlanTensor:
+    """Lower a compiled plan into the fixed-shape SoA op-table executed by
+    ``repro.core.simulator.batched``.
+
+    Ops are padded to ``max_ops`` rows (default: the 64-multiple bucket of
+    the graph length, so similar-size workloads share jit caches).
+    Placements become integer arrays: ``owner`` (= ``Placement.tiles[0]``),
+    ``n_split`` / ``split_axis`` / per-slot ``split_mask`` for Eq. 3 split
+    executions.  Config-independent auxiliaries (per-pred byte shares,
+    fused-group PPM energy and Eq. 6 refunds, total MACs) ride along in
+    ``aux`` so the executor needs no graph object.
+    """
+    g = plan.graph
+    n = len(g.nodes)
+    cap = max_ops or bucket_ops(n)
+    t = g.to_tensor(max_ops=cap)
+
+    owner = np.full(cap, -1, np.int32)
+    n_split = np.zeros(cap, np.int32)
+    split_axis = np.full(cap, -1, np.int32)
+    split_mask = np.zeros((cap, num_tiles), np.int8)
+    for i, pl in plan.placements.items():
+        owner[i] = pl.tiles[0]
+        n_split[i] = len(pl.tiles)
+        split_axis[i] = AXIS_CODES[pl.axis] if len(pl.tiles) > 1 else -1
+        split_mask[i, list(pl.tiles)] = 1
+
+    num_preds = (t.preds >= 0).sum(axis=1).astype(np.float64)
+    fused_lane_ops = np.zeros(cap)
+    fused_refund_b = np.zeros(cap)
+    for j, nd in enumerate(g.nodes):
+        if nd.fused_into >= 0:
+            fused_lane_ops[nd.fused_into] += nd.elems * 2.0
+            fused_refund_b[nd.fused_into] += 2.0 * nd.bytes_out
+    aux = {
+        "num_preds": num_preds,
+        "per_pred_bytes": t.arrays["bytes_in"] / np.maximum(num_preds, 1.0),
+        "fused_lane_ops": fused_lane_ops,
+        "fused_refund_bytes": fused_refund_b,
+        "total_macs": np.float64(sum(nd.macs for nd in g.nodes
+                                     if nd.fused_into < 0)),
+    }
+    table = PlanTensor(ops=t, owner=owner, n_split=n_split,
+                       split_axis=split_axis, split_mask=split_mask,
+                       num_tiles=num_tiles, aux=aux)
+    table.validate()
+    return table
+
+
+def compile_to_table(g: WorkloadGraph, chip: ChipConfig,
+                     calib: CalibrationTable = DEFAULT_CALIB,
+                     max_ops: Optional[int] = None,
+                     **compile_kwargs) -> PlanTensor:
+    """``compile_workload`` + ``lower_plan`` in one step."""
+    plan = compile_workload(g, chip, calib, **compile_kwargs)
+    return lower_plan(plan, chip.num_tiles, max_ops=max_ops)
+

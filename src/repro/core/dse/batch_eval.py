@@ -4,18 +4,21 @@ chips and jitted (DESIGN.md §2 — the TPU-native re-think of the paper's
 per-config host loop; the Pallas ``dse_eval`` kernel accelerates the
 per-(config x op) pre-filter).
 
-Semantics mirror the reference pipeline (``compiler.mapper`` +
-``simulator``) 1:1 except for two documented simplifications:
-
-* activation cache: an output is considered cached at its producer tile
-  iff it fits the tile's cache partition (no FIFO-eviction dynamics);
-* Eq. 3 split execution uses the shared slice the orchestrator uses, but
-  ignores the (rare) per-slice ragged remainder.
+Per-(op, tile) costs come from the shared ``simulator.costs.CostModel``
+(the identical code the reference ``TileSim`` executes), and the
+activation cache is the same byte- and slot-bounded FIFO the orchestrator
+runs (mirrored via ``simulator.batched.fifo_insert``).  What remains
+approximate is the *in-scan greedy mapping*: Eq. 1-3 placement decisions
+are re-derived inside the scan (with an epsilon tie-break instead of the
+mapper's sequential one) and Eq. 3 splits ignore the rare per-slice
+ragged remainder — so this evaluator fuses compile+simulate into one
+dispatch, where ``simulator.batched`` executes an exact pre-compiled
+plan.
 
 Equivalence is pinned by tests/test_batch_eval.py: median relative error
-vs the reference simulator and Spearman rank agreement over random
-config batches.  The DSE uses this evaluator for search and re-scores
-finalists with the reference simulator, so reported numbers are exact.
+vs the reference simulator and a tolerance band over random config
+batches.  The DSE uses this evaluator for search and re-scores finalists
+through the exact backends, so reported numbers are exact.
 """
 from __future__ import annotations
 
@@ -36,35 +39,29 @@ from ..arch import (MAX_TILES, ChipConfig, Dataflow, Engine, Interconnect,
 from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
 from ..compiler.fusion import fuse
 from ..compiler.precision import assign_precision
-from ..ir import MAX_PREDS, OpClass, OpType, PRECISION_BYTES, WorkloadGraph
-from ..simulator.area import chip_area, tile_area
-from ..simulator.modules import ACC_BYTES, DSP_OPS_PER_ELEM
-from ..simulator.orchestrator import CACHE_FRAC, noc_hops
+from ..ir import (MAX_PREDS, OpClass, OpType, PRECISION_BYTES, WorkloadGraph,
+                  bucket_ops)
+from ..simulator.batched import (CHIP_KEYS, TILE_KEYS, fifo_insert,
+                                 stack_chip_configs)
+from ..simulator.costs import (ACC_BYTES, ACT_CACHE_SLOTS, CACHE_FRAC,
+                               DSP_OPS_PER_ELEM, DSP_OPS_TABLE, SFU_NEED,
+                               cost_model)
+from ..simulator.orchestrator import noc_hops
 
 __all__ = ["prepare_workload", "prepare_configs", "batch_evaluate"]
 
 _ACC = ACC_BYTES[0]
 _F = jnp.float64
 
-# DSP lane-ops table indexed by op_type (23 entries)
-_DSP_OPS_TABLE = np.array(
-    [DSP_OPS_PER_ELEM.get(t, 2.0) for t in range(23)], dtype=np.float64)
-
-_SFU_NEED = np.ones(23, dtype=np.float64)  # default 1: harmless for non-special
-_SFU_NEED[int(OpType.FFT)] = 1.0
-_SFU_NEED[int(OpType.SNN_LIF)] = 2.0
-_SFU_NEED[int(OpType.POLY)] = 4.0
+# Backwards-compatible aliases (tables now live in simulator.costs).
+_DSP_OPS_TABLE = DSP_OPS_TABLE
+_SFU_NEED = SFU_NEED
+_bucket = bucket_ops
 
 
 # =============================================================================
 # host-side preparation
 # =============================================================================
-
-def _bucket(n: int) -> int:
-    """Pad op counts to multiples of 64: similar-size workloads still share
-    jit caches, without power-of-two padding on the scan length (a 25 %
-    scan-step tax on an 821-op graph padded to 1024)."""
-    return max(((n + 63) // 64) * 64, 64)
 
 
 def prepare_workload(g: WorkloadGraph, aggressive_int4: bool = False,
@@ -95,339 +92,30 @@ def prepare_workload(g: WorkloadGraph, aggressive_int4: bool = False,
 
 def prepare_configs(chips: Sequence[ChipConfig],
                     calib: CalibrationTable = DEFAULT_CALIB) -> Dict[str, np.ndarray]:
-    """Stack a list of chips into (B, MAX_TILES) / (B,) arrays."""
-    B = len(chips)
-    tile_f = {f: np.zeros((B, MAX_TILES)) for f in (
-        "exists", "num_macs", "rows", "cols", "engine", "prec_mask",
-        "asym_mac", "sparsity", "dataflow", "sram_kb", "dsp_lanes",
-        "dsp_count", "sfu_mask", "sfu_parallel", "double_buffer",
-        "pipeline_depth", "clock_hz", "cache_cap", "sram_bpc", "area_mm2",
-        "max_prec")}
-    chip_f = {f: np.zeros(B) for f in (
-        "dram_gbps", "hops", "noc_bpc", "noc_base_cycles", "ref_clock_hz",
-        "peak_tops", "chip_area")}
-    for b, chip in enumerate(chips):
-        inst = chip.instances()
-        for i, t in enumerate(inst):
-            tile_f["exists"][b, i] = 1.0
-            tile_f["num_macs"][b, i] = t.num_macs
-            tile_f["rows"][b, i] = t.rows
-            tile_f["cols"][b, i] = t.cols
-            tile_f["engine"][b, i] = int(t.engine)
-            tile_f["prec_mask"][b, i] = t.precision_mask
-            tile_f["asym_mac"][b, i] = int(t.asym_mac)
-            tile_f["sparsity"][b, i] = int(t.sparsity)
-            tile_f["dataflow"][b, i] = int(t.dataflow)
-            tile_f["sram_kb"][b, i] = t.sram_kb
-            tile_f["dsp_lanes"][b, i] = t.dsp_count * t.dsp_simd
-            tile_f["dsp_count"][b, i] = t.dsp_count
-            tile_f["sfu_mask"][b, i] = t.sfu_mask
-            tile_f["sfu_parallel"][b, i] = t.sfu_parallel
-            tile_f["double_buffer"][b, i] = float(t.double_buffer)
-            tile_f["pipeline_depth"][b, i] = t.pipeline_depth
-            tile_f["clock_hz"][b, i] = t.clock_mhz * 1e6
-            tile_f["cache_cap"][b, i] = t.sram_kb * 1024.0 * CACHE_FRAC
-            tile_f["sram_bpc"][b, i] = max(t.sram_banks, 1) * 16.0
-            tile_f["area_mm2"][b, i] = tile_area(t, calib)
-            tile_f["max_prec"][b, i] = int(t.max_precision)
-        chip_f["dram_gbps"][b] = chip.dram_gbps
-        chip_f["hops"][b] = noc_hops(chip.interconnect, len(inst))
-        chip_f["noc_bpc"][b] = chip.noc_bytes_per_cycle
-        chip_f["noc_base_cycles"][b] = chip.noc_base_cycles
-        chip_f["ref_clock_hz"][b] = chip.ref_clock_mhz * 1e6
-        chip_f["peak_tops"][b] = sum(t.num_macs * t.clock_mhz * 1e6
-                                     for t in inst) / 1e12
-        chip_f["chip_area"][b] = chip_area(chip, calib)
-    return {"tile": tile_f, "chip": chip_f}
+    """Stack a list of chips into (B, MAX_TILES) / (B,) arrays (the single
+    implementation lives in ``simulator.batched.stack_chip_configs``)."""
+    return stack_chip_configs(chips, calib)
 
 
 # =============================================================================
-# vectorized per-tile models (mirror simulator.modules / simulator.tile)
+# vectorized per-tile models — now just the shared CostModel
 # =============================================================================
 
 def _make_eval(calib: CalibrationTable, max_ops: int):
-    e_mac = jnp.asarray(calib.e_mac_pj, _F)
-    eng_e = jnp.asarray(calib.engine_e_mult, _F)
-    dsp_ops_t = jnp.asarray(_DSP_OPS_TABLE, _F)
-    sfu_need = jnp.asarray(_SFU_NEED, _F)
-    bpe_t = jnp.asarray(PRECISION_BYTES, _F)
-    c = calib  # scalars inlined as python floats (constants under jit)
+    """Bind the shared simulator cost formulas for this calibration.
 
-    def mac_energy_pj(T, prec_idx):
-        """Op-precision MAC energy on this tile's datapath, including the
-        clock-gating residual of the wide path (mirrors
-        CalibrationTable.mac_energy)."""
-        dp_idx = jnp.asarray(T["max_prec"], jnp.int32)
-        e = e_mac[prec_idx]
-        e_wide = e_mac[dp_idx]
-        e = jnp.where(e_wide > e, e + c.datapath_residual * (e_wide - e), e)
-        return e * eng_e[jnp.asarray(T["engine"], jnp.int32)]
-
-    def eta_fn(sparsity, act_sp, w_sp):
-        act_sp = jnp.clip(act_sp, 0.0, 0.95)
-        w_sp = jnp.clip(w_sp, 0.0, 0.95)
-        e_act = 1.0 / (1.0 - act_sp)
-        e_w = 1.0 / (1.0 - w_sp)
-        e_two = 1.0 / jnp.maximum((1.0 - act_sp) * (1.0 - w_sp), 1e-3)
-        e_nm = jnp.where(w_sp >= 0.5, 2.0, 1.0)
-        e = jnp.select(
-            [sparsity == int(Sparsity.NONE), sparsity == int(Sparsity.ACT),
-             sparsity == int(Sparsity.WEIGHT), sparsity == int(Sparsity.TWO_SIDED)],
-            [jnp.ones_like(e_act), e_act, e_w, e_two], e_nm)
-        return jnp.minimum(e, c.eta_cap)
-
-    def supports_precision(T, prec):
-        native = jnp.floor_divide(T["prec_mask"], 2.0 ** prec) % 2 >= 1
-        int8_ok = jnp.floor_divide(T["prec_mask"], 2.0) % 2 >= 1
-        fp16_ok = jnp.floor_divide(T["prec_mask"], 4.0) % 2 >= 1
-        asym48 = jnp.isin(T["asym_mac"], jnp.asarray([1.0, 2.0])) \
-            & (prec == 0) & int8_ok
-        asym416 = (T["asym_mac"] == 3.0) & (prec <= 1) & fp16_ok
-        return native | asym48 | asym416
-
-    def mac_tiling(T, m, k, n, bpe):
-        budget = T["sram_kb"] * 1024.0 * (1.0 - CACHE_FRAC)
-        m_t = jnp.minimum(m, T["rows"])
-        n_t = jnp.maximum(jnp.minimum(n, T["cols"]), 1.0)
-        db = jnp.where(T["double_buffer"] > 0, 2.0, 1.0)
-        out_b = m_t * n_t * _ACC
-        k_fit = (budget - out_b) / jnp.maximum((m_t + n_t) * bpe * db, 1.0)
-        k_t = jnp.maximum(jnp.minimum(k, k_fit), jnp.minimum(k, 16.0))
-        return m_t, k_t, n_t
-
-    def mac_cycles(T, m, k, n, eta, m_t, k_t, n_t):
-        D = T["pipeline_depth"]
-        tn = jnp.ceil(n / n_t)
-        tk = jnp.ceil(k / jnp.maximum(k_t, 1.0))
-        tm = jnp.ceil(m / jnp.maximum(m_t, 1.0))
-        m_eff = m / jnp.maximum(tm, 1.0)
-        k_eff = (k / jnp.maximum(tk, 1.0)) / eta
-        nm = jnp.maximum(T["num_macs"], 1.0)
-        sys = tn * tk * (D + tm * (m_eff + k_eff + D - 2.0))
-        ideal = (m * k * n / eta) / nm
-        util = (m_eff / jnp.maximum(m_t, 1.0)) \
-            * (jnp.minimum(n, n_t) / jnp.maximum(n_t, 1.0))
-        spatial = ideal / jnp.maximum(jnp.minimum(util, 1.0), 0.25) + D * tn * tk
-        cim = 2.0 * ideal + D * tn * tk
-        cyc = jnp.select(
-            [T["engine"] == int(Engine.SYSTOLIC),
-             T["engine"] == int(Engine.SPATIAL),
-             T["engine"] == int(Engine.DOT)],
-            [sys, spatial, spatial], cim)
-        return jnp.where((m > 0) & (k > 0) & (n > 0), cyc, 0.0)
-
-    def sram_traffic(T, m, k, n, bpe, m_t, k_t, n_t):
-        tm = jnp.ceil(m / jnp.maximum(m_t, 1.0))
-        tk = jnp.ceil(k / jnp.maximum(k_t, 1.0))
-        tn = jnp.ceil(n / jnp.maximum(n_t, 1.0))
-        # AUTO rule (§3.2)
-        auto_os = (m * n > 4.0 * k * n) & (m * n > 4.0 * m * k)
-        df = jnp.where(T["dataflow"] == int(Dataflow.AUTO),
-                       jnp.where(auto_os, float(Dataflow.OS), float(Dataflow.WS)),
-                       T["dataflow"])
-        in_b = jnp.select(
-            [df == int(Dataflow.WS), df == int(Dataflow.OS)],
-            [m * k * bpe * tn, m * k * bpe * tn], m * k * bpe * jnp.sqrt(tn))
-        w_b = jnp.select(
-            [df == int(Dataflow.WS), df == int(Dataflow.OS)],
-            [k * n * bpe, k * n * bpe * tm], k * n * bpe * jnp.sqrt(tm))
-        out_b = jnp.select(
-            [df == int(Dataflow.WS), df == int(Dataflow.OS)],
-            [m * n * _ACC * (2.0 * tk - 1.0), m * n * _ACC],
-            m * n * _ACC * jnp.sqrt(tk))
-        return in_b, w_b, out_b, tk
-
-    def dsp_cycles_energy(T, op_type, elems, seq_len):
-        ops_pe = dsp_ops_t[jnp.asarray(op_type, jnp.int32)]
-        lane_ops = elems * ops_pe
-        lanes = jnp.maximum(T["dsp_lanes"], 1.0)
-        is_scan = (op_type == int(OpType.SSM_SCAN)) & (seq_len > 1)
-        per_step = (elems / jnp.maximum(seq_len, 1.0)) * ops_pe
-        cyc = jnp.where(is_scan,
-                        seq_len * jnp.ceil(per_step / lanes),
-                        jnp.ceil(lane_ops / lanes))
-        ok = (T["dsp_count"] > 0) & (elems > 0)
-        return jnp.where(ok, cyc, 0.0), jnp.where(ok, lane_ops * c.e_dsp_pj_per_lane_op, 0.0)
-
-    def sfu_cycles_energy(T, op_type, elems, fft_n, poly_d, snn_t):
-        par = jnp.maximum(T["sfu_parallel"], 1.0)
-        n = jnp.maximum(fft_n, 2.0)
-        transforms = jnp.maximum(elems / n, 1.0)
-        lg = jnp.log2(n)
-        c_fft = transforms * jnp.ceil(n * lg / par)
-        e_fft = transforms * (n / 2.0) * lg * c.e_fft_pj_per_butterfly
-        t_ = jnp.maximum(snn_t, 1.0)
-        c_lif = jnp.ceil(elems / par) * t_
-        e_lif = elems * t_ * c.e_lif_pj_per_neuron_step
-        d = jnp.maximum(poly_d, 1.0)
-        c_pol = elems * d / par
-        e_pol = elems * d * c.e_poly_pj_per_fma
-        cyc = jnp.select([op_type == int(OpType.FFT),
-                          op_type == int(OpType.SNN_LIF)], [c_fft, c_lif], c_pol)
-        en = jnp.select([op_type == int(OpType.FFT),
-                         op_type == int(OpType.SNN_LIF)], [e_fft, e_lif], e_pol)
-        return cyc, en
-
-    def lowered_cycles_energy(T, op, prec_idx):
-        """FFT->MAC O(N^2) when a MAC array exists; LIF/poly/FFT->DSP."""
-        lanes = jnp.maximum(T["dsp_lanes"], 1.0)
-        n = jnp.maximum(op["fft_n"], 2.0)
-        transforms = jnp.maximum(op["elems"] / n, 1.0)
-        macs = 4.0 * n * n * transforms
-        c_fft_mac = macs / jnp.maximum(T["num_macs"], 1.0)
-        e_fft_mac = macs * mac_energy_pj(T, prec_idx)
-        tsteps = jnp.maximum(op["snn_timesteps"], 1.0)
-        lif_ops = op["elems"] * 4.0
-        # divergence + membrane round-trips: mirrors TileSim lowering
-        c_lif = tsteps * (jnp.ceil(lif_ops / (lanes / 4.0))
-                          + jnp.ceil(op["elems"] * 8.0 / T["sram_bpc"]))
-        e_lif = lif_ops * tsteps * c.e_dsp_pj_per_lane_op
-        d = jnp.maximum(op["poly_degree"], 1.0)
-        pol_ops = op["elems"] * 2.0
-        c_pol = d * (jnp.ceil(pol_ops / lanes)
-                     + jnp.ceil(op["elems"] * 2.0 / T["sram_bpc"]))
-        e_pol = d * pol_ops * c.e_dsp_pj_per_lane_op
-        c_fft_dsp = jnp.ceil(op["elems"] * 10.0 * jnp.log2(n) / lanes)
-        e_fft_dsp = op["elems"] * 10.0 * jnp.log2(n) * c.e_dsp_pj_per_lane_op
-        is_fft = op["op_type"] == int(OpType.FFT)
-        fft_on_mac = is_fft & (T["num_macs"] > 0) \
-            & supports_precision(T, op["precision"])
-        cyc = jnp.select(
-            [fft_on_mac, op["op_type"] == int(OpType.SNN_LIF),
-             op["op_type"] == int(OpType.POLY)],
-            [c_fft_mac, c_lif, c_pol], c_fft_dsp)
-        en = jnp.select(
-            [fft_on_mac, op["op_type"] == int(OpType.SNN_LIF),
-             op["op_type"] == int(OpType.POLY)],
-            [e_fft_mac, e_lif, e_pol], e_fft_dsp)
-        # DFT twiddle weights streamed through SRAM on the MAC lowering
-        extra_sram = jnp.where(fft_on_mac, 2.0 * n * n * bpe_t[prec_idx]
-                               * c.e_sram_pj_per_byte, 0.0)
-        return cyc, en, extra_sram, fft_on_mac
-
-    def sfu_native(T, op):
-        return jnp.floor_divide(T["sfu_mask"],
-                                sfu_need[jnp.asarray(op["op_type"], jnp.int32)]) % 2 >= 1
-
-    def supports(T, op):
-        # precision gates only MAC-array execution (DSP/SFU are FP16-native)
-        prec_ok = supports_precision(T, op["precision"])
-        has_dsp = T["dsp_count"] > 0
-        mac_ok = ((T["num_macs"] > 0) & prec_ok) | has_dsp
-        spec_ok = sfu_native(T, op) \
-            | ((op["op_type"] == int(OpType.FFT)) & (T["num_macs"] > 0) & prec_ok) \
-            | has_dsp
-        cls_ok = jnp.select(
-            [op["op_cls"] == int(OpClass.MAC), op["op_cls"] == int(OpClass.DSP)],
-            [mac_ok, has_dsp], spec_ok)
-        return (T["exists"] > 0) & cls_ok
-
-    def roofline_cycles(T, op, bw_gbps):
-        """Eq. 2 estimate — mirrors TileSim.roofline_cycles."""
-        total_b = op["bytes_in"] + op["bytes_w"] + op["bytes_out"]
-        bpc = bw_gbps * 1e9 / T["clock_hz"]
-        c_bw = total_b / jnp.maximum(bpc, 1e-9)
-        eta = eta_fn(T["sparsity"], op["act_sparsity"], op["w_sparsity"])
-        c_mac = jnp.where(
-            (T["num_macs"] > 0) & supports_precision(T, op["precision"]),
-            op["macs"] / jnp.maximum(T["num_macs"] * eta, 1e-9),
-            jnp.ceil(2.0 * op["macs"] / jnp.maximum(T["dsp_lanes"], 1.0)))
-        c_dsp, _ = dsp_cycles_energy(T, op["op_type"], op["elems"], op["seq_len"])
-        c_sfu_nat, _ = sfu_cycles_energy(T, op["op_type"], op["elems"],
-                                         op["fft_n"], op["poly_degree"],
-                                         op["snn_timesteps"])
-        prec_idx = jnp.asarray(op["precision"], jnp.int32)
-        c_low, _, _, _ = lowered_cycles_energy(T, op, prec_idx)
-        c_spec = jnp.where(sfu_native(T, op), c_sfu_nat, c_low)
-        c_cmp = jnp.select(
-            [op["op_cls"] == int(OpClass.MAC), op["op_cls"] == int(OpClass.SPECIAL)],
-            [c_mac, c_spec], c_dsp)
-        return jnp.maximum(c_cmp, c_bw)
+    Everything below delegates to ``simulator.costs.CostModel`` — the same
+    code ``TileSim`` and the batched plan executor run — so a calibration
+    edit cannot drift between the search evaluator and the oracle."""
+    cm = cost_model(calib, jnp)
 
     def execute(T, op, bw_gbps, dram_rd, dram_wr):
-        """Full seven-module execution (mirrors TileSim.execute).
-
-        Returns (seconds, energy_pj, cycles)."""
-        prec_idx = jnp.asarray(op["precision"], jnp.int32)
-        bpe = bpe_t[prec_idx]
-        eng_idx = jnp.asarray(T["engine"], jnp.int32)
-        energy = jnp.zeros_like(bw_gbps)
-
-        # ---- MAC path -------------------------------------------------
-        eta = eta_fn(T["sparsity"], op["act_sparsity"], op["w_sparsity"])
-        m_t, k_t, n_t = mac_tiling(T, op["m"], op["k"], op["n"], bpe)
-        c_mac = mac_cycles(T, op["m"], op["k"], op["n"], eta, m_t, k_t, n_t)
-        e_mac_path = (op["macs"] / eta) * mac_energy_pj(T, prec_idx)
-        in_b, w_b, out_b, tk = sram_traffic(T, op["m"], op["k"], op["n"], bpe,
-                                            m_t, k_t, n_t)
-        e_sram_mac = (in_b + w_b + out_b) * c.e_sram_pj_per_byte
-        irf_w = jnp.ceil(in_b / 32.0) * 32.0
-        irf_r = in_b * (1.0 - jnp.minimum(op["act_sparsity"], 0.95))
-        e_irf = (irf_w + irf_r) * c.e_irf_pj_per_byte
-        orf_b = op["m"] * op["n"] * _ACC * (2.0 * tk - 1.0)
-        e_orf = orf_b * c.e_orf_pj_per_byte
-        c_mem_mac = jnp.ceil((in_b + w_b + out_b) / T["sram_bpc"])
-
-        # ---- DSP path ---------------------------------------------------
-        c_dsp, e_dsp = dsp_cycles_energy(T, op["op_type"], op["elems"],
-                                         op["seq_len"])
-        stream_b = op["bytes_in"] + op["bytes_out"]
-        e_sram_stream = stream_b * c.e_sram_pj_per_byte
-        c_mem_stream = jnp.ceil(stream_b / T["sram_bpc"])
-
-        # ---- MAC op lowered onto DSP (Special-Function tile) -------------
-        lanes = jnp.maximum(T["dsp_lanes"], 1.0)
-        c_mac_on_dsp = jnp.ceil(2.0 * op["macs"] / lanes)
-        e_mac_on_dsp = 2.0 * op["macs"] * c.e_dsp_pj_per_lane_op
-
-        # ---- SPECIAL path -------------------------------------------------
-        c_sfu, e_sfu = sfu_cycles_energy(T, op["op_type"], op["elems"],
-                                         op["fft_n"], op["poly_degree"],
-                                         op["snn_timesteps"])
-        c_low, e_low, extra_sram_low, fft_on_mac = lowered_cycles_energy(
-            T, op, prec_idx)
-        native = sfu_native(T, op)
-        c_spec = jnp.where(native, c_sfu, c_low)
-        e_spec = jnp.where(native, e_sfu, e_low)
-        e_spec_sram = e_sram_stream + jnp.where(native, 0.0, extra_sram_low)
-
-        is_mac_cls = op["op_cls"] == int(OpClass.MAC)
-        is_spec_cls = op["op_cls"] == int(OpClass.SPECIAL)
-        prec_ok = supports_precision(T, op["precision"])
-        on_mac = is_mac_cls & (T["num_macs"] > 0) & prec_ok
-        on_dsp_low = is_mac_cls & ~on_mac
-
-        c_cmp = jnp.select([on_mac, on_dsp_low, is_spec_cls],
-                           [c_mac, c_mac_on_dsp, c_spec], c_dsp)
-        c_mem = jnp.select([on_mac, on_dsp_low, is_spec_cls],
-                           [c_mem_mac, c_mem_stream, c_mem_stream], c_mem_stream)
-        energy = jnp.select(
-            [on_mac, on_dsp_low, is_spec_cls],
-            [e_mac_path + e_sram_mac + e_irf + e_orf,
-             e_mac_on_dsp + e_sram_stream,
-             e_spec + e_spec_sram],
-            e_dsp + e_sram_stream)
-
-        # ---- DRAM + ports + Eq. 5 combine ---------------------------------
-        rd_al = jnp.where(dram_rd > 0, jnp.ceil(dram_rd / 64.0) * 64.0, 0.0)
-        wr_al = jnp.where(dram_wr > 0, jnp.ceil(dram_wr / 64.0) * 64.0, 0.0)
-        total_dram = rd_al + wr_al
-        bpc = bw_gbps * 1e9 / T["clock_hz"]
-        c_dram = jnp.where(total_dram > 0,
-                           total_dram / jnp.maximum(bpc, 1e-9)
-                           + c.dram_latency_cycles, 0.0)
-        e_dram = total_dram * c.e_dram_pj_per_byte
-        c_lp = jnp.ceil(dram_rd / 64.0)
-        c_sp = jnp.ceil(dram_wr / 64.0)
-        c_tot = jnp.where(T["double_buffer"] > 0,
-                          jnp.maximum(jnp.maximum(c_cmp, c_mem), c_dram)
-                          + c_lp + c_sp,
-                          c_cmp + c_mem + c_dram + c_lp + c_sp)
-        return c_tot / T["clock_hz"], energy + e_dram, c_tot
+        out = cm.execute(T, op, bw_gbps, dram_rd, dram_wr)
+        return out["seconds"], out["energy_total"], out["cycles"]
 
     return {
-        "supports": supports, "roofline_cycles": roofline_cycles,
-        "execute": execute, "sfu_native": sfu_native, "eta": eta_fn,
+        "supports": cm.supports, "roofline_cycles": cm.roofline_cycles,
+        "execute": execute, "sfu_native": cm.sfu_native, "eta": cm.eta,
     }
 
 
@@ -458,7 +146,8 @@ def _build_eval_fn(calib: CalibrationTable, max_ops: int):
         bw_static = chip["dram_gbps"] / n_tiles_f
 
         def step(carry, op):
-            (fin_est, fin_act, opf_est, opf_act, op_tile, tile_ops, energy) = carry
+            (fin_est, fin_act, opf_est, opf_act, op_tile, tile_ops, energy,
+             cached_at, fifo_ops, fifo_bytes) = carry
             idx = jnp.asarray(op["index"], jnp.int32)
             active = (op["valid"] > 0) & (op["fused"] == 0)
 
@@ -537,14 +226,12 @@ def _build_eval_fn(calib: CalibrationTable, max_ops: int):
             # ---------- actual domain (orchestrator §3.3.4) ----------
             pf_act = jnp.where(pred_ok, opf_act[pidx], 0.0)
             t_dep_act = jnp.max(jnp.where(pred_ok, pf_act, 0.0))
-            # simplified cache model: pred output cached at its producer
-            # tile iff it fits that tile's cache partition
-            pred_out_b = jnp.where(pred_ok, ops_xs["bytes_out_all"][pidx], 0.0)
-            pred_cached = pred_ok & (ptile >= 0) \
-                & (pred_out_b <= T["cache_cap"][jnp.maximum(ptile, 0)])
-            hit = pred_cached & (ptile == owner)
-            via_noc = pred_cached & (ptile != owner)
-            miss = pred_ok & ~pred_cached
+            # FIFO activation cache, identical to the orchestrator's:
+            # cached_at carries the op -> holding-tile map maintained by
+            # fifo_insert below
+            src = jnp.where(pred_ok, cached_at[pidx], -1)
+            via_noc = pred_ok & (src >= 0) & (src != owner)
+            miss = pred_ok & (src < 0)
             dram_rd = op["bytes_w"] + jnp.sum(jnp.where(miss, per_pred, 0.0)) \
                 + jnp.where(jnp.sum(pred_ok) == 0, op["bytes_in"], 0.0)
             extra_noc_s = jnp.sum(jnp.where(via_noc, noc_seconds(per_pred), 0.0))
@@ -602,15 +289,20 @@ def _build_eval_fn(calib: CalibrationTable, max_ops: int):
             op_tile = op_tile.at[idx].set(jnp.where(active, owner, -1))
             tile_ops = jnp.where(active, new_ops, tile_ops)
             energy = energy + jnp.where(active, e_op, 0.0)
+            fifo_ops, fifo_bytes, cached_at = fifo_insert(
+                fifo_ops, fifo_bytes, cached_at, owner, idx,
+                op["bytes_out"], T["cache_cap"][owner], active)
             return (fin_est, fin_act, opf_est, opf_act, op_tile, tile_ops,
-                    energy), None
+                    energy, cached_at, fifo_ops, fifo_bytes), None
 
         init = (jnp.zeros(MAX_TILES, _F), jnp.zeros(MAX_TILES, _F),
                 jnp.zeros(max_ops, _F), jnp.zeros(max_ops, _F),
                 jnp.full(max_ops, -1, jnp.int32), jnp.zeros(MAX_TILES, _F),
-                jnp.asarray(0.0, _F))
-        (fin_est, fin_act, opf_est, opf_act, op_tile, tile_ops,
-         energy), _ = jax.lax.scan(step, init, ops_xs["per_op"])
+                jnp.asarray(0.0, _F), jnp.full(max_ops, -1, jnp.int32),
+                jnp.full((MAX_TILES, ACT_CACHE_SLOTS), -1, jnp.int32),
+                jnp.zeros((MAX_TILES, ACT_CACHE_SLOTS), _F))
+        (fin_est, fin_act, opf_est, opf_act, op_tile, tile_ops, energy,
+         *_), _ = jax.lax.scan(step, init, ops_xs["per_op"])
 
         makespan = jnp.max(fin_act)
         gated = tile_ops <= 0
@@ -641,13 +333,9 @@ def _jitted(calib_key, max_ops: int):
     return jax.jit(batched)
 
 
-_TILE_KEYS = ("exists", "num_macs", "rows", "cols", "engine", "prec_mask",
-              "asym_mac", "sparsity", "dataflow", "sram_kb", "dsp_lanes",
-              "dsp_count", "sfu_mask", "sfu_parallel", "double_buffer",
-              "pipeline_depth", "clock_hz", "cache_cap", "sram_bpc",
-              "area_mm2", "max_prec")
-_CHIP_KEYS = ("dram_gbps", "hops", "noc_bpc", "noc_base_cycles",
-              "ref_clock_hz")
+# the single field list lives with the config stacker in simulator.batched
+_TILE_KEYS = TILE_KEYS
+_CHIP_KEYS = CHIP_KEYS
 _CALIB_REGISTRY: Dict[int, CalibrationTable] = {}
 
 _PER_OP_KEYS = ("op_type", "op_cls", "macs", "elems", "m", "k", "n",
@@ -671,8 +359,7 @@ def batch_evaluate(ws: Dict[str, np.ndarray], cfgs: Dict[str, Dict[str, np.ndarr
     per_op = {k: jnp.asarray(ws[k], _F) for k in _PER_OP_KEYS}
     per_op["index"] = jnp.arange(max_ops, dtype=jnp.int32)
     per_op["preds"] = jnp.asarray(ws["preds"], jnp.int32)
-    ops_xs = {"per_op": per_op,
-              "bytes_out_all": jnp.asarray(ws["bytes_out"], _F)}
+    ops_xs = {"per_op": per_op}
     tile = {k: jnp.asarray(cfgs["tile"][k], _F) for k in _TILE_KEYS}
     chip = {k: jnp.asarray(cfgs["chip"][k], _F) for k in _CHIP_KEYS}
     fn = _jitted(key, max_ops)

@@ -87,6 +87,7 @@ def run_bayes(workloads: Sequence[str], objective_fn,
     rng = np.random.default_rng(seed)
     genomes = random_genomes(rng, cfg.init_samples)
     metrics = engine.evaluate(genomes)
+    metrics.pop("meta", None)  # concatenated per-genome arrays only
     scores = objective_fn(metrics)
     history = [float(np.nanmax(scores))]
     surr = _Surrogate(cfg.length_scale, cfg.ridge)

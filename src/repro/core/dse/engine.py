@@ -26,10 +26,24 @@ optimization, genome hillclimb) funnels its candidate scoring through one
    version-compat shim in ``repro.launch.mesh``), so the sweep scales
    across whatever devices exist; on one device it is a no-op.
 
-The engine inherits the batch evaluator's two documented simplifications
-(see ``batch_eval``): the FIFO-free activation-cache model and the
-ragged-remainder-free Eq. 3 split.  Search uses the engine; finalists are
-re-scored with the reference simulator, so reported numbers are exact.
+**Evaluation backends.**  Cache misses are simulated by one of three
+backends sharing one set of cost formulas (``simulator.costs``):
+
+* ``"scan"`` (default for search) — ``batch_eval``'s fused
+  compile+simulate scan: exact orchestrator semantics but an in-scan
+  greedy re-derivation of the Eq. 1-3 mapping (epsilon tie-breaks,
+  ragged-remainder-free splits);
+* ``"batched"`` (default *exact* backend: ``rescore()``) — compile each
+  candidate with the real Python mapper, then execute the lowered plan
+  tables in the vmapped/jitted ``simulator.batched`` executor.  Matches
+  the reference simulator to float tolerance;
+* ``"oracle"`` — the per-candidate Python ``ChipSim`` walk, kept as the
+  ground truth the other two are pinned against.
+
+Search uses the engine; finalists are re-scored through ``rescore()``
+(batched exact backend), so reported numbers are exact.  Every
+``evaluate()`` result carries a ``"meta"`` entry reporting the backend
+and the call's cache hit/miss/skip counts.
 
 An optional ``keep`` predicate lets a frontend skip simulation for
 genomes it will discard anyway (e.g. the GA's out-of-bracket children,
@@ -55,7 +69,26 @@ from .batch_eval import (_CHIP_KEYS, _TILE_KEYS, batch_evaluate,
 from .encoding import (FIELDS_PER_TILE, GENOME_LEN, _TILE_FIELDS, decode)
 
 __all__ = ["EvalEngine", "EngineStats", "genomes_to_configs",
-           "genome_areas", "canonical_genomes", "prepared_workload"]
+           "genome_areas", "canonical_genomes", "prepared_workload",
+           "BACKENDS"]
+
+BACKENDS = ("scan", "batched", "oracle")
+
+
+@functools.lru_cache(maxsize=128)
+def _prepared_graph(name: str, aggressive_int4: bool = False,
+                    enable_fusion: bool = True):
+    """Config-independent compiler passes 1-2 on one workload, cached so
+    the exact backends re-run only the per-chip mapping.  Callers must
+    treat the returned graph as read-only (map_graph does)."""
+    import copy as _copy
+    from ..compiler.fusion import fuse
+    from ..compiler.precision import assign_precision
+    g = _copy.deepcopy(build(name))
+    g = assign_precision(g, aggressive_int4=aggressive_int4)
+    if enable_fusion:
+        g = fuse(g)
+    return g
 
 
 # =============================================================================
@@ -342,7 +375,9 @@ class EvalEngine:
                  batch: int = 1024, memoize: bool = True,
                  vectorized: bool = True, shard: bool = False,
                  aggressive_int4: bool = False, enable_fusion: bool = True,
-                 memo_limit: int = 500_000):
+                 memo_limit: int = 500_000, backend: str = "scan"):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend {backend!r} not in {BACKENDS}")
         self.workloads = list(workloads)
         self.calib = calib
         self.batch = batch
@@ -351,6 +386,7 @@ class EvalEngine:
         self.shard = shard
         self.aggressive_int4 = aggressive_int4
         self.enable_fusion = enable_fusion
+        self.backend = backend
         self.stats = EngineStats(workloads=len(self.workloads))
         # genome key -> (lat (W,), en (W,), tw (W,)); areas are always
         # recomputed from the (cheap, bitwise-reproducible) config stack.
@@ -444,9 +480,13 @@ class EvalEngine:
         return {"tile": {k: v[idx] for k, v in cfgs["tile"].items()},
                 "chip": {k: v[idx] for k, v in cfgs["chip"].items()}}
 
-    def _simulate(self, cfgs, n: int):
+    def _simulate(self, cfgs, n: int, genomes: Optional[np.ndarray] = None):
         """(n, W) lat/en/tw for the first n rows of a (possibly padded)
-        config stack, sharded across devices when enabled."""
+        config stack, through this engine's backend."""
+        if self.backend != "scan":
+            return self._simulate_exact(genomes[:n],
+                                        oracle=self.backend == "oracle",
+                                        pad_to=len(cfgs["chip"]["chip_area"]))
         W = len(self.workloads)
         pad_n = len(cfgs["chip"]["chip_area"])
         lat = np.zeros((pad_n, W))
@@ -462,6 +502,60 @@ class EvalEngine:
             tw[:, j] = res["achieved_tops"] / np.maximum(power, 1e-30)
         return lat[:n], en[:n], tw[:n]
 
+    def _simulate_exact(self, genomes: np.ndarray, oracle: bool = False,
+                        pad_to: Optional[int] = None):
+        """Exact scoring: real compiler pipeline per candidate, executed by
+        the batched plan backend (or the ChipSim oracle).  Unmappable
+        (genome, workload) pairs score inf latency/energy."""
+        from ..compiler.mapper import UnmappableError, map_graph
+        from ..compiler.pipeline import lower_plan
+        from ..compiler.schedule import emit_schedule
+        from ..simulator.batched import simulate_plans
+        from ..simulator.orchestrator import simulate as oracle_simulate
+
+        genomes = np.asarray(genomes, np.int64).reshape(-1, GENOME_LEN)
+        n, W = len(genomes), len(self.workloads)
+        chips = [decode(g, f"x{i}") for i, g in enumerate(genomes)]
+        lat = np.full((n, W), np.inf)
+        en = np.full((n, W), np.inf)
+        tw = np.zeros((n, W))
+        for j, wname in enumerate(self.workloads):
+            g = _prepared_graph(wname, self.aggressive_int4,
+                                self.enable_fusion)
+            plans, rows = [], []
+            for i, chip in enumerate(chips):
+                try:
+                    placements = map_graph(g, chip, self.calib)
+                except UnmappableError:
+                    continue
+                plans.append(emit_schedule(g, placements))
+                rows.append(i)
+            if not rows:
+                continue
+            if oracle:
+                for i, plan in zip(rows, plans):
+                    r = oracle_simulate(chips[i], plan, self.calib)
+                    lat[i, j], en[i, j] = r.latency_s, r.energy_pj
+                    tw[i, j] = r.tops_per_w
+                continue
+            sel = list(rows)
+            tables = [lower_plan(p, chips[i].num_tiles)
+                      for i, p in zip(rows, plans)]
+            if pad_to is not None and len(sel) < pad_to:
+                # repeat row 0 so the jitted executor keeps a stable batch
+                # shape across calls (compile once per (bucket, max_ops))
+                reps = pad_to - len(sel)
+                sel = sel + [rows[0]] * reps
+                tables = tables + [tables[0]] * reps
+            res = simulate_plans([chips[i] for i in sel], tables, self.calib)
+            for r, i in enumerate(rows):
+                lat[i, j] = res["latency_s"][r]
+                en[i, j] = res["energy_pj"][r]
+                power = res["energy_pj"][r] * 1e-12 \
+                    / max(res["latency_s"][r], 1e-30)
+                tw[i, j] = res["achieved_tops"][r] / max(power, 1e-30)
+        return lat, en, tw
+
     # ------------------------------------------------------------- evaluate
     def evaluate(self, genomes: np.ndarray,
                  keep: Optional[Callable[[np.ndarray], np.ndarray]] = None
@@ -473,6 +567,7 @@ class EvalEngine:
         simulated and come back with inf latency/energy and zero TOPS/W.
         """
         t0 = time.perf_counter()
+        pre = dataclasses.replace(self.stats)
         genomes = np.asarray(genomes, dtype=np.int64).reshape(-1, GENOME_LEN)
         n, W = len(genomes), len(self.workloads)
         lat = np.zeros((n, W))
@@ -513,7 +608,7 @@ class EvalEngine:
             pad = self._pad_size(len(chunk))
             sel = chunk + [chunk[0]] * (pad - len(chunk))
             l, e, t = self._simulate(self._take(cfgs, np.asarray(sel)),
-                                     len(chunk))
+                                     len(chunk), genomes[np.asarray(sel)])
             for r, i in enumerate(chunk):
                 lat[i], en[i], tw[i] = l[r], e[r], t[r]
                 if self.memoize:
@@ -528,7 +623,28 @@ class EvalEngine:
             j = seen_this_call[keys[i]]
             lat[i], en[i], tw[i] = lat[j], en[j], tw[j]
         self.stats.eval_seconds += time.perf_counter() - t0
-        return {"latency": lat, "energy": en, "tops_w": tw, "area": area}
+        meta = {"backend": self.backend, "requests": n,
+                "hits": self.stats.hits - pre.hits,
+                "misses": self.stats.misses - pre.misses,
+                "skips": self.stats.skips - pre.skips}
+        meta["hit_rate"] = meta["hits"] / max(n, 1)
+        return {"latency": lat, "energy": en, "tops_w": tw, "area": area,
+                "meta": meta}
+
+    def rescore(self, genomes: np.ndarray, oracle: bool = False
+                ) -> Dict[str, np.ndarray]:
+        """Exact re-scoring of finalists: the real compiler pipeline per
+        candidate, executed by the batched plan backend (``oracle=True``
+        walks the Python ChipSim instead).  Bypasses the memo — results
+        are exact regardless of this engine's search backend."""
+        genomes = np.asarray(genomes, dtype=np.int64).reshape(-1, GENOME_LEN)
+        lat, en, tw = self._simulate_exact(genomes, oracle=oracle)
+        return {"latency": lat, "energy": en, "tops_w": tw,
+                "area": self.areas(genomes),
+                "meta": {"backend": "oracle" if oracle else "batched",
+                         "requests": len(genomes), "hits": 0,
+                         "misses": len(genomes), "skips": 0,
+                         "hit_rate": 0.0}}
 
     def warmup(self, buckets: Sequence[int] = tuple(range(16, 68, 4))
                ) -> None:
@@ -540,7 +656,8 @@ class EvalEngine:
         g = np.zeros((1, GENOME_LEN), np.int64)
         cfgs = self._configs(g)
         for b in sorted({self._pad_size(b) for b in buckets}):
-            self._simulate(self._take(cfgs, np.zeros(b, np.int64)), 1)
+            self._simulate(self._take(cfgs, np.zeros(b, np.int64)), 1,
+                           np.repeat(g, b, axis=0))
 
     def areas(self, genomes: np.ndarray) -> np.ndarray:
         """Chip areas only — no simulation, no cache interaction.  The

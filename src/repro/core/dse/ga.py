@@ -103,6 +103,7 @@ def run_ga(sweep: SweepResult, bracket: float,
 
     def evaluate(genomes: np.ndarray):
         m = engine.evaluate(genomes, keep=keep if prefilter else None)
+        m.pop("meta", None)  # best_metrics holds per-genome arrays only
         fit = _fitness(m["energy"], m["tops_w"], m["latency"], m["area"],
                        bracket, e_homo, cfg.alpha)
         return fit, m

@@ -31,10 +31,24 @@ __all__ = [
     "OpNode",
     "WorkloadGraph",
     "OpTensor",
+    "PlanTensor",
     "MAX_PREDS",
+    "AXIS_CODES",
+    "bucket_ops",
 ]
 
 MAX_PREDS = 4  # fixed predecessor fan-in for the SoA encoding (padded with -1)
+
+# Split-axis integer codes shared by slice_op, the plan lowering
+# (compiler.pipeline.lower_plan) and the batched executor.
+AXIS_CODES = {"": -1, "OC": 0, "B": 1, "IC": 2}
+
+
+def bucket_ops(n: int) -> int:
+    """Pad op counts to multiples of 64: similar-size workloads share jit
+    caches without power-of-two padding on the scan length (a 25 %
+    scan-step tax on an 821-op graph padded to 1024)."""
+    return max(((n + 63) // 64) * 64, 64)
 
 
 class OpClass(enum.IntEnum):
@@ -326,3 +340,60 @@ class OpTensor:
             for j, p in enumerate(nd.preds[:MAX_PREDS]):
                 preds[i, j] = p
         return OpTensor(name=g.name, num_ops=n, arrays=arrays, preds=preds)
+
+
+# Placement fields of the plan op-table (PlanTensor), alongside the
+# _SCALAR_FIELDS op fields.  ``owner`` is the first placement tile
+# (ChipSim's ``pl.tiles[0]``), ``n_split`` the placement width, and
+# ``split_mask`` the per-instance-slot membership of a split execution.
+PLAN_FIELDS: Tuple[Tuple[str, np.dtype], ...] = (
+    ("owner", np.int32),
+    ("n_split", np.int32),
+    ("split_axis", np.int32),   # AXIS_CODES; -1 on single placements
+)
+
+
+@dataclasses.dataclass
+class PlanTensor:
+    """SoA encoding of a compiled ExecutionPlan (paper §3.2 output).
+
+    The op-table the batched simulator executes: the workload's
+    ``OpTensor`` (ops padded to a fixed row count) plus per-op placement
+    integer arrays and the config-independent auxiliaries the orchestrator
+    needs (per-pred byte shares, fused-group PPM/refund credits).
+
+    Built by ``repro.core.compiler.pipeline.lower_plan``; executed by
+    ``repro.core.simulator.batched``.
+    """
+
+    ops: OpTensor
+    owner: np.ndarray        # (max_ops,) int32; -1 on fused/padding rows
+    n_split: np.ndarray      # (max_ops,) int32; 0 on fused/padding rows
+    split_axis: np.ndarray   # (max_ops,) int32; AXIS_CODES values
+    split_mask: np.ndarray   # (max_ops, num_tile_slots) int8
+    num_tiles: int           # instantiated tiles of the target chip
+    aux: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+
+    @property
+    def name(self) -> str:
+        return self.ops.name
+
+    @property
+    def max_ops(self) -> int:
+        return self.ops.max_ops
+
+    def validate(self) -> None:
+        n = self.ops.num_ops
+        fused = self.ops.arrays["fused"]
+        for i in range(n):
+            if fused[i]:
+                continue
+            if not (0 <= self.owner[i] < self.num_tiles):
+                raise ValueError(f"{self.name}: op {i} owner {self.owner[i]} "
+                                 f"outside 0..{self.num_tiles - 1}")
+            k = int(self.n_split[i])
+            if k < 1 or k != int(self.split_mask[i].sum()):
+                raise ValueError(f"{self.name}: op {i} split width {k} "
+                                 f"inconsistent with its mask")
+            if k > 1 and int(self.split_axis[i]) not in (0, 1, 2):
+                raise ValueError(f"{self.name}: op {i} split without axis")

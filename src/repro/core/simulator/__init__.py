@@ -1,21 +1,53 @@
 """Heterogeneity-aware analytical simulator (paper §3.3).
 
-``modules``      — per-module cycle/energy models (MAC engines, DRAM, SRAM,
-                   IRF/ORF, DSP, SFU; Eqs. 4-5).
-``tile``         — routes one compiled operator through the MAC / DSP /
-                   Special-Function execution path of one tile.
+Module map — two execution backends around one shared cost model:
+
+``costs``        — backend-neutral per-module cycle/energy formulas
+                   (Eqs. 2/4-6) written against an array namespace ``xp``
+                   (numpy or jax.numpy), plus the byte- and slot-bounded
+                   FIFO activation-cache semantics (§3.3.4).  Every
+                   backend below executes THIS code, so the math cannot
+                   drift between them.
+``modules``      — scalar/TileTemplate-typed wrappers over ``costs`` kept
+                   for the historical per-module entry points.
+``tile``         — ``TileSim``: routes one compiled operator through the
+                   MAC / DSP / Special-Function path of one tile.
 ``area``         — analytical area model (Eq. 7).
-``orchestrator`` — chip-level schedule execution: dynamic DRAM bandwidth
-                   sharing, cross-tile activation caching, NoC transfers,
-                   clock/power gating, makespan + Eq. 6 energy.
-``outputs``      — result dataclasses, per-module breakdowns, chrome trace.
+``orchestrator`` — ``ChipSim``, the *reference oracle*: per-operator
+                   Python walk of a compiled plan with dynamic DRAM
+                   bandwidth sharing, FIFO activation caching, NoC
+                   transfers, power gating, Eq. 3 splits.  Keeps the rich
+                   outputs (per-op trace, per-tile breakdowns, chrome
+                   trace).
+``batched``      — the *fast path*: the same orchestration as jittable
+                   array ops over an SoA plan op-table
+                   (``ir.PlanTensor``, lowered by
+                   ``compiler.pipeline.lower_plan``), ``vmap``-ed across
+                   the candidate axis.  >= 5x (measured ~50x) over the
+                   per-candidate oracle on a 64-genome population
+                   (benchmarks/perf_micro.py).
+``outputs``      — result dataclasses, per-module breakdowns, chrome
+                   trace, and the ``SimResult.golden_dict`` snapshot.
+
+Oracle-vs-batched parity is pinned three ways: frozen golden traces
+(tests/golden/*.json — regenerate with ``pytest --regen-golden`` after an
+*intentional* cost-model change; the comparator prints the numeric diff),
+property-based random (graph x chip) agreement
+(tests/test_batched_parity.py), and the full 20-workload sweep under
+``-m slow``.  The DSE search heuristic (``dse.batch_eval``) shares the
+same ``costs`` formulas and FIFO cache but re-derives placements in-scan.
+
+``batched`` is intentionally NOT imported here: importing the oracle must
+not pull in jax/XLA.
 """
 from .outputs import OpResult, TileBreakdown, SimResult
 from .area import tile_area, chip_area
+from .costs import ActivationCache, CostModel, cost_model
 from .tile import TileSim
 from .orchestrator import ChipSim, simulate
 
 __all__ = [
     "OpResult", "TileBreakdown", "SimResult", "tile_area", "chip_area",
-    "TileSim", "ChipSim", "simulate",
+    "ActivationCache", "CostModel", "cost_model", "TileSim", "ChipSim",
+    "simulate",
 ]

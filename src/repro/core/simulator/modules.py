@@ -1,51 +1,62 @@
-"""Per-module cycle and energy models (paper §3.3.1).
+"""Per-module cycle and energy models (paper §3.3.1) — reference wrappers.
 
-Every function here is a pure float->float model of one hardware module,
-shared by the reference tile simulator.  The jitted DSE batch evaluator
-(``repro.core.dse.batch_eval``) and the Pallas kernel
-(``repro.kernels.dse_eval``) mirror this math 1:1 and are pinned to it by
-equivalence tests (tests/test_batch_eval.py) — treat this file as the
-oracle when editing either.
+The formulas themselves live in ``repro.core.simulator.costs`` as
+backend-neutral array code shared verbatim by this reference path, the
+batched plan executor (``simulator.batched``) and the jitted DSE scan
+evaluator (``dse.batch_eval``) — the three backends cannot drift because
+they execute the same code.  This module keeps the historical
+scalar/TileTemplate-typed entry points used by ``TileSim`` and tests.
 """
 from __future__ import annotations
 
 import math
 from typing import Dict, Tuple
 
+import numpy as np
+
 from ..arch import Dataflow, Engine, Sparsity, TileTemplate
-from ..calibrate.asap7 import CalibrationTable
+from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
 from ..ir import OpType, PRECISION_BYTES
+from .costs import (ACC_BYTES, CACHE_FRAC, DSP_OPS_PER_ELEM, cost_model)
+
+# mac_tiling / mac_cycles / sram_traffic are calibration-free — any table
+# binds the same formulas; reuse one cached model.
+DEFAULT_CALIB_FOR_TILING = DEFAULT_CALIB
 
 __all__ = [
     "DSP_OPS_PER_ELEM", "ACC_BYTES", "mac_tiling", "mac_cycles",
     "sram_traffic", "dsp_cycles_energy", "sfu_cycles_energy",
-    "dram_cycles_energy", "pick_dataflow",
+    "dram_cycles_energy", "pick_dataflow", "tile_cost_dict",
 ]
 
-# Lane-ops each DSP-class operator spends per element (14-instruction SIMD
-# ISA of §3.3.1: vadd, vmul, vexp, vreduce, vlut, ...).
-DSP_OPS_PER_ELEM: Dict[int, float] = {
-    int(OpType.ADD): 1.0,
-    int(OpType.MUL): 1.0,
-    int(OpType.SOFTMAX): 5.0,      # vmax, vsub+vexp, vreduce, vdiv
-    int(OpType.LAYERNORM): 7.0,
-    int(OpType.RMSNORM): 5.0,
-    int(OpType.GELU): 8.0,         # tanh polynomial
-    int(OpType.SILU): 5.0,
-    int(OpType.RELU): 1.0,
-    int(OpType.SIGMOID): 4.0,
-    int(OpType.POOL): 1.0,
-    int(OpType.REDUCE): 1.0,
-    int(OpType.GATHER): 2.0,       # address gen + move
-    int(OpType.SCATTER): 3.0,      # address gen + read-modify-write
-    int(OpType.SSM_SCAN): 6.0,     # per-element recurrence work
-    int(OpType.ROPE): 4.0,
-}
-
-# Accumulator width (partial sums) per input precision index.
-ACC_BYTES = (4.0, 4.0, 4.0, 4.0, 4.0)
-
 _BURST = 64.0  # DRAM burst alignment (bytes)
+
+
+def tile_cost_dict(tile: TileTemplate, cache_frac: float = CACHE_FRAC
+                   ) -> Dict[str, float]:
+    """TileTemplate -> the scalar field dict the shared CostModel reads."""
+    return {
+        "exists": 1.0,
+        "num_macs": float(tile.num_macs),
+        "rows": float(tile.rows),
+        "cols": float(tile.cols),
+        "engine": float(int(tile.engine)),
+        "prec_mask": float(tile.precision_mask),
+        "asym_mac": float(int(tile.asym_mac)),
+        "sparsity": float(int(tile.sparsity)),
+        "dataflow": float(int(tile.dataflow)),
+        "sram_kb": float(tile.sram_kb),
+        "dsp_lanes": float(tile.dsp_count * tile.dsp_simd),
+        "dsp_count": float(tile.dsp_count),
+        "sfu_mask": float(tile.sfu_mask),
+        "sfu_parallel": float(tile.sfu_parallel),
+        "double_buffer": float(tile.double_buffer),
+        "pipeline_depth": float(tile.pipeline_depth),
+        "clock_hz": tile.clock_mhz * 1e6,
+        "sram_bpc": max(tile.sram_banks, 1) * 16.0,
+        "max_prec": float(int(tile.max_precision)),
+        "cache_cap": tile.sram_kb * 1024.0 * cache_frac,
+    }
 
 
 def pick_dataflow(tile: TileTemplate, m: float, k: float, n: float) -> Dataflow:
@@ -59,101 +70,43 @@ def pick_dataflow(tile: TileTemplate, m: float, k: float, n: float) -> Dataflow:
 
 def mac_tiling(tile: TileTemplate, m: float, k: float, n: float,
                bpe: float, cache_frac: float = 0.25) -> Tuple[float, float, float]:
-    """SRAM-budget tiling pass: decompose (M,K,N) so the working set
-    (weights + double-buffered activations + output tile) fits the
-    working portion of the per-tile SRAM (paper §3.3.1).
-
-    Returns (m_t, k_t, n_t).  ``cache_frac`` of SRAM is reserved for the
-    cross-tile activation cache (§3.3.4).
-    """
-    budget = tile.sram_kb * 1024.0 * (1.0 - cache_frac)
-    m_t = min(m, float(tile.rows))
-    n_t = min(n, float(tile.cols))
-    db = 2.0 if tile.double_buffer else 1.0
-    acc = ACC_BYTES[0]
-    out_bytes = m_t * n_t * acc
-    denom = (m_t + n_t) * bpe * db
-    k_fit = (budget - out_bytes) / max(denom, 1.0)
-    k_t = max(min(k, k_fit), min(k, 16.0))
-    return m_t, k_t, max(n_t, 1.0)
+    """SRAM-budget tiling pass (paper §3.3.1): returns (m_t, k_t, n_t);
+    ``cache_frac`` of SRAM is reserved for the activation cache (§3.3.4)."""
+    cm = cost_model(DEFAULT_CALIB_FOR_TILING)
+    T = tile_cost_dict(tile, cache_frac)
+    m_t, k_t, n_t = cm.mac_tiling(T, float(m), float(k), float(n),
+                                  float(bpe), cache_frac)
+    return float(m_t), float(k_t), float(n_t)
 
 
 def mac_cycles(tile: TileTemplate, m: float, k: float, n: float,
                eta: float, m_t: float, k_t: float, n_t: float) -> float:
-    """Engine-specific compute-cycle model.
-
-    Systolic (Eq. 4):  C = sum_{n,k} [ D + sum_m (m_eff + k_eff + D - 2) ]
-    with pipeline depth D; sparsity skipping shortens the streamed k_eff.
-    Spatial/dot-product engines have no wavefront ramp; CIM halves the
-    effective clock via the weight-write overhead (modelled as 2x cycles).
-    """
-    if m <= 0 or k <= 0 or n <= 0:
-        return 0.0
-    D = float(tile.pipeline_depth)
-    n_tiles_n = math.ceil(n / n_t)
-    n_tiles_k = math.ceil(k / k_t)
-    n_tiles_m = math.ceil(m / m_t)
-    # effective per-tile dims (average including the ragged last tile)
-    m_eff = m / n_tiles_m
-    k_eff = (k / n_tiles_k) / eta
-    if tile.engine == Engine.SYSTOLIC:
-        per_m = m_eff + k_eff + D - 2.0
-        return n_tiles_n * n_tiles_k * (D + n_tiles_m * per_m)
-    if tile.engine in (Engine.SPATIAL, Engine.DOT):
-        ideal = (m * k * n / eta) / max(tile.num_macs, 1.0)
-        # spatial arrays lose a mapping-efficiency factor on ragged tiles
-        util = (m_eff / m_t) * (min(n, n_t) / n_t)
-        return ideal / max(min(util, 1.0), 0.25) + D * n_tiles_n * n_tiles_k
-    # CIM: mults happen in the array, but every k-tile swap rewrites the
-    # bit-cells — throughput is half the digital systolic equivalent.
-    ideal = (m * k * n / eta) / max(tile.num_macs, 1.0)
-    return 2.0 * ideal + D * n_tiles_n * n_tiles_k
+    """Engine-specific compute-cycle model (Eq. 4)."""
+    cm = cost_model(DEFAULT_CALIB_FOR_TILING)
+    return float(cm.mac_cycles(tile_cost_dict(tile), float(m), float(k),
+                               float(n), float(eta), float(m_t), float(k_t),
+                               float(n_t)))
 
 
 def sram_traffic(dataflow: Dataflow, m: float, k: float, n: float,
                  bpe: float, m_t: float, k_t: float, n_t: float) -> Tuple[float, float, float]:
-    """Tiling-aware SRAM traffic (bytes in, weights, out) from dataflow reuse.
-
-    WS: weights streamed once; activations re-read per n-tile; partial sums
-        spill per extra k-tile (read-modify-write).
-    OS: outputs resident; inputs re-read per n-tile, weights per m-tile.
-    RS: row-stationary splits the re-read factors (Eyeriss-style balance).
-    """
-    tiles_m = math.ceil(m / m_t)
-    tiles_k = math.ceil(k / k_t)
-    tiles_n = math.ceil(n / n_t)
-    acc = ACC_BYTES[0]
-    if dataflow == Dataflow.WS:
-        in_b = m * k * bpe * tiles_n
-        w_b = k * n * bpe
-        out_b = m * n * acc * (2.0 * tiles_k - 1.0)
-    elif dataflow == Dataflow.OS:
-        in_b = m * k * bpe * tiles_n
-        w_b = k * n * bpe * tiles_m
-        out_b = m * n * acc
-    else:  # RS
-        in_b = m * k * bpe * math.sqrt(tiles_n)
-        w_b = k * n * bpe * math.sqrt(tiles_m)
-        out_b = m * n * acc * math.sqrt(tiles_k)
-    return in_b, w_b, out_b
+    """Tiling-aware SRAM traffic (bytes in, weights, out) from dataflow
+    reuse (WS / OS / RS; see CostModel.sram_traffic)."""
+    cm = cost_model(DEFAULT_CALIB_FOR_TILING)
+    T = {"dataflow": float(int(dataflow))}
+    in_b, w_b, out_b, _ = cm.sram_traffic(T, float(m), float(k), float(n),
+                                          float(bpe), float(m_t), float(k_t),
+                                          float(n_t))
+    return float(in_b), float(w_b), float(out_b)
 
 
 def dsp_cycles_energy(tile: TileTemplate, op_type: int, elems: float,
                       seq_len: float, calib: CalibrationTable) -> Tuple[float, float]:
-    """Vector-DSP path.  The SSM scan carries a sequence-length sequential
-    multiplier (paper §3.3.1): only the per-step work parallelizes."""
-    if tile.dsp_count <= 0 or elems <= 0:
-        return 0.0, 0.0
-    ops_pe = DSP_OPS_PER_ELEM.get(int(op_type), 2.0)
-    lane_ops = elems * ops_pe
-    lanes = float(tile.dsp_count * tile.dsp_simd)
-    if int(op_type) == int(OpType.SSM_SCAN) and seq_len > 1:
-        per_step = (elems / seq_len) * ops_pe
-        cycles = seq_len * math.ceil(per_step / lanes)
-    else:
-        cycles = math.ceil(lane_ops / lanes)
-    energy = lane_ops * calib.e_dsp_pj_per_lane_op
-    return float(cycles), energy
+    """Vector-DSP path; the SSM scan carries a sequence-length sequential
+    multiplier (paper §3.3.1)."""
+    cyc, en = cost_model(calib).dsp_cycles_energy(
+        tile_cost_dict(tile), int(op_type), float(elems), float(seq_len))
+    return float(cyc), float(en)
 
 
 def sfu_cycles_energy(tile: TileTemplate, op_type: int, elems: float,
@@ -161,23 +114,10 @@ def sfu_cycles_energy(tile: TileTemplate, op_type: int, elems: float,
                       calib: CalibrationTable) -> Tuple[float, float]:
     """Special-function path (paper §3.3.1): radix-2 FFT N log2 N cycles,
     LIF ceil(N/N_par)*T cycles, Horner polynomial N*d cycles."""
-    par = max(float(tile.sfu_parallel), 1.0)
-    if op_type == int(OpType.FFT):
-        n = max(fft_n, 2.0)
-        transforms = max(elems / n, 1.0)
-        lg = math.log2(n)
-        cycles = transforms * math.ceil(n * lg / par)
-        butterflies = transforms * (n / 2.0) * lg
-        return cycles, butterflies * calib.e_fft_pj_per_butterfly
-    if op_type == int(OpType.SNN_LIF):
-        t = max(snn_t, 1.0)
-        cycles = math.ceil(elems / par) * t
-        return cycles, elems * t * calib.e_lif_pj_per_neuron_step
-    if op_type == int(OpType.POLY):
-        d = max(poly_degree, 1.0)
-        cycles = elems * d / par
-        return cycles, elems * d * calib.e_poly_pj_per_fma
-    raise ValueError(f"not a special op: {op_type}")
+    cyc, en = cost_model(calib).sfu_cycles_energy(
+        tile_cost_dict(tile), int(op_type), float(elems), float(fft_n),
+        float(poly_degree), float(snn_t))
+    return float(cyc), float(en)
 
 
 def dram_cycles_energy(bytes_rd: float, bytes_wr: float, bw_gbps: float,

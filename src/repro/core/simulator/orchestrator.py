@@ -4,12 +4,18 @@ heterogeneous tile mix with
 * dynamic DRAM bandwidth sharing — only tiles whose previous operator has
   not finished count as active; per-tile bandwidth is BW_total / N_active;
 * cross-tile activation caching — each tile's SRAM splits into a working
-  set and a FIFO-evicted activation cache; consumers see a local hit
-  (no DRAM read), a cross-tile NoC DMA, or a full DRAM miss;
+  set and a FIFO-evicted activation cache (byte- and slot-bounded, see
+  ``costs.ActivationCache``); consumers see a local hit (no DRAM read), a
+  cross-tile NoC DMA, or a full DRAM miss;
 * clock gating (idle modules draw no dynamic energy — implicit in the
   per-module accounting) and power gating (tiles with no scheduled work
   leak at a 5 % residual);
 * NoC transfer costs and split-op reductions (Eq. 3).
+
+This is the *reference oracle*: the batched backend
+(``simulator.batched``) re-expresses this per-operator loop as jittable
+array ops over an SoA plan table and is pinned to it by golden traces and
+the property-based parity suite.
 """
 from __future__ import annotations
 
@@ -21,12 +27,13 @@ from ..arch import ChipConfig, Interconnect, TileTemplate
 from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
 from ..ir import OpClass, OpNode, WorkloadGraph, slice_op
 from .area import chip_area, tile_area
+from .costs import (ACT_CACHE_SLOTS, CACHE_FRAC, ActivationCache,
+                    noc_transfer_energy_pj, noc_transfer_seconds)
 from .outputs import EnergyBreakdown, OpResult, SimResult, TileBreakdown
 from .tile import TileSim
 
-__all__ = ["Placement", "ExecutionPlan", "ChipSim", "simulate", "noc_hops"]
-
-CACHE_FRAC = 0.25  # fraction of per-tile SRAM reserved for the activation cache
+__all__ = ["Placement", "ExecutionPlan", "ChipSim", "simulate", "noc_hops",
+           "CACHE_FRAC"]
 
 
 @dataclasses.dataclass
@@ -73,12 +80,13 @@ class ChipSim:
 
     # -------------------------------------------------------------- helpers
     def noc_seconds(self, bytes_: float) -> float:
-        cycles = math.ceil(bytes_ / self.chip.noc_bytes_per_cycle) \
-            + self.hops * self.chip.noc_base_cycles
-        return cycles / self.ref_clock_hz
+        return float(noc_transfer_seconds(
+            math, bytes_, self.chip.noc_bytes_per_cycle, self.hops,
+            self.chip.noc_base_cycles, self.ref_clock_hz))
 
     def noc_energy_pj(self, bytes_: float) -> float:
-        return bytes_ * self.calib.e_noc_pj_per_byte_hop * self.hops
+        return float(noc_transfer_energy_pj(
+            math, bytes_, self.calib.e_noc_pj_per_byte_hop, self.hops))
 
     # ------------------------------------------------------------------ run
     def run(self, plan: ExecutionPlan) -> SimResult:
@@ -87,12 +95,14 @@ class ChipSim:
         tile_finish = [0.0] * n_tiles
         op_finish: Dict[int, float] = {}
         op_tile: Dict[int, int] = {}
-        # Activation cache (§3.3.4), fits-capacity model: an output is held
-        # in its producer tile's cache partition iff it fits.  The paper's
-        # FIFO-eviction dynamics are collapsed to this predicate so the
-        # reference and the vmapped batch evaluator are bit-identical
-        # (DESIGN.md §8); eviction re-writes are likewise not charged.
+        # Activation cache (§3.3.4): each tile's cache partition is a FIFO
+        # bounded in bytes (CACHE_FRAC of SRAM) and entries
+        # (ACT_CACHE_SLOTS); inserting a new output evicts oldest-first
+        # until it fits, and outputs larger than the partition spill.
+        # Eviction re-writes are not charged (uniform-optimism
+        # simplification shared with the batched backends).
         cache_cap = [t.sram_kb * 1024.0 * CACHE_FRAC for t in self.templates]
+        caches = [ActivationCache(i, cap) for i, cap in enumerate(cache_cap)]
         cached_at: Dict[int, int] = {}  # op idx -> tile holding its output
 
         breakdowns = [TileBreakdown(i, self.templates[i].name) for i in range(n_tiles)]
@@ -106,8 +116,7 @@ class ChipSim:
                 fused_map.setdefault(nd.fused_into, []).append(j)
 
         def cache_insert(tidx: int, op_idx: int, nbytes: float) -> None:
-            if nbytes <= cache_cap[tidx]:
-                cached_at[op_idx] = tidx
+            caches[tidx].insert(op_idx, nbytes, cached_at)
 
         for i, op in enumerate(g.nodes):
             if op.fused_into >= 0:

@@ -109,6 +109,36 @@ class SimResult:
     def tops_per_mm2(self) -> float:
         return self.achieved_tops / self.area_mm2 if self.area_mm2 > 0 else 0.0
 
+    def golden_dict(self) -> Dict:
+        """Full-precision snapshot for the golden-trace regression harness
+        (tests/golden/): chip metrics, per-module energy, per-tile stats.
+        Regenerate with ``pytest --regen-golden`` after an intentional
+        cost-model change — the comparator then shows the numeric diff."""
+        return {
+            "workload": self.workload,
+            "arch": self.arch,
+            "latency_s": self.latency_s,
+            "energy_pj": self.energy_pj,
+            "area_mm2": self.area_mm2,
+            "peak_tops": self.peak_tops,
+            "achieved_tops": self.achieved_tops,
+            "total_macs": self.total_macs,
+            "arithmetic_intensity": self.arithmetic_intensity,
+            "num_ops": len(self.ops),
+            "energy_breakdown": self.energy_breakdown.as_dict(),
+            "tiles": [
+                {
+                    "template": b.template,
+                    "ops": b.ops,
+                    "macs": b.macs,
+                    "active_s": b.active_s,
+                    "power_gated": bool(b.power_gated),
+                    "energy_pj": b.energy.total_pj,
+                }
+                for b in self.tiles
+            ],
+        }
+
     def summary(self) -> Dict[str, float]:
         return {
             "workload": self.workload,

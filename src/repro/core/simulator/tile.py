@@ -1,4 +1,4 @@
-"""Per-tile module pipeline (paper §3.3.1-§3.3.3).
+"""Per-tile module pipeline (paper §3.3.1-§3.3.3) — the reference oracle.
 
 Routes one compiled operator through one of the three execution paths
 (MAC, DSP, Special-Function) of a tile, accumulating cycles and energy at
@@ -7,26 +7,57 @@ each of the seven modules, and combines them with the total-cycle model
 *lowered* (paper §2.5): FFT onto the MAC array as an O(N^2) DFT matmul,
 LIF and polynomial onto the DSP with their sequential multipliers, MAC ops
 onto the DSP when a Special-Function tile must run a stray matmul.
+
+All arithmetic is delegated to the backend-neutral ``simulator.costs``
+CostModel — the identical code the batched plan executor and the jitted
+DSE evaluator run under vmap — so the oracle and the array backends share
+one set of calibrated formulas by construction.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Optional
+from typing import Dict, Optional
 
 from ..arch import TileTemplate, SFU_FFT, SFU_SNN, SFU_POLY
 from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
-from ..ir import OpClass, OpNode, OpType, PRECISION_BYTES
-from . import modules
+from ..ir import OpClass, OpNode, OpType
+from .costs import cost_model
+from .modules import tile_cost_dict
 from .outputs import EnergyBreakdown
 
-__all__ = ["TileSim", "OpExec"]
+__all__ = ["TileSim", "OpExec", "op_cost_dict"]
 
 _SFU_FOR_OP = {
     int(OpType.FFT): SFU_FFT,
     int(OpType.SNN_LIF): SFU_SNN,
     int(OpType.POLY): SFU_POLY,
 }
+
+_PATH_NAME = {0: "MAC", 1: "DSP", 2: "SFU"}
+_ROOFLINE_NAME = {0: "compute", 1: "memory"}
+
+
+def op_cost_dict(op: OpNode) -> Dict[str, float]:
+    """OpNode -> the scalar field dict the shared CostModel reads."""
+    return {
+        "op_type": int(op.op_type),
+        "op_cls": int(op.op_cls),
+        "macs": float(op.macs),
+        "elems": float(op.elems),
+        "m": float(op.m),
+        "k": float(op.k),
+        "n": float(op.n),
+        "precision": int(op.precision),
+        "bytes_in": float(op.bytes_in),
+        "bytes_w": float(op.bytes_w),
+        "bytes_out": float(op.bytes_out),
+        "act_sparsity": float(op.act_sparsity),
+        "w_sparsity": float(op.w_sparsity),
+        "fft_n": float(op.fft_n),
+        "poly_degree": float(op.poly_degree),
+        "snn_timesteps": float(op.snn_timesteps),
+        "seq_len": float(op.seq_len),
+    }
 
 
 @dataclasses.dataclass
@@ -41,7 +72,7 @@ class OpExec:
 
 
 class TileSim:
-    """Analytical model of one tile instance."""
+    """Analytical model of one tile instance (scalar CostModel frontend)."""
 
     def __init__(self, tile: TileTemplate, calib: CalibrationTable = DEFAULT_CALIB,
                  cache_frac: float = 0.25):
@@ -51,6 +82,8 @@ class TileSim:
         self.clock_hz = tile.clock_mhz * 1e6
         # SRAM staging bandwidth: banks x 16-byte word per cycle
         self.sram_bpc = max(tile.sram_banks, 1) * 16.0
+        self._cm = cost_model(calib)
+        self._T = tile_cost_dict(tile, cache_frac)
 
     # ------------------------------------------------------------------ API
     def supports(self, op: OpNode) -> bool:
@@ -59,45 +92,13 @@ class TileSim:
         The precision set is a property of the MAC datapath; the vector DSP
         and SFUs are FP16-native in every tile, so only ops that execute on
         the MAC array check precision."""
-        t = self.tile
-        cls = op.op_cls
-        if cls == OpClass.MAC:
-            # MAC array when the datapath matches; any DSP can lower a
-            # stray mismatched-precision matmul (slowly)
-            if t.num_macs > 0 and t.supports_precision(op.precision):
-                return True
-            return t.dsp_count > 0
-        if cls == OpClass.DSP:
-            return t.dsp_count > 0
-        # SPECIAL: native SFU, MAC lowering (FFT), or DSP lowering
-        need = _SFU_FOR_OP[int(op.op_type)]
-        if t.sfu_mask & need:
-            return True
-        if (int(op.op_type) == int(OpType.FFT) and t.num_macs > 0
-                and t.supports_precision(op.precision)):
-            return True
-        return t.dsp_count > 0
+        return bool(self._cm.supports(self._T, op_cost_dict(op)))
 
     def roofline_cycles(self, op: OpNode, bw_gbps: float) -> float:
         """Mapper's cycle estimate (Eq. 2): max of compute- and
         bandwidth-bound counts.  Cheap, used for placement decisions."""
-        t = self.tile
-        total_bytes = op.bytes_in + op.bytes_w + op.bytes_out
-        bpc = bw_gbps * 1e9 / self.clock_hz
-        c_bw = total_bytes / max(bpc, 1e-9)
-        if op.op_cls == OpClass.MAC:
-            if t.num_macs > 0 and t.supports_precision(op.precision):
-                eta = self.calib.eta(int(t.sparsity), op.act_sparsity, op.w_sparsity)
-                c_cmp = op.macs / (t.num_macs * eta)
-            else:  # DSP lowering of a stray matmul (must match execute())
-                lanes = float(max(t.dsp_count * t.dsp_simd, 1))
-                c_cmp = math.ceil(2.0 * op.macs / lanes)
-        elif op.op_cls == OpClass.SPECIAL:
-            c_cmp, _ = self._special_cycles_energy(op)
-        else:
-            c_cmp, _ = modules.dsp_cycles_energy(
-                t, int(op.op_type), float(op.elems), float(op.seq_len), self.calib)
-        return max(c_cmp, c_bw)
+        return float(self._cm.roofline_cycles(self._T, op_cost_dict(op),
+                                              float(bw_gbps)))
 
     def execute(self, op: OpNode, bw_gbps: float, dram_rd: float,
                 dram_wr: float) -> OpExec:
@@ -106,155 +107,20 @@ class TileSim:
         ``dram_rd`` / ``dram_wr`` are the effective DRAM bytes after the
         orchestrator's cross-tile activation-cache adjustment (§3.3.4).
         """
-        t = self.tile
-        cls = op.op_cls
-        e = EnergyBreakdown()
-        bpe = float(PRECISION_BYTES[op.precision])
-
-        if cls == OpClass.MAC and t.num_macs > 0 \
-                and t.supports_precision(op.precision):
-            path = "MAC"
-            c_cmp = self._mac_compute(op, e, bpe)
-            c_mem = self._mac_sram(op, e, bpe)
-        elif cls == OpClass.SPECIAL:
-            path, c_cmp, c_mem = self._special(op, e, bpe)
-        elif cls == OpClass.MAC:
-            # stray matmul on a Special-Function tile (or a precision-
-            # mismatched MAC tile): DSP lowering at 2 lane-ops per MAC
-            path = "DSP"
-            lanes = float(max(t.dsp_count * t.dsp_simd, 1))
-            lane_ops = 2.0 * op.macs
-            c_cmp = math.ceil(lane_ops / lanes)
-            e.dsp += lane_ops * self.calib.e_dsp_pj_per_lane_op
-            c_mem = self._stream_sram(op, e)
-        else:
-            path = "DSP"
-            c_cmp, e_dsp = modules.dsp_cycles_energy(
-                t, int(op.op_type), float(op.elems), float(op.seq_len), self.calib)
-            e.dsp += e_dsp
-            c_mem = self._stream_sram(op, e)
-
-        c_dram, e_dram = modules.dram_cycles_energy(
-            dram_rd, dram_wr, bw_gbps, self.clock_hz, self.calib)
-        e.dram += e_dram
-        # load/store port DMA: 64 B/cycle each direction
-        c_lp = math.ceil(dram_rd / 64.0)
-        c_sp = math.ceil(dram_wr / 64.0)
-
-        # Eq. 5: double-buffering overlaps compute, memory staging and DRAM
-        if t.double_buffer:
-            c_tot = max(c_cmp, c_mem, c_dram) + c_lp + c_sp
-        else:
-            c_tot = c_cmp + c_mem + c_dram + c_lp + c_sp
-        roofline = "compute" if c_cmp >= max(c_mem, c_dram) else "memory"
-        return OpExec(cycles=c_tot, seconds=c_tot / self.clock_hz, energy=e,
-                      path=path, roofline=roofline, dram_rd=dram_rd,
-                      dram_wr=dram_wr)
-
-    # ------------------------------------------------------------- MAC path
-    def _mac_compute(self, op: OpNode, e: EnergyBreakdown, bpe: float) -> float:
-        t = self.tile
-        eta = self.calib.eta(int(t.sparsity), op.act_sparsity, op.w_sparsity)
-        m_t, k_t, n_t = modules.mac_tiling(t, op.m, op.k, op.n, bpe, self.cache_frac)
-        self._last_tiling = (m_t, k_t, n_t)
-        c_cmp = modules.mac_cycles(t, op.m, op.k, op.n, eta, m_t, k_t, n_t)
-        eff_macs = op.macs / eta  # sparsity-aware MAC count (§3.3.1)
-        e.compute += eff_macs * self.calib.mac_energy(
-            int(op.precision), int(t.engine), int(t.max_precision))
-        return c_cmp
-
-    def _mac_sram(self, op: OpNode, e: EnergyBreakdown, bpe: float) -> float:
-        t = self.tile
-        m_t, k_t, n_t = self._last_tiling
-        df = modules.pick_dataflow(t, op.m, op.k, op.n)
-        in_b, w_b, out_b = modules.sram_traffic(df, op.m, op.k, op.n, bpe,
-                                                m_t, k_t, n_t)
-        e.sram += (in_b + w_b + out_b) * self.calib.e_sram_pj_per_byte
-        # IRF: writes padded to the 32 B write granularity, reads reduced by
-        # activation sparsity (§3.3.1)
-        irf_w = math.ceil(in_b / 32.0) * 32.0
-        irf_r = in_b * (1.0 - min(op.act_sparsity, 0.95))
-        e.irf += (irf_w + irf_r) * self.calib.e_irf_pj_per_byte
-        # ORF: K-tile aware — first K-tile write-only, later read-modify-write
-        tiles_k = math.ceil(op.k / k_t) if k_t > 0 else 1.0
-        orf_b = op.m * op.n * modules.ACC_BYTES[0] * (2.0 * tiles_k - 1.0)
-        e.orf += orf_b * self.calib.e_orf_pj_per_byte
-        return math.ceil((in_b + w_b + out_b) / self.sram_bpc)
-
-    # ------------------------------------------------------- DSP / SFU paths
-    def _stream_sram(self, op: OpNode, e: EnergyBreakdown) -> float:
-        """Streaming operators pass operands through SRAM once."""
-        traffic = float(op.bytes_in + op.bytes_out)
-        e.sram += traffic * self.calib.e_sram_pj_per_byte
-        return math.ceil(traffic / self.sram_bpc)
-
-    def _special_cycles_energy(self, op: OpNode):
-        """Cycle/energy for a special op on THIS tile (native or lowered)."""
-        t = self.tile
-        need = _SFU_FOR_OP[int(op.op_type)]
-        if t.sfu_mask & need:
-            return modules.sfu_cycles_energy(
-                t, int(op.op_type), float(op.elems), float(op.fft_n),
-                float(op.poly_degree), float(op.snn_timesteps), self.calib)
-        return self._lowered_cycles_energy(op)
-
-    def _lowered_cycles_energy(self, op: OpNode):
-        """Lowered cost (paper §2.5): FFT->MAC O(N^2); LIF/poly->DSP with
-        sequential multipliers."""
-        t = self.tile
-        lanes = float(max(t.dsp_count * t.dsp_simd, 1))
-        if (int(op.op_type) == int(OpType.FFT) and t.num_macs > 0
-                and t.supports_precision(op.precision)):
-            n = max(float(op.fft_n), 2.0)
-            transforms = max(float(op.elems) / n, 1.0)
-            macs = 4.0 * n * n * transforms  # complex DFT as real matmuls
-            eta = 1.0
-            c = macs / max(t.num_macs, 1)
-            energy = macs * self.calib.mac_energy(
-                int(op.precision), int(t.engine), int(t.max_precision))
-            return c, energy
-        if int(op.op_type) == int(OpType.SNN_LIF):
-            # branchy integrate-fire-reset vectorizes poorly on a SIMD DSP
-            # (divergence + membrane-state round-trips): ~4x lane-efficiency
-            # loss — this is why LIF eats ~47 % of SNN-VGG9 on commercial
-            # NPUs (paper Fig. 3) while a dedicated unit is a few gates
-            tsteps = max(float(op.snn_timesteps), 1.0)
-            lane_ops = float(op.elems) * 4.0  # mul, add, cmp, reset per step
-            c = tsteps * (math.ceil(lane_ops / (lanes / 4.0))
-                          + math.ceil(float(op.elems) * 8.0 / self.sram_bpc))
-            return c, lane_ops * tsteps * self.calib.e_dsp_pj_per_lane_op
-        if int(op.op_type) == int(OpType.POLY):
-            d = max(float(op.poly_degree), 1.0)
-            lane_ops = float(op.elems) * 2.0
-            # a long MAC chain hopping through SRAM at every step (§2.5)
-            c = d * (math.ceil(lane_ops / lanes)
-                     + math.ceil(float(op.elems) * 2.0 / self.sram_bpc))
-            return c, d * lane_ops * self.calib.e_dsp_pj_per_lane_op
-        if int(op.op_type) == int(OpType.FFT):
-            # last resort: DSP butterfly emulation
-            n = max(float(op.fft_n), 2.0)
-            lane_ops = float(op.elems) * 10.0 * math.log2(n)
-            c = math.ceil(lane_ops / lanes)
-            return c, lane_ops * self.calib.e_dsp_pj_per_lane_op
-        raise ValueError(f"cannot lower op {op.op_type} on tile {t.name}")
-
-    def _special(self, op: OpNode, e: EnergyBreakdown, bpe: float):
-        t = self.tile
-        need = _SFU_FOR_OP[int(op.op_type)]
-        if t.sfu_mask & need:
-            c_cmp, e_spec = modules.sfu_cycles_energy(
-                t, int(op.op_type), float(op.elems), float(op.fft_n),
-                float(op.poly_degree), float(op.snn_timesteps), self.calib)
-            e.special += e_spec
-            return "SFU", c_cmp, self._stream_sram(op, e)
-        c_cmp, e_low = self._lowered_cycles_energy(op)
-        if int(op.op_type) == int(OpType.FFT) and t.num_macs > 0:
-            e.compute += e_low
-            path = "MAC"
-            # DFT twiddle matrix streamed as weights
-            n = max(float(op.fft_n), 2.0)
-            e.sram += 2.0 * n * n * bpe * self.calib.e_sram_pj_per_byte
-        else:
-            e.dsp += e_low
-            path = "DSP"
-        return path, c_cmp, self._stream_sram(op, e)
+        out = self._cm.execute(self._T, op_cost_dict(op), float(bw_gbps),
+                               float(dram_rd), float(dram_wr),
+                               cache_frac=self.cache_frac)
+        e = EnergyBreakdown(
+            compute=float(out["e_compute"]),
+            dram=float(out["e_dram"]),
+            sram=float(out["e_sram"]),
+            irf=float(out["e_irf"]),
+            orf=float(out["e_orf"]),
+            dsp=float(out["e_dsp"]),
+            special=float(out["e_special"]),
+        )
+        cycles = float(out["cycles"])
+        return OpExec(cycles=cycles, seconds=cycles / self.clock_hz, energy=e,
+                      path=_PATH_NAME[int(out["path"])],
+                      roofline=_ROOFLINE_NAME[int(out["roofline"])],
+                      dram_rd=dram_rd, dram_wr=dram_wr)

@@ -1,0 +1,166 @@
+"""Property-based parity: ChipSim oracle vs the batched plan executor.
+
+Random genomes x random small DAGs must agree to float tolerance (the two
+backends share ``simulator.costs`` formulas, so any gap is an
+orchestration bug), plus cost-model monotonicity properties:
+
+* more DRAM bandwidth never increases latency — asserted on a single-tile
+  chip, where it is a theorem of the per-tile model (with multiple tiles
+  the dynamic N_active bandwidth share makes chip-level monotonicity a
+  non-theorem: an earlier dependence edge can start an op inside a busier
+  window);
+* adding an idle tile never reduces energy below the power-gating floor
+  (BUS interconnect, so hop counts don't change with the tile count).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.core.arch import ChipConfig, Interconnect, TileTemplate, big_tile
+from repro.core.calibrate.asap7 import DEFAULT_CALIB
+from repro.core.compiler.mapper import UnmappableError
+from repro.core.compiler.pipeline import compile_workload, lower_plan
+from repro.core.dse.encoding import random_genomes, decode
+from repro.core.ir import OpNode, OpType, Precision, WorkloadGraph
+from repro.core.simulator.area import tile_area
+from repro.core.simulator.batched import simulate_plans
+from repro.core.simulator.orchestrator import ChipSim, simulate
+
+SETTINGS = dict(max_examples=25, deadline=None)
+REL = 1e-9
+
+_OP_POOL = [OpType.MATMUL, OpType.FC, OpType.ADD, OpType.SOFTMAX,
+            OpType.GELU, OpType.SSM_SCAN, OpType.FFT, OpType.SNN_LIF,
+            OpType.POLY]
+
+
+@st.composite
+def small_graphs(draw):
+    n_ops = draw(st.integers(3, 9))
+    g = WorkloadGraph("prop", model_precision=Precision.INT8)
+    for i in range(n_ops):
+        ot = draw(st.sampled_from(_OP_POOL))
+        preds = []
+        if i > 0:
+            k = draw(st.integers(0, min(2, i)))
+            preds = sorted(set(draw(
+                st.lists(st.integers(0, i - 1), min_size=k, max_size=k))))
+        kw = dict(precision=draw(st.sampled_from(
+            [Precision.INT8, Precision.FP16])))
+        if ot in (OpType.MATMUL, OpType.FC):
+            node = OpNode(f"op{i}", ot,
+                          m=draw(st.integers(1, 96)),
+                          k=draw(st.integers(1, 96)),
+                          n=draw(st.integers(1, 96)),
+                          act_sparsity=draw(st.sampled_from([0.0, 0.3, 0.6])),
+                          w_sparsity=draw(st.sampled_from([0.0, 0.5])), **kw)
+        elif ot == OpType.FFT:
+            node = OpNode(f"op{i}", ot, elems=draw(st.integers(64, 4096)),
+                          fft_n=draw(st.sampled_from([8, 32, 128])), **kw)
+        elif ot == OpType.SNN_LIF:
+            node = OpNode(f"op{i}", ot, elems=draw(st.integers(16, 2048)),
+                          snn_timesteps=draw(st.integers(1, 8)), **kw)
+        elif ot == OpType.POLY:
+            node = OpNode(f"op{i}", ot, elems=draw(st.integers(16, 2048)),
+                          poly_degree=draw(st.integers(1, 6)), **kw)
+        elif ot == OpType.SSM_SCAN:
+            node = OpNode(f"op{i}", ot, elems=draw(st.integers(64, 4096)),
+                          seq_len=draw(st.sampled_from([1, 16, 64])), **kw)
+        else:
+            node = OpNode(f"op{i}", ot, elems=draw(st.integers(16, 8192)),
+                          **kw)
+        g.add(node, preds)
+    return g
+
+
+@given(small_graphs(), st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_oracle_and_batched_agree_on_random_pairs(g, seed):
+    chip = decode(random_genomes(np.random.default_rng(seed), 1)[0], "prop")
+    try:
+        plan = compile_workload(g, chip)
+    except UnmappableError:
+        assume(False)
+    r = simulate(chip, plan)
+    res = simulate_plans([chip], [lower_plan(plan, chip.num_tiles)])
+    assert res["latency_s"][0] == pytest.approx(r.latency_s, rel=REL)
+    assert res["energy_pj"][0] == pytest.approx(r.energy_pj, rel=REL)
+    n = len(r.tiles)
+    assert res["tile_ops"][0][:n].tolist() == [b.ops for b in r.tiles]
+    assert res["power_gated"][0][:n].tolist() == \
+        [b.power_gated for b in r.tiles]
+
+
+@given(small_graphs(), st.sampled_from([8.0, 16.0, 64.0]),
+       st.sampled_from([2.0, 4.0, 16.0]))
+@settings(**SETTINGS)
+def test_more_dram_bandwidth_never_slower_single_tile(g, bw, factor):
+    """Per-tile model theorem: on one tile every op's DRAM stage scales
+    down with bandwidth and nothing else changes, so the serialized
+    makespan is monotone.  Both backends must agree on both points."""
+    tile = big_tile()
+    slow_chip = ChipConfig(name="slow", tiles=((tile, 1),), dram_gbps=bw)
+    fast_chip = dataclasses.replace(slow_chip, name="fast",
+                                    dram_gbps=bw * factor)
+    try:
+        plan = compile_workload(g, slow_chip)
+    except UnmappableError:
+        assume(False)
+    r_slow = simulate(slow_chip, plan)
+    r_fast = simulate(fast_chip, plan)
+    assert r_fast.latency_s <= r_slow.latency_s * (1 + 1e-12)
+    res = simulate_plans([slow_chip, fast_chip],
+                         [lower_plan(plan, 1), lower_plan(plan, 1)])
+    assert res["latency_s"][0] == pytest.approx(r_slow.latency_s, rel=REL)
+    assert res["latency_s"][1] == pytest.approx(r_fast.latency_s, rel=REL)
+
+
+@given(small_graphs(), st.integers(0, 3))
+@settings(**SETTINGS)
+def test_idle_tile_never_cuts_energy_below_gating_floor(g, sram_idx):
+    """A tile the plan never touches adds exactly its power-gated leakage
+    floor (BUS interconnect: hops independent of tile count), so total
+    energy never drops below base + floor."""
+    base_tile = big_tile()
+    idle = TileTemplate(name="idle", rows=16, cols=16,
+                        sram_kb=(64, 256, 1024, 2048)[sram_idx])
+    chip1 = ChipConfig(name="c1", tiles=((base_tile, 1),),
+                       interconnect=Interconnect.BUS)
+    chip2 = ChipConfig(name="c2", tiles=((base_tile, 1), (idle, 1)),
+                       interconnect=Interconnect.BUS)
+    try:
+        plan = compile_workload(g, chip1)
+    except UnmappableError:
+        assume(False)
+    r1 = simulate(chip1, plan)
+    r2 = ChipSim(chip2).run(plan)  # same plan: the idle tile gets no work
+    assert r2.latency_s == pytest.approx(r1.latency_s, rel=REL)
+    floor = DEFAULT_CALIB.leak_mw_per_mm2 * tile_area(idle) \
+        * r1.latency_s * DEFAULT_CALIB.power_gate_residual * 1e9
+    assert r2.energy_pj >= r1.energy_pj + floor * (1 - 1e-9)
+    assert r2.tiles[1].power_gated
+    # batched backend sees the identical floor
+    res = simulate_plans([chip2], [lower_plan(plan, 2)])
+    assert res["energy_pj"][0] == pytest.approx(r2.energy_pj, rel=REL)
+    assert bool(res["power_gated"][0][1])
+
+
+@pytest.mark.slow
+@given(small_graphs(), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=150, deadline=None)
+def test_oracle_and_batched_agree_thorough(g, seed):
+    """Wider-budget twin of the random-pair parity property (CI slow job
+    runs it with HYPOTHESIS_PROFILE=thorough)."""
+    chip = decode(random_genomes(np.random.default_rng(seed), 1)[0], "prop")
+    try:
+        plan = compile_workload(g, chip)
+    except UnmappableError:
+        assume(False)
+    r = simulate(chip, plan)
+    res = simulate_plans([chip], [lower_plan(plan, chip.num_tiles)])
+    assert res["latency_s"][0] == pytest.approx(r.latency_s, rel=REL)
+    assert res["energy_pj"][0] == pytest.approx(r.energy_pj, rel=REL)

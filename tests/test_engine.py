@@ -54,16 +54,21 @@ def test_memoized_results_identical_to_fresh():
     first = eng.evaluate(g)
     for k in fresh:
         assert np.array_equal(fresh[k], first[k]), k
+    assert first["meta"]["backend"] == "scan"
+    assert first["meta"]["misses"] == len(g)
     # second pass: all hits, bitwise identical
     misses_before = eng.stats.misses
     again = eng.evaluate(g)
     assert eng.stats.misses == misses_before
-    for k in first:
+    assert again["meta"]["hits"] == len(g)
+    assert again["meta"]["hit_rate"] == 1.0
+    metric_keys = [k for k in first if k != "meta"]
+    for k in metric_keys:
         assert np.array_equal(first[k], again[k]), k
     # shuffled subset rides the memo and still matches
     idx = rng.permutation(len(g))[:9]
     sub = eng.evaluate(g[idx])
-    for k in first:
+    for k in metric_keys:
         assert np.array_equal(first[k][idx], sub[k]), k
     assert eng.stats.misses == misses_before
     assert eng.stats.hit_rate() > 0
@@ -151,10 +156,13 @@ def test_keep_prefilter_skips_without_poisoning_the_memo():
     assert eng.stats.skips == int(skipped.sum())
     # areas are exact even for skipped genomes
     assert np.array_equal(out["area"], areas)
+    assert out["meta"]["skips"] == int(skipped.sum())
     # an unfiltered follow-up simulates the skipped genomes for real
     full = eng.evaluate(g)
     fresh = EvalEngine(["kan"]).evaluate(g)
     for k in full:
+        if k == "meta":
+            continue
         assert np.array_equal(full[k], fresh[k]), k
 
 

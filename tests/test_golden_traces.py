@@ -1,0 +1,78 @@
+"""Golden-trace regression harness + oracle/batched backend agreement.
+
+Freezes the reference simulator's full ``SimResult`` surface for a
+Big+Little+Special-Function chip on six representative workloads
+(tests/golden/*.json, regenerate with ``pytest --regen-golden``), and pins
+the batched plan executor to the oracle on the same runs.  The slow
+marker extends the backend-agreement check to the full 20-workload suite
+(the ISSUE-2 acceptance bar).
+"""
+import numpy as np
+import pytest
+
+from repro.core import compile_workload, hetero_bls, simulate
+from repro.core.compiler.pipeline import lower_plan
+from repro.core.simulator.batched import simulate_plans
+from repro.core.workloads import build, workload_names
+
+# one per execution-path family: quantized CNN, FP16 ViT, INT4 LLM,
+# SNN (LIF), FFT long-conv, polynomial (KAN)
+GOLDEN_WORKLOADS = ["resnet50_int8", "vit_b16_fp16", "llama7b_int4",
+                    "snn_vgg9", "hyena_1_3b", "kan"]
+
+REL_TOL = 1e-9  # oracle vs batched: same formulas, reduction order only
+
+
+def _reference_chip():
+    return hetero_bls()
+
+
+def _run(wname):
+    chip = _reference_chip()
+    plan = compile_workload(build(wname), chip)
+    return chip, plan, simulate(chip, plan)
+
+
+@pytest.mark.parametrize("wname", GOLDEN_WORKLOADS)
+def test_golden_trace(wname, golden):
+    _, _, r = _run(wname)
+    golden(wname, r.golden_dict())
+
+
+@pytest.mark.parametrize("wname", GOLDEN_WORKLOADS)
+def test_batched_matches_oracle_on_golden_runs(wname):
+    chip, plan, r = _run(wname)
+    res = simulate_plans([chip], [lower_plan(plan, chip.num_tiles)])
+    assert res["latency_s"][0] == pytest.approx(r.latency_s, rel=REL_TOL)
+    assert res["energy_pj"][0] == pytest.approx(r.energy_pj, rel=REL_TOL)
+    assert res["achieved_tops"][0] == pytest.approx(r.achieved_tops,
+                                                    rel=REL_TOL)
+    # per-module energy agreement (leakage included)
+    eb = r.energy_breakdown
+    for mod in ("compute", "dram", "sram", "irf", "orf", "dsp", "special",
+                "noc", "leakage", "fuse_savings"):
+        got = float(res[f"energy_{mod}_pj"][0])
+        want = getattr(eb, mod)
+        assert got == pytest.approx(want, rel=REL_TOL, abs=1e-9), mod
+    # per-tile op counts and power gating line up with the oracle trace
+    n = len(r.tiles)
+    assert res["tile_ops"][0][:n].tolist() == [b.ops for b in r.tiles]
+    assert res["power_gated"][0][:n].tolist() == \
+        [b.power_gated for b in r.tiles]
+    np.testing.assert_allclose(res["tile_active_s"][0][:n],
+                               [b.active_s for b in r.tiles], rtol=REL_TOL)
+
+
+@pytest.mark.slow
+def test_batched_matches_oracle_full_suite():
+    """Acceptance bar: backend agreement across all 20 stock workloads on
+    the fixed reference chip."""
+    chip = _reference_chip()
+    for wname in workload_names():
+        plan = compile_workload(build(wname), chip)
+        r = simulate(chip, plan)
+        res = simulate_plans([chip], [lower_plan(plan, chip.num_tiles)])
+        assert res["latency_s"][0] == pytest.approx(r.latency_s,
+                                                    rel=REL_TOL), wname
+        assert res["energy_pj"][0] == pytest.approx(r.energy_pj,
+                                                    rel=REL_TOL), wname
