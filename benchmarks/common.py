@@ -3,10 +3,28 @@ from __future__ import annotations
 
 import json
 import os
+import statistics
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Sequence
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def save_repo_json(filename: str, payload) -> str:
+    """Write a machine-readable benchmark payload at the repo root (the
+    cross-PR perf trajectory files, e.g. BENCH_PR3.json)."""
+    path = os.path.join(REPO_ROOT, filename)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def median_s(samples: Sequence[float]) -> float:
+    """Median seconds over benchmark repeats (the BENCH_PR*.json metric:
+    robust to one-off scheduler noise, unlike min)."""
+    return float(statistics.median(samples))
 
 
 def save_json(name: str, payload) -> str:

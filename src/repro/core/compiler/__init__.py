@@ -4,7 +4,10 @@
 (3) DAG-aware mapping with op-splitting (Eqs. 1-3)  (4) schedule emission
 
 Each pass tags operators for the simulator and DSE; no machine code is
-emitted.
+emitted.  Pass 3 has two exact implementations: the per-candidate Python
+``map_graph`` (the oracle reference) and the jitted/vmapped
+``batched_mapper`` (the compile-free population path, pinned bitwise to
+``map_graph``).
 """
 from .precision import assign_precision
 from .fusion import fuse
@@ -13,4 +16,14 @@ from .schedule import emit_schedule
 from .pipeline import compile_workload
 
 __all__ = ["assign_precision", "fuse", "map_graph", "emit_schedule",
-           "compile_workload"]
+           "compile_workload", "batched_map", "map_and_simulate"]
+
+
+def __getattr__(name):
+    # batched_mapper is imported lazily: it pulls in jax/XLA, and
+    # importing the compiler package (or the reference oracle through
+    # repro.core) must stay jax-free.
+    if name in ("batched_map", "map_and_simulate"):
+        from . import batched_mapper
+        return getattr(batched_mapper, name)
+    raise AttributeError(name)

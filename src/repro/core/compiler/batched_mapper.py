@@ -1,0 +1,328 @@
+"""Exact batched Eq. 1-3 mapper: ``map_graph`` as a jitted/vmapped scan.
+
+The compile-free exact path.  ``map_graph`` re-derives, per candidate
+chip, the same placement decision sequence the Python mapper makes —
+compatibility filtering, SPECIAL->SFU routing, earliest-start times with
+NoC-crossing dependency delays (Eq. 1), the roofline completion-time
+argmin with the mapper's *sequential* smallest-tile tie-break (Eq. 2),
+and the OC/B/IC split decision with the explicit Eq. 3 reduce/concat
+cost — but as one ``lax.scan`` over the op axis with ``(MAX_TILES,)``
+tile-field lanes, ``vmap``-ed across candidates and jitted.  Placements
+come out as the stacked integer arrays (``owner`` / ``n_split`` /
+``split_axis`` / ``split_mask``) that ``simulator.batched`` executes, in
+exactly the layout ``compiler.pipeline.lower_plan`` emits, and are
+pinned *bitwise* against ``map_graph`` by tests/test_batched_mapper.py.
+
+Why exactness holds: every per-(op, tile) quantity is evaluated through
+the shared ``simulator.costs.CostModel`` (literally the code the Python
+mapper calls through numpy), the slice arithmetic is the shared
+``split_op_fields`` mirror of ``ir.slice_op``, and the one genuinely
+sequential piece of ``map_graph`` — the completion-time argmin whose
+1e-15 tie band *chains* (a tie-break win updates the incumbent time) —
+is replicated as an unrolled fold over the tile axis in ascending index
+order rather than approximated with an epsilon-weighted ``argmin`` (the
+approximation ``dse.batch_eval`` makes in-scan).
+
+``map_and_simulate`` fuses this mapping scan with the batched plan
+executor into a single device dispatch: per-workload arrays are prepared
+once (``dse.engine.prepared_workload``) and shared across the candidate
+axis (``vmap in_axes=None``), so the whole exact path — compile *and*
+simulate — runs without any per-candidate Python work.  With a
+``NamedSharding`` over the candidate axis the same dispatch spans every
+available device (``launch.mesh.candidate_sharding``).
+
+The Python ``map_graph`` stays the oracle reference; unmappable
+candidates (some op with no compatible tile, the ``UnmappableError``
+case) are reported through the ``ok`` output instead of an exception.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # cycle counts overflow f32 ULPs
+
+import jax.numpy as jnp
+
+from ..arch import MAX_TILES
+from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
+from ..ir import OpClass
+from ..simulator.batched import (CHIP_KEYS, TILE_KEYS, _build_plan_exec,
+                                 _OP_TABLE_KEYS)
+from ..simulator.costs import (OP_COST_KEYS, cost_model,
+                               noc_transfer_seconds, split_op_fields)
+
+__all__ = ["batched_map", "map_and_simulate", "place_configs"]
+
+_F = jnp.float64
+
+# map_graph's tie band: completion times within 1e-15 s prefer the
+# smaller MAC array (compiler.mapper line-for-line).
+_TIE = 1e-15
+
+# workload fields the mapper scan consumes beyond the executor's op table
+_WS_KEYS = _OP_TABLE_KEYS + ("splittable",)
+
+
+# =============================================================================
+# the mapping scan
+# =============================================================================
+
+def _build_mapper(calib: CalibrationTable, max_ops: int,
+                  enable_split: bool = True):
+    cm = cost_model(calib, jnp)
+
+    def map_one(tile, chip, xs):
+        """Map ONE workload onto ONE candidate chip.  tile: dict of
+        (MAX_TILES,) arrays; chip: dict of scalars; xs["per_op"]: dict of
+        (max_ops, ...) arrays.  Returns the stacked placement arrays plus
+        the per-candidate ``ok`` mappability flag."""
+        T = tile
+        num_macs = T["num_macs"]
+        n_tiles = jnp.sum(T["exists"])
+        # static per-tile bandwidth share for the estimate domain (§3.2)
+        bw_share = chip["dram_gbps"] / n_tiles
+
+        def noc_s(nbytes):
+            return noc_transfer_seconds(jnp, nbytes, chip["noc_bpc"],
+                                        chip["hops"],
+                                        chip["noc_base_cycles"],
+                                        chip["ref_clock_hz"])
+
+        def step(carry, op):
+            tile_finish, op_finish, op_tile, ok = carry
+            idx = jnp.asarray(op["index"], jnp.int32)
+            active = (op["valid"] > 0) & (op["fused"] == 0)
+
+            # ---- compatibility + SPECIAL->SFU routing (§3.2) -------------
+            compat = cm.supports(T, op)
+            native = cm.sfu_native(T, op) & compat
+            is_spec = op["op_cls"] == int(OpClass.SPECIAL)
+            compat = jnp.where(is_spec & jnp.any(native), native, compat)
+            any_compat = jnp.any(compat)
+
+            # ---- Eq. 1 earliest start per tile ---------------------------
+            preds = jnp.asarray(op["preds"], jnp.int32)
+            pred_ok = preds >= 0
+            pidx = jnp.maximum(preds, 0)
+            per_pred = op["per_pred_bytes"]
+            pf = jnp.where(pred_ok, op_finish[pidx], 0.0)
+            ptile = jnp.where(pred_ok, op_tile[pidx], -1)
+            # fused / absent preds (op_tile == -1) count as local, exactly
+            # like map_graph's op_tile.get(p, t)
+            cross = (ptile[:, None] >= 0) \
+                & (ptile[:, None] != jnp.arange(MAX_TILES)[None, :])
+            dep = jnp.max(jnp.where(
+                pred_ok[:, None],
+                pf[:, None] + jnp.where(cross, noc_s(per_pred), 0.0),
+                0.0), axis=0)
+            t_start = jnp.maximum(tile_finish, dep)
+
+            # ---- single-tile candidates (Eq. 2) --------------------------
+            c_hat_s = cm.roofline_cycles(T, op, bw_share) / T["clock_hz"]
+            fins = t_start + c_hat_s
+            # map_graph's argmin is a *sequential* fold whose 1e-15 tie
+            # band chains (a tie-break win replaces the incumbent best_fin
+            # too); replicate it as an unrolled fold in tile-index order.
+            best_t = jnp.asarray(-1, jnp.int32)
+            best_fin = jnp.asarray(jnp.inf, _F)
+            best_nm = jnp.asarray(0.0, _F)
+            for t in range(MAX_TILES):
+                fin, nm = fins[t], num_macs[t]
+                better = fin < best_fin - _TIE
+                tie = (jnp.abs(fin - best_fin) <= _TIE) & (best_t >= 0) \
+                    & (nm < best_nm)
+                upd = compat[t] & (better | tie)
+                best_t = jnp.where(upd, t, best_t).astype(jnp.int32)
+                best_fin = jnp.where(upd, fin, best_fin)
+                best_nm = jnp.where(upd, nm, best_nm)
+
+            # ---- split candidates (Eq. 3) --------------------------------
+            mac_mask = compat & (num_macs > 0)
+            ksplit = jnp.sum(mac_mask)
+            kf = jnp.maximum(ksplit.astype(_F), 1.0)
+            can_split = enable_split \
+                & (op["op_cls"] == int(OpClass.MAC)) \
+                & (op["splittable"] > 0) & (op["macs"] > 0) & (ksplit > 1)
+
+            def axis_fin(axis):
+                sub = split_op_fields(jnp, op, axis, kf)
+                ch_s = cm.roofline_cycles(T, sub, bw_share / kf) \
+                    / T["clock_hz"]
+                fins_s = jnp.where(mac_mask, t_start + ch_s, -jnp.inf)
+                # Eq. 3 reduce/concat cost over the NoC
+                return jnp.max(fins_s) + noc_s(op["bytes_out"] / kf)
+
+            fins3 = jnp.stack([axis_fin(0), axis_fin(1), axis_fin(2)])
+            # sequential strict-< axis loop == first occurrence of the min
+            best_axis = jnp.argmin(fins3).astype(jnp.int32)
+            do_split = can_split & (fins3[best_axis] < best_fin)
+
+            first_mac = jnp.argmax(mac_mask).astype(jnp.int32)
+            owner = jnp.where(do_split, first_mac, best_t)
+            choice_fin = jnp.where(do_split, fins3[best_axis], best_fin)
+
+            # ---- state update (map_graph's finish bookkeeping) -----------
+            placed = active & any_compat
+            onehot = jnp.arange(MAX_TILES) == owner
+            tf_single = jnp.where(onehot, choice_fin, tile_finish)
+            tf_split = jnp.where(mac_mask,
+                                 jnp.maximum(tile_finish, choice_fin),
+                                 tile_finish)
+            tile_finish = jnp.where(placed,
+                                    jnp.where(do_split, tf_split, tf_single),
+                                    tile_finish)
+            op_finish = op_finish.at[idx].set(
+                jnp.where(placed, choice_fin, 0.0))
+            op_tile = op_tile.at[idx].set(
+                jnp.where(placed, owner, -1).astype(jnp.int32))
+            ok = ok & (any_compat | ~active)
+
+            ys = {
+                "owner": jnp.where(placed, owner, -1).astype(jnp.int32),
+                "n_split": jnp.where(
+                    placed, jnp.where(do_split, ksplit, 1),
+                    0).astype(jnp.int32),
+                "split_axis": jnp.where(placed & do_split, best_axis,
+                                        -1).astype(jnp.int32),
+                "split_mask": jnp.where(
+                    placed, jnp.where(do_split, mac_mask, onehot), False),
+            }
+            return (tile_finish, op_finish, op_tile, ok), ys
+
+        init = (jnp.zeros(MAX_TILES, _F), jnp.zeros(max_ops, _F),
+                jnp.full(max_ops, -1, jnp.int32), jnp.asarray(True))
+        (_, _, _, ok), ys = jax.lax.scan(step, init, xs["per_op"])
+        ys["ok"] = ok
+        return ys
+
+    return map_one
+
+
+# =============================================================================
+# fused mapping + plan execution (one device dispatch per workload)
+# =============================================================================
+
+def _build_map_exec(calib: CalibrationTable, max_ops: int):
+    mapper = _build_mapper(calib, max_ops)
+    exec_plan = _build_plan_exec(calib, max_ops)
+
+    def run(tile, chip, xs, total_macs):
+        placed = mapper(tile, chip, xs)
+        per_op = dict(xs["per_op"])
+        # unmappable rows carry owner -1; clamp for the executor's gathers
+        # (their lanes are discarded through ``ok`` host-side)
+        per_op["owner"] = jnp.maximum(placed["owner"], 0)
+        per_op["n_split"] = placed["n_split"].astype(_F)
+        per_op["split_axis"] = placed["split_axis"]
+        per_op["split_mask"] = placed["split_mask"].astype(_F)
+        out = exec_plan(tile, chip, {"per_op": per_op}, total_macs)
+        out["ok"] = placed["ok"]
+        for f in ("owner", "n_split", "split_axis", "split_mask"):
+            out[f] = placed[f]
+        return out
+
+    return run
+
+
+# CalibrationTable is hashable (costs._cached_model already keys an LRU
+# on it), so the jit caches key on the calib directly — no id()-keyed
+# registry like the older jit wrappers carry.
+@functools.lru_cache(maxsize=64)
+def _jitted_map(calib: CalibrationTable, max_ops: int, enable_split: bool):
+    fn = _build_mapper(calib, max_ops, enable_split)
+    batched = jax.vmap(fn, in_axes=({k: 0 for k in TILE_KEYS},
+                                    {k: 0 for k in CHIP_KEYS}, None))
+    return jax.jit(batched)
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_map_exec(calib: CalibrationTable, max_ops: int):
+    fn = _build_map_exec(calib, max_ops)
+    batched = jax.vmap(fn, in_axes=({k: 0 for k in TILE_KEYS},
+                                    {k: 0 for k in CHIP_KEYS}, None, None))
+    return jax.jit(batched)
+
+
+def _device_xs(ws: Dict[str, np.ndarray]) -> Tuple[dict, int]:
+    max_ops = len(ws["op_type"])
+    per_op = {k: jnp.asarray(ws[k], _F) for k in _WS_KEYS}
+    per_op["preds"] = jnp.asarray(ws["preds"], jnp.int32)
+    per_op["index"] = jnp.arange(max_ops, dtype=jnp.int32)
+    return {"per_op": per_op}, max_ops
+
+
+def place_configs(cfgs, sharding=None):
+    """Stage a stacked config dict on device (optionally with the
+    candidate-axis ``NamedSharding``) once, so callers looping over
+    workloads don't re-place the same (B, MAX_TILES) arrays per
+    workload.  Pass the result to ``batched_map`` / ``map_and_simulate``
+    as ``placed``."""
+    tile = {k: jnp.asarray(cfgs["tile"][k], _F) for k in TILE_KEYS}
+    chip = {k: jnp.asarray(cfgs["chip"][k], _F) for k in CHIP_KEYS}
+    if sharding is not None:
+        put = lambda a: jax.device_put(a, sharding)
+        tile = {k: put(v) for k, v in tile.items()}
+        chip = {k: put(v) for k, v in chip.items()}
+    return tile, chip
+
+
+def batched_map(ws: Dict[str, np.ndarray],
+                cfgs: Dict[str, Dict[str, np.ndarray]],
+                calib: CalibrationTable = DEFAULT_CALIB,
+                enable_split: bool = True,
+                sharding=None, placed=None) -> Dict[str, np.ndarray]:
+    """Exact Eq. 1-3 mapping of one workload onto B candidate chips.
+
+    ``ws`` is a prepared-workload SoA dict (``dse.batch_eval
+    .prepare_workload`` / the engine's ``prepared_workload`` cache);
+    ``cfgs`` a stacked config dict (``stack_chip_configs`` or the
+    engine's vectorized genome stack).  Returns ``owner`` (B, max_ops)
+    int32, ``n_split`` (B, max_ops) int32, ``split_axis`` (B, max_ops)
+    int32, ``split_mask`` (B, max_ops, MAX_TILES) int8 — bitwise the
+    arrays ``lower_plan(emit_schedule(g, map_graph(g, chip)))`` produces
+    for each candidate — and ``ok`` (B,) bool (False where ``map_graph``
+    would raise ``UnmappableError``).
+    """
+    xs, max_ops = _device_xs(ws)
+    tile, chip = placed if placed is not None \
+        else place_configs(cfgs, sharding)
+    out = _jitted_map(calib, max_ops, enable_split)(tile, chip, xs)
+    return {
+        "owner": np.asarray(out["owner"], np.int32),
+        "n_split": np.asarray(out["n_split"], np.int32),
+        "split_axis": np.asarray(out["split_axis"], np.int32),
+        "split_mask": np.asarray(out["split_mask"], np.int8),
+        "ok": np.asarray(out["ok"], bool),
+    }
+
+
+def map_and_simulate(ws: Dict[str, np.ndarray],
+                     cfgs: Dict[str, Dict[str, np.ndarray]],
+                     calib: CalibrationTable = DEFAULT_CALIB,
+                     sharding=None, placed=None) -> Dict[str, np.ndarray]:
+    """The compile-free exact path: batched Eq. 1-3 mapping fused with the
+    batched plan executor in one jitted dispatch.
+
+    Equivalent to, per candidate, ``map_graph`` -> ``emit_schedule`` ->
+    ``lower_plan`` -> ``batch_simulate`` (the PR 2 exact path), but with
+    zero per-candidate Python work: the workload arrays are shared across
+    the candidate axis and the mapping scan feeds the execution scan on
+    device.  Returns the ``batch_simulate`` result surface plus the
+    placement arrays and the ``ok`` (B,) mappability mask; rows with
+    ``ok == False`` (an op with no compatible tile) carry garbage metrics
+    and must be discarded by the caller.
+    """
+    xs, max_ops = _device_xs(ws)
+    tile, chip = placed if placed is not None \
+        else place_configs(cfgs, sharding)
+    fn = _jitted_map_exec(calib, max_ops)
+    out = fn(tile, chip, xs, jnp.asarray(float(ws["total_macs"]), _F))
+    res = {k: np.asarray(v) for k, v in out.items()}
+    res["area_mm2"] = cfgs["chip"]["chip_area"]
+    res["peak_tops"] = cfgs["chip"]["peak_tops"]
+    return res

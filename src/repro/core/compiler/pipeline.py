@@ -1,6 +1,32 @@
 """Compiler driver: runs the four ordered passes (paper §3.2) and returns
 an ExecutionPlan for the simulator, plus the plan -> op-table lowering
-consumed by the batched simulator backend."""
+consumed by the batched simulator backend.
+
+Two exact compile paths exist, selected by how many candidates you have:
+
+* **Per-candidate (this module)** — ``compile_workload`` runs the Python
+  passes (deepcopy -> ``assign_precision`` -> ``fuse`` -> ``map_graph``
+  -> ``emit_schedule``) for one (workload, chip) pair; ``lower_plan``
+  flattens the result into the ``PlanTensor`` op-table the batched
+  executor consumes.  This is the oracle-reference path: it keeps the
+  graph objects, so ``ChipSim`` can replay it with per-op traces.
+* **Compile-free batched (``compiler.batched_mapper``)** — the same
+  Eq. 1-3 mapping decisions as a jitted scan over ``(B, MAX_TILES)``
+  tile arrays, emitting the stacked placement arrays directly and (via
+  ``map_and_simulate``) feeding the batched executor in the same
+  dispatch.  Placements are pinned bitwise against ``map_graph``; the
+  config-independent passes 1-2 + tensorization run once per workload
+  (``dse.engine.prepared_workload``), not once per candidate.
+
+``dse.engine.EvalEngine`` picks between them: ``backend="batched"`` and
+``rescore()`` default to the compile-free path (``exact_mapper=
+"batched"``), ``exact_mapper="python"`` forces this module's
+per-candidate pipeline, and ``backend="oracle"`` walks ``ChipSim`` on
+``map_graph`` placements.  ``plan_from_arrays`` below crosses between
+the two worlds: it rebuilds an ``ExecutionPlan`` from one candidate's
+stacked placement arrays so the oracle can replay a batched-mapper
+result.
+"""
 from __future__ import annotations
 
 import copy
@@ -10,14 +36,16 @@ import numpy as np
 
 from ..arch import ChipConfig
 from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
-from ..ir import AXIS_CODES, PlanTensor, WorkloadGraph, bucket_ops
-from ..simulator.orchestrator import ExecutionPlan
+from ..ir import (AXIS_CODES, PlanTensor, WorkloadGraph, bucket_ops,
+                  placement_rows)
+from ..simulator.orchestrator import ExecutionPlan, Placement
 from .fusion import fuse
 from .mapper import map_graph
 from .precision import assign_precision
 from .schedule import emit_schedule
 
-__all__ = ["compile_workload", "lower_plan", "compile_to_table"]
+__all__ = ["compile_workload", "lower_plan", "compile_to_table",
+           "plan_from_arrays"]
 
 
 def compile_workload(g: WorkloadGraph, chip: ChipConfig,
@@ -94,7 +122,29 @@ def compile_to_table(g: WorkloadGraph, chip: ChipConfig,
                      calib: CalibrationTable = DEFAULT_CALIB,
                      max_ops: Optional[int] = None,
                      **compile_kwargs) -> PlanTensor:
-    """``compile_workload`` + ``lower_plan`` in one step."""
+    """``compile_workload`` + ``lower_plan`` in one step.
+
+    The per-candidate exact path (full Python passes per call).  At
+    population scale prefer ``compiler.batched_mapper.map_and_simulate``,
+    which makes the same placement decisions bitwise without any
+    per-candidate Python work.
+    """
     plan = compile_workload(g, chip, calib, **compile_kwargs)
     return lower_plan(plan, chip.num_tiles, max_ops=max_ops)
+
+
+def plan_from_arrays(g: WorkloadGraph, owner: np.ndarray,
+                     n_split: np.ndarray, split_axis: np.ndarray,
+                     split_mask: np.ndarray,
+                     mode: str = "latency") -> ExecutionPlan:
+    """Rebuild an ``ExecutionPlan`` from ONE candidate's stacked placement
+    arrays (a ``batched_map`` row, or a ``PlanTensor``'s fields) so the
+    ``ChipSim`` oracle can replay a batched-mapper result with full per-op
+    traces.  ``g`` must be the prepared graph the arrays were mapped from
+    (passes 1-2 already applied)."""
+    placements = {
+        i: Placement(list(tiles), axis)
+        for i, (tiles, axis) in placement_rows(
+            owner, n_split, split_axis, split_mask).items()}
+    return emit_schedule(g, placements, mode=mode)
 

@@ -22,9 +22,13 @@ optimization, genome hillclimb) funnels its candidate scoring through one
    the reference ``decode()`` stays the finalist re-scoring path.
 4. **Candidate-axis sharding** — with ``shard=True`` and more than one
    JAX device, the (B, MAX_TILES) config arrays are placed with a
-   ``NamedSharding`` over the batch axis (mesh built through the
-   version-compat shim in ``repro.launch.mesh``), so the sweep scales
-   across whatever devices exist; on one device it is a no-op.
+   ``NamedSharding`` over the batch axis
+   (``repro.launch.mesh.candidate_sharding``), so the sweep scales
+   across whatever devices exist; on one device it is a no-op.  The
+   sharding covers every evaluation path — the ``batch_eval`` scan AND
+   the compile-free batched mapper+executor; ``_pad_size`` rounds batch
+   shapes up to a mesh-size multiple (after bucket rounding) so uneven
+   populations never fall back to per-device replication.
 
 **Evaluation backends.**  Cache misses are simulated by one of three
 backends sharing one set of cost formulas (``simulator.costs``):
@@ -33,12 +37,16 @@ backends sharing one set of cost formulas (``simulator.costs``):
   compile+simulate scan: exact orchestrator semantics but an in-scan
   greedy re-derivation of the Eq. 1-3 mapping (epsilon tie-breaks,
   ragged-remainder-free splits);
-* ``"batched"`` (default *exact* backend: ``rescore()``) — compile each
-  candidate with the real Python mapper, then execute the lowered plan
-  tables in the vmapped/jitted ``simulator.batched`` executor.  Matches
-  the reference simulator to float tolerance;
-* ``"oracle"`` — the per-candidate Python ``ChipSim`` walk, kept as the
-  ground truth the other two are pinned against.
+* ``"batched"`` (default *exact* backend: ``rescore()``) — the
+  compile-free exact path: ``compiler.batched_mapper.map_and_simulate``
+  fuses an exact batched Eq. 1-3 mapping scan (placements pinned
+  *bitwise* to ``map_graph``) with the vmapped/jitted
+  ``simulator.batched`` plan executor in one dispatch, with zero
+  per-candidate Python work.  ``exact_mapper="python"`` falls back to
+  the per-candidate ``map_graph`` -> ``lower_plan`` pipeline (the
+  oracle-reference compile path, bitwise-identical results);
+* ``"oracle"`` — ``map_graph`` + the per-candidate Python ``ChipSim``
+  walk, kept as the ground truth the other two are pinned against.
 
 Search uses the engine; finalists are re-scored through ``rescore()``
 (batched exact backend), so reported numbers are exact.  Every
@@ -375,9 +383,14 @@ class EvalEngine:
                  batch: int = 1024, memoize: bool = True,
                  vectorized: bool = True, shard: bool = False,
                  aggressive_int4: bool = False, enable_fusion: bool = True,
-                 memo_limit: int = 500_000, backend: str = "scan"):
+                 memo_limit: int = 500_000, backend: str = "scan",
+                 exact_mapper: str = "batched"):
         if backend not in BACKENDS:
             raise ValueError(f"backend {backend!r} not in {BACKENDS}")
+        if exact_mapper not in ("batched", "python"):
+            raise ValueError(f"exact_mapper {exact_mapper!r} not in "
+                             f"('batched', 'python')")
+        self.exact_mapper = exact_mapper
         self.workloads = list(workloads)
         self.calib = calib
         self.batch = batch
@@ -403,18 +416,22 @@ class EvalEngine:
         self._shapes: set = set()   # batch sizes this engine has emitted
 
     def _pad_size(self, n: int) -> int:
-        """Batch padding: the jit bucket, rounded up so a sharded batch
-        axis divides evenly across devices.  Unwarmed engines reuse the
-        smallest previously-emitted shape within 1.5x instead of minting
-        a new one — miss counts vary every GA generation, and without
-        this an unwarmed search loop would trigger a fresh XLA compile
-        per new count (the shape set converges after a few generations;
-        warmup() pre-populates it so padding is then always minimal)."""
+        """Batch padding: the jit bucket, rounded up — AFTER bucket
+        rounding — so a sharded batch axis divides evenly across devices
+        (an indivisible batch makes XLA fall back to whole-batch
+        per-device replication).  Unwarmed engines reuse the smallest
+        previously-emitted shape within 1.5x instead of minting a new
+        one — miss counts vary every GA generation, and without this an
+        unwarmed search loop would trigger a fresh XLA compile per new
+        count (the shape set converges after a few generations; warmup()
+        pre-populates it so padding is then always minimal).  Reused
+        shapes are filtered to mesh-size multiples too, so a shape minted
+        before sharding context changed can never leak back in."""
         pad = _bucket(n)
-        if self._sharding is not None:
-            ndev = self._sharding.mesh.size
-            pad = ((pad + ndev - 1) // ndev) * ndev
-        reusable = [s for s in self._shapes if pad <= s <= pad * 3 // 2]
+        ndev = self._sharding.mesh.size if self._sharding is not None else 1
+        pad = ((pad + ndev - 1) // ndev) * ndev
+        reusable = [s for s in self._shapes
+                    if pad <= s <= pad * 3 // 2 and s % ndev == 0]
         if reusable:
             return min(reusable)
         self._shapes.add(pad)
@@ -424,15 +441,8 @@ class EvalEngine:
     @staticmethod
     def _make_sharding():
         """NamedSharding over the candidate batch axis; None on one device."""
-        import jax
-        devs = jax.devices()
-        if len(devs) <= 1:
-            return None
-        from ...launch.mesh import mesh_axis_kwargs
-        mesh = jax.make_mesh((len(devs),), ("candidates",),
-                             **mesh_axis_kwargs(1))
-        return jax.sharding.NamedSharding(
-            mesh, jax.sharding.PartitionSpec("candidates"))
+        from ...launch.mesh import candidate_sharding
+        return candidate_sharding()
 
     def _shard_cfgs(self, cfgs):
         if self._sharding is None:
@@ -486,7 +496,8 @@ class EvalEngine:
         if self.backend != "scan":
             return self._simulate_exact(genomes[:n],
                                         oracle=self.backend == "oracle",
-                                        pad_to=len(cfgs["chip"]["chip_area"]))
+                                        pad_to=len(cfgs["chip"]["chip_area"]),
+                                        cfgs=cfgs)
         W = len(self.workloads)
         pad_n = len(cfgs["chip"]["chip_area"])
         lat = np.zeros((pad_n, W))
@@ -503,10 +514,16 @@ class EvalEngine:
         return lat[:n], en[:n], tw[:n]
 
     def _simulate_exact(self, genomes: np.ndarray, oracle: bool = False,
-                        pad_to: Optional[int] = None):
-        """Exact scoring: real compiler pipeline per candidate, executed by
-        the batched plan backend (or the ChipSim oracle).  Unmappable
-        (genome, workload) pairs score inf latency/energy."""
+                        pad_to: Optional[int] = None, cfgs=None):
+        """Exact scoring.  Default (``exact_mapper="batched"``): the
+        compile-free path — one fused batched-mapping + plan-execution
+        dispatch per workload, placements bitwise equal to ``map_graph``.
+        ``exact_mapper="python"`` compiles per candidate with the real
+        Python mapper instead; ``oracle=True`` additionally walks the
+        per-candidate ``ChipSim``.  Unmappable (genome, workload) pairs
+        score inf latency/energy on every path.  ``cfgs``, when given,
+        is the caller's already-built (``pad_to``-row) config stack for
+        these genomes, so ``evaluate()`` misses don't stack twice."""
         from ..compiler.mapper import UnmappableError, map_graph
         from ..compiler.pipeline import lower_plan
         from ..compiler.schedule import emit_schedule
@@ -515,6 +532,8 @@ class EvalEngine:
 
         genomes = np.asarray(genomes, np.int64).reshape(-1, GENOME_LEN)
         n, W = len(genomes), len(self.workloads)
+        if not oracle and self.exact_mapper == "batched":
+            return self._simulate_exact_batched(genomes, pad_to, cfgs)
         chips = [decode(g, f"x{i}") for i, g in enumerate(genomes)]
         lat = np.full((n, W), np.inf)
         en = np.full((n, W), np.inf)
@@ -554,6 +573,44 @@ class EvalEngine:
                 power = res["energy_pj"][r] * 1e-12 \
                     / max(res["latency_s"][r], 1e-30)
                 tw[i, j] = res["achieved_tops"][r] / max(power, 1e-30)
+        return lat, en, tw
+
+    def _simulate_exact_batched(self, genomes: np.ndarray,
+                                pad_to: Optional[int] = None, cfgs=None):
+        """The compile-free exact path: per workload, ONE fused
+        batched-mapper + plan-executor dispatch over all candidates
+        (``compiler.batched_mapper.map_and_simulate``), sharded over the
+        candidate axis when the engine shards.  The per-workload compiler
+        passes 1-2 + tensorization come from the process-wide
+        ``prepared_workload`` cache (``self._prepared``) — nothing runs
+        per (workload, candidate) on the host."""
+        from ..compiler.batched_mapper import map_and_simulate, place_configs
+
+        n, W = len(genomes), len(self.workloads)
+        lat = np.full((n, W), np.inf)
+        en = np.full((n, W), np.inf)
+        tw = np.zeros((n, W))
+        # pad to the jit bucket (a mesh-size multiple under sharding) by
+        # repeating row 0, so shapes stay stable and shards stay even
+        pad = pad_to if pad_to is not None else self._pad_size(n)
+        if cfgs is None:
+            cfgs = self._configs(genomes)
+            if pad > n:
+                sel = np.concatenate([np.arange(n),
+                                      np.zeros(pad - n, np.int64)])
+                cfgs = self._take(cfgs, sel)
+        # device placement (and sharding) once, not once per workload
+        placed = place_configs(cfgs, self._sharding)
+        for j, wname in enumerate(self.workloads):
+            res = map_and_simulate(self._prepared(wname), cfgs, self.calib,
+                                   placed=placed)
+            ok = res["ok"][:n]
+            l, e = res["latency_s"][:n], res["energy_pj"][:n]
+            lat[ok, j] = l[ok]
+            en[ok, j] = e[ok]
+            power = e[ok] * 1e-12 / np.maximum(l[ok], 1e-30)
+            tw[ok, j] = res["achieved_tops"][:n][ok] \
+                / np.maximum(power, 1e-30)
         return lat, en, tw
 
     # ------------------------------------------------------------- evaluate
@@ -633,15 +690,20 @@ class EvalEngine:
 
     def rescore(self, genomes: np.ndarray, oracle: bool = False
                 ) -> Dict[str, np.ndarray]:
-        """Exact re-scoring of finalists: the real compiler pipeline per
-        candidate, executed by the batched plan backend (``oracle=True``
-        walks the Python ChipSim instead).  Bypasses the memo — results
-        are exact regardless of this engine's search backend."""
+        """Exact re-scoring of finalists through the engine's exact
+        mapper — by default the compile-free batched Eq. 1-3 pass fused
+        with the batched plan executor (bitwise ``map_graph`` placements,
+        no per-candidate compile); ``exact_mapper="python"`` compiles
+        per candidate instead, and ``oracle=True`` walks the Python
+        ChipSim.  Bypasses the memo — results are exact regardless of
+        this engine's search backend."""
         genomes = np.asarray(genomes, dtype=np.int64).reshape(-1, GENOME_LEN)
         lat, en, tw = self._simulate_exact(genomes, oracle=oracle)
+        mapper = "python" if oracle else self.exact_mapper
         return {"latency": lat, "energy": en, "tops_w": tw,
                 "area": self.areas(genomes),
                 "meta": {"backend": "oracle" if oracle else "batched",
+                         "mapper": mapper,
                          "requests": len(genomes), "hits": 0,
                          "misses": len(genomes), "skips": 0,
                          "hit_rate": 0.0}}

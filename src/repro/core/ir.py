@@ -34,14 +34,47 @@ __all__ = [
     "PlanTensor",
     "MAX_PREDS",
     "AXIS_CODES",
+    "AXIS_NAMES",
     "bucket_ops",
+    "placement_rows",
 ]
 
 MAX_PREDS = 4  # fixed predecessor fan-in for the SoA encoding (padded with -1)
 
 # Split-axis integer codes shared by slice_op, the plan lowering
-# (compiler.pipeline.lower_plan) and the batched executor.
+# (compiler.pipeline.lower_plan), the batched mapper and the batched
+# executor.
 AXIS_CODES = {"": -1, "OC": 0, "B": 1, "IC": 2}
+AXIS_NAMES = {v: k for k, v in AXIS_CODES.items()}
+
+
+def placement_rows(owner: "np.ndarray", n_split: "np.ndarray",
+                   split_axis: "np.ndarray", split_mask: "np.ndarray"
+                   ) -> Dict[int, Tuple[Tuple[int, ...], str]]:
+    """Decode ONE candidate's stacked placement arrays back into per-op
+    placement tuples ``{op index: (tiles, axis)}`` — the row-wise inverse
+    of ``compiler.pipeline.lower_plan``'s placement lowering, shared by
+    the oracle-replay helper (``compiler.pipeline.plan_from_arrays``) and
+    the mapper parity tests.
+
+    ``owner`` / ``n_split`` / ``split_axis`` are (max_ops,) integer
+    arrays, ``split_mask`` (max_ops, num_tile_slots); rows with
+    ``n_split == 0`` (fused / padding) are omitted.  Single placements
+    return ``((owner,), "")``; splits return the mask's tile indices in
+    ascending order with the owner first — ``lower_plan`` and the batched
+    mapper both emit the lowest-index tile as the owner, which
+    ``validate()``-ed tables guarantee.
+    """
+    out: Dict[int, Tuple[Tuple[int, ...], str]] = {}
+    for i in np.flatnonzero(np.asarray(n_split) > 0):
+        i = int(i)
+        k = int(n_split[i])
+        if k == 1:
+            out[i] = ((int(owner[i]),), "")
+        else:
+            tiles = tuple(int(t) for t in np.flatnonzero(split_mask[i]))
+            out[i] = (tiles, AXIS_NAMES[int(split_axis[i])])
+    return out
 
 
 def bucket_ops(n: int) -> int:

@@ -40,7 +40,8 @@ from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
 from ..ir import MAX_PREDS, PlanTensor
 from .area import chip_area, tile_area
 from .costs import (ACT_CACHE_SLOTS, CACHE_FRAC, OP_COST_KEYS, cost_model,
-                    noc_transfer_energy_pj, noc_transfer_seconds)
+                    noc_transfer_energy_pj, noc_transfer_seconds,
+                    split_op_fields)
 from .orchestrator import noc_hops
 
 __all__ = ["stack_chip_configs", "stack_plan_tables", "batch_simulate",
@@ -256,28 +257,7 @@ def _build_plan_exec(calib: CalibrationTable, max_ops: int):
 
             # ---- Eq. 3 split execution (slice_op semantics) --------------
             kf = jnp.maximum(k, 1.0)
-            sub = {f: op[f] for f in OP_COST_KEYS}
-            sub_m = jnp.where(axis == 1,
-                              jnp.maximum(jnp.floor(op["m"] / kf), 1.0),
-                              op["m"])
-            sub_n = jnp.where(axis == 0,
-                              jnp.maximum(jnp.floor(op["n"] / kf), 1.0),
-                              op["n"])
-            sub_k = jnp.where(axis == 2,
-                              jnp.maximum(jnp.floor(op["k"] / kf), 1.0),
-                              op["k"])
-            sub["m"], sub["n"], sub["k"] = sub_m, sub_n, sub_k
-            sub["macs"] = jnp.where(op["macs"] > 0, sub_m * sub_k * sub_n,
-                                    op["macs"])
-            sub["bytes_in"] = jnp.where(axis == 1,
-                                        jnp.floor(op["bytes_in"] / kf),
-                                        op["bytes_in"])
-            sub["bytes_w"] = jnp.where(axis != 1,
-                                       jnp.floor(op["bytes_w"] / kf),
-                                       op["bytes_w"])
-            sub["bytes_out"] = jnp.where(axis != 2,
-                                         jnp.floor(op["bytes_out"] / kf),
-                                         op["bytes_out"])
+            sub = split_op_fields(jnp, op, axis, kf)
             ex_sub = cm.execute(T, sub, bw_share, dram_rd / kf, dram_wr / kf)
             starts_sub = jnp.maximum(tile_finish, t_dep) + extra_noc_s
             fins_sub = jnp.where(mask, starts_sub + ex_sub["seconds"],

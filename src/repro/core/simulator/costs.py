@@ -40,7 +40,7 @@ __all__ = [
     "CACHE_FRAC", "ACT_CACHE_SLOTS", "ACC_BYTES", "DSP_OPS_PER_ELEM",
     "DSP_OPS_TABLE", "SFU_NEED", "TILE_COST_KEYS", "OP_COST_KEYS",
     "CostModel", "cost_model", "ActivationCache", "noc_transfer_seconds",
-    "noc_transfer_energy_pj",
+    "noc_transfer_energy_pj", "split_op_fields",
 ]
 
 # fraction of per-tile SRAM reserved for the activation cache (§3.3.4)
@@ -114,6 +114,31 @@ def noc_transfer_seconds(xp, nbytes, noc_bpc, hops, base_cycles, ref_clock_hz):
 
 def noc_transfer_energy_pj(xp, nbytes, e_noc_pj_per_byte_hop, hops):
     return nbytes * e_noc_pj_per_byte_hop * hops
+
+
+def split_op_fields(xp, op, axis, kf):
+    """Array mirror of ``ir.slice_op``: even 1/k slice of a MAC op along
+    OC (axis 0), B (1) or IC (2).  ``op`` is an ``OP_COST_KEYS`` dict;
+    ``axis`` the integer ``AXIS_CODES`` value; ``kf`` the (float) split
+    width.  Shared by the batched plan executor (replaying a compiled
+    split) and the batched mapper (evaluating all three axes) so the
+    slice arithmetic matches ``slice_op`` bitwise in every backend."""
+    sub = {f: op[f] for f in OP_COST_KEYS}
+    sub_m = xp.where(axis == 1, xp.maximum(xp.floor(op["m"] / kf), 1.0),
+                     op["m"])
+    sub_n = xp.where(axis == 0, xp.maximum(xp.floor(op["n"] / kf), 1.0),
+                     op["n"])
+    sub_k = xp.where(axis == 2, xp.maximum(xp.floor(op["k"] / kf), 1.0),
+                     op["k"])
+    sub["m"], sub["n"], sub["k"] = sub_m, sub_n, sub_k
+    sub["macs"] = xp.where(op["macs"] > 0, sub_m * sub_k * sub_n, op["macs"])
+    sub["bytes_in"] = xp.where(axis == 1, xp.floor(op["bytes_in"] / kf),
+                               op["bytes_in"])
+    sub["bytes_w"] = xp.where(axis != 1, xp.floor(op["bytes_w"] / kf),
+                              op["bytes_w"])
+    sub["bytes_out"] = xp.where(axis != 2, xp.floor(op["bytes_out"] / kf),
+                                op["bytes_out"])
+    return sub
 
 
 # =============================================================================
@@ -385,17 +410,18 @@ class CostModel:
         return xp.maximum(c_cmp, c_bw)
 
     # --------------------------------------------------------------- execute
-    def execute(self, T, op, bw_gbps, dram_rd, dram_wr,
-                cache_frac=CACHE_FRAC):
-        """Full seven-module execution (Eq. 4-6; TileSim.execute).
+    def execute_static(self, T, op, cache_frac=CACHE_FRAC):
+        """The state-independent half of :meth:`execute`: every quantity
+        that depends only on the (tile, op) pair — compute/memory cycle
+        counts, per-module energies, execution-path routing, and the
+        path-selected non-DRAM energy sum.
 
-        ``dram_rd`` / ``dram_wr`` are the effective DRAM bytes after the
-        orchestrator's activation-cache adjustment (§3.3.4).  Returns a
-        dict with ``cycles``, ``seconds``, per-module energies
-        (``e_compute``, ``e_dsp``, ``e_special``, ``e_sram``, ``e_irf``,
-        ``e_orf``, ``e_dram``), their ``energy_total``, and integer
-        ``path`` (0 MAC / 1 DSP / 2 SFU) and ``roofline`` (0 compute /
-        1 memory) codes.
+        Splitting this out lets the oracle orchestrator evaluate it for a
+        whole plan in ONE vectorized call (one record per (op, tile)
+        execution) before its sequential walk, leaving only the cheap
+        bandwidth/DRAM combine (:meth:`execute_dynamic`) inside the
+        per-op loop.  ``execute`` composes the two halves, so all
+        backends still run literally the same arithmetic.
         """
         xp = self.xp
         c = self.c
@@ -470,6 +496,34 @@ class CostModel:
         e_irf_mod = xp.where(on_mac, e_irf, 0.0)
         e_orf_mod = xp.where(on_mac, e_orf, 0.0)
 
+        # non-DRAM energy summed in the historical per-path order so the
+        # jitted backends reproduce the pre-refactor bits exactly
+        e_static = self._sel(
+            [on_mac, on_dsp_low, is_spec_cls],
+            [e_mac_path + e_sram_mac + e_irf + e_orf,
+             e_mac_on_dsp + e_sram_stream,
+             e_spec + e_spec_sram],
+            e_dsp + e_sram_stream)
+
+        path = self._sel([on_mac | spec_lowered_mac, is_spec_cls & native],
+                         [xp.zeros_like(c_cmp), 2.0 + zero], 1.0 + zero)
+        return {
+            "c_cmp": c_cmp, "c_mem": c_mem,
+            "e_compute": e_compute, "e_dsp": e_dsp_mod,
+            "e_special": e_special, "e_sram": e_sram, "e_irf": e_irf_mod,
+            "e_orf": e_orf_mod, "e_static": e_static, "path": path,
+        }
+
+    def execute_dynamic(self, st, T, bw_gbps, dram_rd, dram_wr):
+        """The state-dependent half of :meth:`execute`: burst-aligned DRAM
+        staging at the dynamically shared bandwidth, the Eq. 5 total-cycle
+        combine, and the roofline code.  ``st`` is an
+        :meth:`execute_static` result (or one row of a vectorized one);
+        ``T`` only needs ``clock_hz`` and ``double_buffer``."""
+        xp = self.xp
+        c = self.c
+        c_cmp, c_mem = st["c_cmp"], st["c_mem"]
+
         # ---- DRAM + ports + Eq. 5 combine --------------------------------
         rd_al = xp.where(dram_rd > 0, xp.ceil(dram_rd / _BURST) * _BURST, 0.0)
         wr_al = xp.where(dram_wr > 0, xp.ceil(dram_wr / _BURST) * _BURST, 0.0)
@@ -486,25 +540,33 @@ class CostModel:
                          + c_lp + c_sp,
                          c_cmp + c_mem + c_dram + c_lp + c_sp)
 
-        # energy_total summed in the historical per-path order so the jitted
-        # backends reproduce the pre-refactor bits exactly
-        energy_total = self._sel(
-            [on_mac, on_dsp_low, is_spec_cls],
-            [e_mac_path + e_sram_mac + e_irf + e_orf,
-             e_mac_on_dsp + e_sram_stream,
-             e_spec + e_spec_sram],
-            e_dsp + e_sram_stream) + e_dram
-
-        path = self._sel([on_mac | spec_lowered_mac, is_spec_cls & native],
-                         [xp.zeros_like(c_cmp), 2.0 + zero], 1.0 + zero)
+        energy_total = st["e_static"] + e_dram
         roofline = xp.where(c_cmp >= xp.maximum(c_mem, c_dram), 0.0, 1.0)
         return {
             "cycles": c_tot, "seconds": c_tot / T["clock_hz"],
-            "e_compute": e_compute, "e_dsp": e_dsp_mod,
-            "e_special": e_special, "e_sram": e_sram, "e_irf": e_irf_mod,
-            "e_orf": e_orf_mod, "e_dram": e_dram,
-            "energy_total": energy_total, "path": path, "roofline": roofline,
+            "e_compute": st["e_compute"], "e_dsp": st["e_dsp"],
+            "e_special": st["e_special"], "e_sram": st["e_sram"],
+            "e_irf": st["e_irf"], "e_orf": st["e_orf"], "e_dram": e_dram,
+            "energy_total": energy_total, "path": st["path"],
+            "roofline": roofline,
         }
+
+    def execute(self, T, op, bw_gbps, dram_rd, dram_wr,
+                cache_frac=CACHE_FRAC):
+        """Full seven-module execution (Eq. 4-6; TileSim.execute).
+
+        ``dram_rd`` / ``dram_wr`` are the effective DRAM bytes after the
+        orchestrator's activation-cache adjustment (§3.3.4).  Returns a
+        dict with ``cycles``, ``seconds``, per-module energies
+        (``e_compute``, ``e_dsp``, ``e_special``, ``e_sram``, ``e_irf``,
+        ``e_orf``, ``e_dram``), their ``energy_total``, and integer
+        ``path`` (0 MAC / 1 DSP / 2 SFU) and ``roofline`` (0 compute /
+        1 memory) codes.  Composition of :meth:`execute_static` and
+        :meth:`execute_dynamic` — bitwise identical to the historical
+        fused implementation.
+        """
+        return self.execute_dynamic(self.execute_static(T, op, cache_frac),
+                                    T, bw_gbps, dram_rd, dram_wr)
 
 
 @functools.lru_cache(maxsize=32)

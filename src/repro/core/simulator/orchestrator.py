@@ -23,14 +23,18 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 from ..arch import ChipConfig, Interconnect, TileTemplate
 from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
 from ..ir import OpClass, OpNode, WorkloadGraph, slice_op
 from .area import chip_area, tile_area
-from .costs import (ACT_CACHE_SLOTS, CACHE_FRAC, ActivationCache,
+from .costs import (ACT_CACHE_SLOTS, CACHE_FRAC, OP_COST_KEYS,
+                    TILE_COST_KEYS, ActivationCache, cost_model,
                     noc_transfer_energy_pj, noc_transfer_seconds)
+from .modules import tile_cost_dict
 from .outputs import EnergyBreakdown, OpResult, SimResult, TileBreakdown
-from .tile import TileSim
+from .tile import _PATH_NAME, _ROOFLINE_NAME, OpExec, TileSim, op_cost_dict
 
 __all__ = ["Placement", "ExecutionPlan", "ChipSim", "simulate", "noc_hops",
            "CACHE_FRAC"]
@@ -77,6 +81,80 @@ class ChipSim:
         self.tiles = [TileSim(t, calib, CACHE_FRAC) for t in self.templates]
         self.hops = noc_hops(chip.interconnect, len(self.tiles))
         self.ref_clock_hz = chip.ref_clock_mhz * 1e6
+        # (n_tiles,) tile-field arrays for the vectorized static-cost
+        # pre-pass (one CostModel query per plan instead of one scalar
+        # query per op — the per-op walk only runs the DRAM combine)
+        self._cm = cost_model(calib)
+        dicts = [tile_cost_dict(t) for t in self.templates]
+        self._T = {k: np.asarray([d[k] for d in dicts], np.float64)
+                   for k in TILE_COST_KEYS}
+
+    # ------------------------------------------------- vectorized static costs
+    def _static_pass(self, plan: ExecutionPlan) -> Tuple[Dict[int, int], dict]:
+        """Evaluate ``CostModel.execute_static`` for every (op, tile)
+        execution of the plan in one vectorized call.
+
+        Returns ``(rec_of, static)``: ``rec_of[i]`` is the first record
+        index of op ``i`` (single placements own one record; a k-way split
+        owns k consecutive records, one per placement tile in order), and
+        ``static`` the dict of per-record arrays.  Values are bitwise
+        identical to per-op scalar ``TileSim.execute`` internals — only
+        the numpy dispatch overhead is amortized.
+        """
+        g = plan.graph
+        rec_tiles: List[int] = []
+        rec_ops: List[Dict[str, float]] = []
+        rec_of: Dict[int, int] = {}
+        for i, op in enumerate(g.nodes):
+            if op.fused_into >= 0:
+                continue
+            pl = plan.placements[i]
+            rec_of[i] = len(rec_tiles)
+            if len(pl.tiles) == 1:
+                rec_tiles.append(pl.tiles[0])
+                rec_ops.append(op_cost_dict(op))
+            else:
+                sd = op_cost_dict(slice_op(op, pl.axis, len(pl.tiles)))
+                for t in pl.tiles:
+                    rec_tiles.append(t)
+                    rec_ops.append(sd)
+        if not rec_tiles:
+            return rec_of, {}
+        tsel = np.asarray(rec_tiles, np.int64)
+        T_rec = {k: self._T[k][tsel] for k in TILE_COST_KEYS}
+        op_rec = {k: np.asarray([d[k] for d in rec_ops], np.float64)
+                  for k in OP_COST_KEYS}
+        static = self._cm.execute_static(T_rec, op_rec, CACHE_FRAC)
+        static["clock_hz"] = T_rec["clock_hz"]
+        static["double_buffer"] = T_rec["double_buffer"]
+        return rec_of, static
+
+    def _exec_rec(self, static: dict, r: int, bw_gbps: float,
+                  dram_rd: float, dram_wr: float) -> OpExec:
+        """Scalar DRAM/Eq. 5 combine on pre-computed static record ``r``
+        (the fast-path twin of ``TileSim.execute``)."""
+        st = {k: static[k][r] for k in ("c_cmp", "c_mem", "e_compute",
+                                        "e_dsp", "e_special", "e_sram",
+                                        "e_irf", "e_orf", "e_static",
+                                        "path")}
+        T_row = {"clock_hz": static["clock_hz"][r],
+                 "double_buffer": static["double_buffer"][r]}
+        out = self._cm.execute_dynamic(st, T_row, float(bw_gbps),
+                                       float(dram_rd), float(dram_wr))
+        e = EnergyBreakdown(
+            compute=float(out["e_compute"]),
+            dram=float(out["e_dram"]),
+            sram=float(out["e_sram"]),
+            irf=float(out["e_irf"]),
+            orf=float(out["e_orf"]),
+            dsp=float(out["e_dsp"]),
+            special=float(out["e_special"]),
+        )
+        return OpExec(cycles=float(out["cycles"]),
+                      seconds=float(out["seconds"]), energy=e,
+                      path=_PATH_NAME[int(out["path"])],
+                      roofline=_ROOFLINE_NAME[int(out["roofline"])],
+                      dram_rd=dram_rd, dram_wr=dram_wr)
 
     # -------------------------------------------------------------- helpers
     def noc_seconds(self, bytes_: float) -> float:
@@ -92,6 +170,9 @@ class ChipSim:
     def run(self, plan: ExecutionPlan) -> SimResult:
         g = plan.graph
         n_tiles = len(self.tiles)
+        # one batched CostModel query for the whole plan (tile/op-only
+        # costs); the walk below only runs the per-op DRAM combine
+        rec_of, static = self._static_pass(plan)
         tile_finish = [0.0] * n_tiles
         op_finish: Dict[int, float] = {}
         op_tile: Dict[int, int] = {}
@@ -161,7 +242,8 @@ class ChipSim:
             bw_share = self.chip.dram_gbps / n_active
 
             if len(pl.tiles) == 1:
-                ex = self.tiles[tidx0].execute(op, bw_share, dram_rd, dram_wr)
+                ex = self._exec_rec(static, rec_of[i], bw_share, dram_rd,
+                                    dram_wr)
                 t_start = t_start0 + extra_noc_s
                 t_fin = t_start + ex.seconds
                 tile_finish[tidx0] = t_fin
@@ -173,7 +255,8 @@ class ChipSim:
                 t_fin = self._run_split(i, op, pl, tile_finish, t_dep,
                                         extra_noc_s, dram_rd, dram_wr,
                                         bw_share, breakdowns, chip_energy,
-                                        op_results, cache_kind)
+                                        op_results, cache_kind,
+                                        static, rec_of[i])
 
             op_finish[i] = t_fin
             op_tile[i] = tidx0
@@ -215,14 +298,15 @@ class ChipSim:
     # ----------------------------------------------------------- split path
     def _run_split(self, i, op, pl, tile_finish, t_dep, extra_noc_s,
                    dram_rd, dram_wr, bw_share, breakdowns, chip_energy,
-                   op_results, cache_kind) -> float:
+                   op_results, cache_kind, static, rec0) -> float:
         """Even split along OC / B / IC with explicit reduce cost (Eq. 3)."""
         k = len(pl.tiles)
         finishes = []
         slice_out = op.bytes_out / k
         sub = slice_op(op, pl.axis, k)
         for j, tidx in enumerate(pl.tiles):
-            ex = self.tiles[tidx].execute(sub, bw_share, dram_rd / k, dram_wr / k)
+            ex = self._exec_rec(static, rec0 + j, bw_share, dram_rd / k,
+                                dram_wr / k)
             t_start = max(tile_finish[tidx], t_dep) + extra_noc_s
             t_fin = t_start + ex.seconds
             tile_finish[tidx] = t_fin

@@ -17,7 +17,7 @@ from __future__ import annotations
 import jax
 
 __all__ = ["make_production_mesh", "make_mesh_for_devices",
-           "mesh_axis_kwargs"]
+           "mesh_axis_kwargs", "candidate_sharding"]
 
 
 def mesh_axis_kwargs(n_axes: int) -> dict:
@@ -26,6 +26,26 @@ def mesh_axis_kwargs(n_axes: int) -> dict:
     if axis_type is None:
         return {}
     return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def candidate_sharding():
+    """``NamedSharding`` over the DSE candidate batch axis, or ``None``
+    on a single device (where sharding is a no-op anyway).
+
+    The one sharding every engine evaluation path uses — the in-scan
+    ``batch_eval`` evaluator AND the compile-free batched mapper+executor
+    place their (B, ...) config/placement arrays with it, so a sweep or
+    GA population spans whatever devices exist.  Batch sizes must be a
+    multiple of ``mesh.size`` (``EvalEngine._pad_size`` rounds up after
+    bucket rounding) or XLA falls back to per-device replication.
+    """
+    devs = jax.devices()
+    if len(devs) <= 1:
+        return None
+    mesh = jax.make_mesh((len(devs),), ("candidates",),
+                         **mesh_axis_kwargs(1))
+    return jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec("candidates"))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -1,0 +1,197 @@
+"""Batched Eq. 1-3 mapper: bitwise placement parity with ``map_graph``.
+
+The compile-free exact path stands on one claim: the jitted mapping scan
+makes the *same placement decisions* as the Python mapper, bit for bit —
+owner tile, split width, split axis, split membership — on any (graph,
+chip) pair.  Pinned here three ways:
+
+* a hypothesis property over random DAGs (split-friendly MAC shapes,
+  SPECIAL ops, fused chains) x random genomes, compared row-by-row
+  against ``lower_plan(emit_schedule(g, map_graph(g, chip)))``;
+* the full 20-workload suite on the reference heterogeneous chips (the
+  ISSUE-3 acceptance bar);
+* golden-trace anchoring: the fused ``map_and_simulate`` dispatch
+  reproduces the frozen oracle traces on the golden workloads, and the
+  ``plan_from_arrays`` round-trip lets ``ChipSim`` replay batched-mapper
+  placements directly.
+"""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core import hetero_bl, hetero_bls, homogeneous_baseline
+from repro.core.arch import MAX_TILES
+from repro.core.compiler.batched_mapper import batched_map, map_and_simulate
+from repro.core.compiler.fusion import fuse
+from repro.core.compiler.mapper import UnmappableError, map_graph
+from repro.core.compiler.pipeline import lower_plan, plan_from_arrays
+from repro.core.compiler.precision import assign_precision
+from repro.core.compiler.schedule import emit_schedule
+from repro.core.dse.batch_eval import prepare_workload
+from repro.core.dse.encoding import decode, random_genomes
+from repro.core.ir import OpNode, OpType, Precision, WorkloadGraph
+from repro.core.simulator.batched import stack_chip_configs
+from repro.core.simulator.orchestrator import simulate
+from repro.core.workloads import build, workload_names
+
+REL = 1e-9
+
+
+def _passes(g: WorkloadGraph) -> WorkloadGraph:
+    """The config-independent compiler passes 1-2, as prepare_workload
+    applies them (deepcopy so the caller's graph stays pristine)."""
+    return fuse(assign_precision(copy.deepcopy(g)))
+
+
+def _assert_rows_match(ws, out, b, g2, chip):
+    """One candidate's batched placement rows == the lowered map_graph
+    plan, bitwise."""
+    tbl = lower_plan(emit_schedule(g2, map_graph(g2, chip)),
+                     chip.num_tiles, max_ops=len(ws["op_type"]))
+    nt = chip.num_tiles
+    assert np.array_equal(out["owner"][b], tbl.owner)
+    assert np.array_equal(out["n_split"][b], tbl.n_split)
+    assert np.array_equal(out["split_axis"][b], tbl.split_axis)
+    assert np.array_equal(out["split_mask"][b][:, :nt], tbl.split_mask)
+    assert not out["split_mask"][b][:, nt:].any()
+    return tbl
+
+
+def _check_chips(g: WorkloadGraph, chips) -> dict:
+    """Map ``g`` on every chip through both mappers and compare bitwise.
+    Returns coverage counters so callers can assert the interesting
+    branches actually fired."""
+    g2 = _passes(g)
+    ws = prepare_workload(g)
+    out = batched_map(ws, stack_chip_configs(chips))
+    cover = {"mappable": 0, "unmappable": 0, "splits": 0, "special": 0}
+    for b, chip in enumerate(chips):
+        try:
+            placements = map_graph(g2, chip)
+        except UnmappableError:
+            assert not out["ok"][b], (b, "reference unmappable, batched ok")
+            cover["unmappable"] += 1
+            continue
+        assert out["ok"][b], (b, "reference mappable, batched not ok")
+        cover["mappable"] += 1
+        _assert_rows_match(ws, out, b, g2, chip)
+        cover["splits"] += sum(len(p.tiles) > 1
+                               for p in placements.values())
+        sfu_tiles = {i for i, t in enumerate(chip.instances()) if t.sfu_mask}
+        cover["special"] += sum(p.tiles[0] in sfu_tiles
+                                for p in placements.values())
+    return cover
+
+
+# =============================================================================
+# deterministic branch-coverage cases
+# =============================================================================
+
+def _split_friendly_graph():
+    """Bulk MAC work that the mapper partitions across Big+Little, plus a
+    dependent chain exercising Eq. 1 cross-tile NoC delays."""
+    g = WorkloadGraph("split", model_precision=Precision.INT8)
+    a = g.matmul("mm0", 512, 512, 512)
+    b = g.dsp("sm", OpType.SOFTMAX, elems=512 * 512, preds=[a])
+    c = g.matmul("mm1", 512, 512, 1024, preds=[b])
+    g.matmul("mm2", 64, 512, 64, preds=[a, c])
+    return g
+
+
+def test_split_decision_parity_and_coverage():
+    cover = _check_chips(_split_friendly_graph(),
+                         [hetero_bl(), hetero_bls(),
+                          homogeneous_baseline(n_tiles=4)])
+    assert cover["mappable"] == 3
+    # the point of this case: the reference accepts Eq. 3 splits, and the
+    # batched mapper reproduced every one of them bitwise
+    assert cover["splits"] > 0
+
+
+def test_special_routing_parity_and_coverage():
+    g = WorkloadGraph("spec", model_precision=Precision.FP16)
+    a = g.add(OpNode("fft", OpType.FFT, elems=8192, fft_n=256,
+                     precision=Precision.FP16))
+    b = g.add(OpNode("lif", OpType.SNN_LIF, elems=2048, snn_timesteps=4,
+                     precision=Precision.FP16), preds=[a])
+    g.add(OpNode("poly", OpType.POLY, elems=4096, poly_degree=3,
+                 precision=Precision.FP16), preds=[b])
+    cover = _check_chips(g, [hetero_bls(), hetero_bl()])
+    assert cover["mappable"] == 2
+    # on the BLS chip every special op must route to the SFU tile
+    assert cover["special"] >= 3
+
+
+def test_unmappable_candidate_flagged_not_raised():
+    from repro.core.arch import ChipConfig, TileTemplate
+    t = TileTemplate(name="macsonly", rows=8, cols=8, dsp_count=0,
+                     precisions=frozenset({Precision.INT8}))
+    chip = ChipConfig(name="nodsp", tiles=((t, 2),))
+    g = WorkloadGraph("t", model_precision=Precision.INT8)
+    g.dsp("softmax", OpType.SOFTMAX, elems=100)
+    cover = _check_chips(g, [chip, hetero_bls()])
+    assert cover["unmappable"] == 1 and cover["mappable"] == 1
+
+
+# =============================================================================
+# full 20-workload suite (ISSUE-3 acceptance bar) + golden anchoring
+# (the hypothesis property lives in test_batched_mapper_props.py so this
+# module still runs where hypothesis is absent)
+# =============================================================================
+
+@pytest.mark.parametrize("wname", workload_names())
+def test_full_suite_placements_bitwise(wname):
+    """Batched-mapper placements bitwise equal to map_graph for every
+    stock workload on the reference heterogeneous chip."""
+    cover = _check_chips(build(wname), [hetero_bls()])
+    assert cover["mappable"] == 1
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("wname", workload_names())
+def test_full_suite_placements_bitwise_more_chips(wname):
+    _check_chips(build(wname),
+                 [hetero_bl(), homogeneous_baseline(n_tiles=6),
+                  decode(random_genomes(np.random.default_rng(11), 1)[0],
+                         "rnd")])
+
+
+GOLDEN_WORKLOADS = ["resnet50_int8", "vit_b16_fp16", "llama7b_int4",
+                    "snn_vgg9", "hyena_1_3b", "kan"]
+
+
+@pytest.mark.parametrize("wname", GOLDEN_WORKLOADS)
+def test_map_and_simulate_matches_oracle_on_golden_runs(wname):
+    """The fused compile-free dispatch reproduces the oracle (and hence
+    the frozen golden traces) on the golden workloads, and its placement
+    arrays replay through ChipSim via plan_from_arrays."""
+    chip = hetero_bls()
+    g2 = _passes(build(wname))
+    ws = prepare_workload(build(wname))
+    res = map_and_simulate(ws, stack_chip_configs([chip]))
+    assert bool(res["ok"][0])
+    plan = plan_from_arrays(g2, res["owner"][0], res["n_split"][0],
+                            res["split_axis"][0], res["split_mask"][0])
+    r = simulate(chip, plan)
+    assert res["latency_s"][0] == pytest.approx(r.latency_s, rel=REL)
+    assert res["energy_pj"][0] == pytest.approx(r.energy_pj, rel=REL)
+    assert res["achieved_tops"][0] == pytest.approx(r.achieved_tops, rel=REL)
+
+
+@pytest.mark.parametrize("wname", ["kan", "hyena_1_3b"])
+def test_map_and_simulate_matches_golden_trace(wname, golden):
+    """Golden-trace run through the new exact path: the fused dispatch
+    hits the frozen latency/energy of tests/golden/<wname>.json (no
+    --regen here: a drift is a real regression, not a retune)."""
+    import json
+    import pathlib
+    path = pathlib.Path(__file__).parent / "golden" / f"{wname}.json"
+    ref = json.loads(path.read_text())
+    chip = hetero_bls()
+    ws = prepare_workload(build(wname))
+    res = map_and_simulate(ws, stack_chip_configs([chip]))
+    assert res["latency_s"][0] == pytest.approx(ref["latency_s"], rel=1e-6)
+    assert res["energy_pj"][0] == pytest.approx(ref["energy_pj"], rel=1e-6)
+    assert res["achieved_tops"][0] == pytest.approx(ref["achieved_tops"],
+                                                    rel=1e-6)

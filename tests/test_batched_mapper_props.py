@@ -1,0 +1,86 @@
+"""Hypothesis property: batched-mapper placements bitwise vs map_graph.
+
+Random DAGs (biased toward the mapper's decision branches: MAC shapes
+large enough that Eq. 3 splits win sometimes, SPECIAL ops for SFU
+routing, non-splittable ops, fusable MAC->DSP chains) x random genomes
+must produce byte-identical ``owner`` / ``n_split`` / ``split_axis`` /
+``split_mask`` rows through both mappers.  Deterministic branch-coverage
+cases and the full 20-workload suite live in test_batched_mapper.py,
+which runs even where hypothesis is absent.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hetero_bls
+from repro.core.dse.encoding import decode, random_genomes
+from repro.core.ir import OpNode, OpType, Precision, WorkloadGraph
+
+from test_batched_mapper import _check_chips
+
+_OP_POOL = [OpType.MATMUL, OpType.FC, OpType.ADD, OpType.SOFTMAX,
+            OpType.GELU, OpType.SSM_SCAN, OpType.FFT, OpType.SNN_LIF,
+            OpType.POLY]
+
+
+@st.composite
+def mapper_graphs(draw):
+    n_ops = draw(st.integers(3, 10))
+    g = WorkloadGraph("prop", model_precision=draw(
+        st.sampled_from([Precision.INT8, Precision.FP16])))
+    for i in range(n_ops):
+        ot = draw(st.sampled_from(_OP_POOL))
+        preds = []
+        if i > 0:
+            k = draw(st.integers(0, min(2, i)))
+            preds = sorted(set(draw(
+                st.lists(st.integers(0, i - 1), min_size=k, max_size=k))))
+        kw = dict(precision=draw(st.sampled_from(
+            [Precision.INT8, Precision.FP16])))
+        if ot in (OpType.MATMUL, OpType.FC):
+            node = OpNode(f"op{i}", ot,
+                          m=draw(st.sampled_from([1, 17, 96, 256, 512])),
+                          k=draw(st.sampled_from([8, 96, 512])),
+                          n=draw(st.sampled_from([1, 64, 512, 1024])),
+                          splittable=draw(st.booleans()),
+                          act_sparsity=draw(st.sampled_from([0.0, 0.5])),
+                          **kw)
+        elif ot == OpType.FFT:
+            node = OpNode(f"op{i}", ot, elems=draw(st.integers(64, 4096)),
+                          fft_n=draw(st.sampled_from([8, 32, 256])), **kw)
+        elif ot == OpType.SNN_LIF:
+            node = OpNode(f"op{i}", ot, elems=draw(st.integers(16, 2048)),
+                          snn_timesteps=draw(st.integers(1, 8)), **kw)
+        elif ot == OpType.POLY:
+            node = OpNode(f"op{i}", ot, elems=draw(st.integers(16, 2048)),
+                          poly_degree=draw(st.integers(1, 6)), **kw)
+        elif ot == OpType.SSM_SCAN:
+            node = OpNode(f"op{i}", ot, elems=draw(st.integers(64, 4096)),
+                          seq_len=draw(st.sampled_from([1, 16, 64])), **kw)
+        else:
+            node = OpNode(f"op{i}", ot, elems=draw(st.integers(16, 8192)),
+                          **kw)
+        g.add(node, preds)
+    return g
+
+
+@given(mapper_graphs(), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_batched_placements_bitwise_vs_map_graph(g, seed):
+    rng = np.random.default_rng(seed)
+    chips = [decode(x, f"p{i}")
+             for i, x in enumerate(random_genomes(rng, 3))]
+    chips.append(hetero_bls())
+    _check_chips(g, chips)
+
+
+@pytest.mark.slow
+@given(mapper_graphs(), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=150, deadline=None)
+def test_batched_placements_bitwise_thorough(g, seed):
+    rng = np.random.default_rng(seed)
+    chips = [decode(x, f"p{i}")
+             for i, x in enumerate(random_genomes(rng, 4))]
+    _check_chips(g, chips)

@@ -166,6 +166,44 @@ def test_keep_prefilter_skips_without_poisoning_the_memo():
         assert np.array_equal(full[k], fresh[k]), k
 
 
+def test_pad_size_rounds_to_mesh_multiple_after_bucket():
+    """Sharded batch padding: the jit bucket is rounded up to a mesh-size
+    multiple AFTER bucket rounding (an indivisible batch axis would fall
+    back to whole-batch per-device replication), and shape reuse can
+    never hand back a non-multiple."""
+    class _Mesh:
+        size = 8
+
+    class _Sharding:
+        mesh = _Mesh()
+
+    eng = EvalEngine(["kan"])
+    eng._sharding = _Sharding()
+    for n in (1, 17, 18, 33, 63, 64, 65):
+        p = eng._pad_size(n)
+        assert p >= n and p % 8 == 0, (n, p)
+    # a stale non-multiple shape in the reuse window is filtered out
+    eng._shapes.add(42)
+    p = eng._pad_size(28)   # bucket 28 -> mesh-rounded 32; window [32, 48]
+    assert p % 8 == 0 and p != 42
+    # unsharded engines keep plain bucket padding
+    plain = EvalEngine(["kan"])
+    assert plain._pad_size(17) == 20
+
+
+def test_rescore_batched_mapper_matches_python_mapper():
+    """The compile-free exact path (default) scores bitwise identically
+    to the per-candidate map_graph + lower_plan pipeline."""
+    g = random_genomes(np.random.default_rng(5), 6)
+    rb = EvalEngine(["kan"]).rescore(g)
+    rp = EvalEngine(["kan"], exact_mapper="python").rescore(g)
+    for k in ("latency", "energy", "tops_w", "area"):
+        assert np.array_equal(rb[k], rp[k]), k
+    assert rb["meta"]["mapper"] == "batched"
+    assert rp["meta"]["mapper"] == "python"
+    assert rb["meta"]["backend"] == rp["meta"]["backend"] == "batched"
+
+
 def test_run_ga_fixed_seed_same_best_fitness():
     """The cache-aware engine (memo + vectorized stacking + bracket
     prefilter) reproduces the pre-refactor GA result bit-for-bit."""
@@ -203,6 +241,13 @@ assert shard._sharding is not None
 out = shard.evaluate(g)
 for k in plain:
     assert np.array_equal(plain[k], out[k]), k
+# the compile-free exact path shards too; 13 is deliberately uneven so
+# _pad_size's mesh rounding is what keeps the batch divisible
+g13 = g[:13]
+pr = EvalEngine(["kan"]).rescore(g13)
+sr = shard.rescore(g13)
+for k in ("latency", "energy", "tops_w", "area"):
+    assert np.array_equal(pr[k], sr[k]), k
 print("OK")
 """
     env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
