@@ -1,0 +1,100 @@
+"""Perf-trajectory comparison: fresh smoke numbers vs the committed
+baseline.
+
+Loads the just-written ``BENCH_PR3_smoke.json`` (produced by
+``python -m benchmarks.perf_micro --smoke``) and the committed
+``BENCH_PR3.json`` trajectory file, and emits a markdown table of
+per-benchmark speedups with the delta against the baseline's recorded
+speedup.  In CI the table is appended to ``$GITHUB_STEP_SUMMARY`` so the
+per-PR perf history is visible on the workflow run page; locally it
+prints to stdout.
+
+Smoke runs use a smaller population than the committed full-population
+numbers, so the comparison is trajectory-shaped (is the speedup holding?)
+rather than an apples-to-apples gate — the hard floor stays in
+``perf_micro --smoke`` itself.
+
+  PYTHONPATH=src python -m benchmarks.perf_compare
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+# not benchmarks.common's REPO_ROOT: importing common would pull in jax
+# (and mutate its config) just to diff two JSON files
+REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+__all__ = ["compare", "render_markdown"]
+
+
+def _load(filename: str):
+    path = os.path.join(REPO_ROOT, filename)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare(fresh: dict, baseline: dict) -> list:
+    """Per-benchmark rows: (name, fresh speedup, baseline speedup, delta).
+    Benchmarks present on only one side get None for the missing value."""
+    rows = []
+    fb = fresh.get("benchmarks", {})
+    bb = baseline.get("benchmarks", {})
+    for name in sorted(set(fb) | set(bb)):
+        f_spd = fb.get(name, {}).get("speedup")
+        b_spd = bb.get(name, {}).get("speedup")
+        delta = (f_spd - b_spd) if (f_spd is not None and b_spd is not None) \
+            else None
+        rows.append((name, f_spd, b_spd, delta))
+    return rows
+
+
+def render_markdown(rows: list, fresh: dict, baseline: dict) -> str:
+    def fmt(v, suffix="x"):
+        return f"{v:.2f}{suffix}" if v is not None else "—"
+
+    lines = [
+        "## Perf trajectory: smoke run vs committed BENCH_PR3.json",
+        "",
+        f"fresh: smoke={fresh.get('smoke')} · "
+        f"baseline: pr={baseline.get('pr')} smoke={baseline.get('smoke')}",
+        "",
+        "| benchmark | fresh speedup | committed speedup | delta |",
+        "|---|---|---|---|",
+    ]
+    for name, f_spd, b_spd, delta in rows:
+        d = fmt(delta) if delta is None else f"{delta:+.2f}x"
+        lines.append(f"| {name} | {fmt(f_spd)} | {fmt(b_spd)} | {d} |")
+    lines.append("")
+    lines.append("smoke populations are smaller than the committed "
+                 "full-population run; deltas show trajectory, the hard "
+                 "floor is enforced by `perf_micro --smoke`.")
+    return "\n".join(lines) + "\n"
+
+
+def main() -> int:
+    fresh = _load("BENCH_PR3_smoke.json")
+    baseline = _load("BENCH_PR3.json")
+    if fresh is None:
+        print("perf_compare: BENCH_PR3_smoke.json missing — run "
+              "`python -m benchmarks.perf_micro --smoke` first",
+              file=sys.stderr)
+        return 1
+    if baseline is None:
+        print("perf_compare: no committed BENCH_PR3.json baseline",
+              file=sys.stderr)
+        return 1
+    md = render_markdown(compare(fresh, baseline), fresh, baseline)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(md)
+    print(md)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

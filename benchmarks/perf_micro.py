@@ -13,7 +13,12 @@
 * the compile-free exact path (fused batched Eq. 1-3 mapper + plan
   executor, ``compiler.batched_mapper.map_and_simulate``) vs the
   per-candidate ``compile_to_table`` path, end-to-end compile+simulate
-  on a 64-genome x 6-workload population (ISSUE 3 targets >= 10x).
+  on a 64-genome x 6-workload population (ISSUE 3 targets >= 10x);
+* the throughput-mode exact path (the same fused dispatch consuming the
+  pipelined steady-state surface: II, per-inference energy) vs the
+  latency-mode measurement — the II scan state rides in the same scan,
+  so the ratio should hold near 1.0 (ISSUE 4 keeps it on the perf
+  trajectory).
 
 Besides the per-run ``results/bench/perf_micro.json`` payload, ``run``
 writes the machine-readable cross-PR trajectory file ``BENCH_PR3.json``
@@ -283,6 +288,46 @@ def run_exact_path_speedup(population: int = 64, repeats: int = 3,
     }
 
 
+def run_throughput_exact(population: int = 64, repeats: int = 3,
+                         workloads=EXACT_WORKLOADS) -> dict:
+    """Throughput-mode exact path on the perf trajectory.
+
+    The fused mapper+executor scan now carries the II state (per-tile
+    busy times, DRAM-byte / NoC-second occupancy); this measures the
+    dispatch in ``mode="throughput"`` (steady-state surface consumed) so
+    a regression in the new scan state shows up as the reported time
+    drifting above the latency-mode ``exact_path`` measurement it is
+    benched against in BENCH_PR3.json (ratio ~1.0 when the II state is
+    free, as intended).  The throughput invariant II <= fill makespan is
+    asserted on every mappable row (untimed)."""
+    rng = np.random.default_rng(2)  # same genomes as run_exact_path_speedup
+    genomes = random_genomes(rng, population)
+    cfgs = genomes_to_configs(genomes)
+    ws_all = {w: prepared_workload(w) for w in workloads}
+
+    def run_tp():
+        return {w: map_and_simulate(ws_all[w], cfgs, mode="throughput")
+                for w in workloads}
+
+    res = run_tp()  # jit warmup (shared with the latency-mode dispatch)
+    for w, r in res.items():
+        ok = r["ok"]
+        assert r["mode"] == "throughput"
+        assert np.all(r["ii_s"][ok] <= r["latency_s"][ok] * (1 + 1e-12)), \
+            (w, "II exceeded the fill makespan")
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        run_tp()
+        times.append(time.perf_counter() - t0)
+    return {
+        "population": population,
+        "workloads": list(workloads),
+        "throughput_s": min(times),
+        "throughput_median_s": median_s(times),
+    }
+
+
 def _bench_entry(median: float, baseline_median: float, **extra) -> dict:
     """One BENCH_PR3.json benchmark record: median seconds + speedup."""
     return {"median_s": median, "baseline_median_s": baseline_median,
@@ -296,7 +341,7 @@ def write_bench_pr3(payload: dict, smoke: bool) -> str:
     pass never clobbers the committed full-population numbers."""
     ep = payload["exact_path"]
     bench = {
-        "pr": 3,
+        "pr": 4,
         "smoke": smoke,
         "benchmarks": {
             "exact_path": _bench_entry(
@@ -307,6 +352,14 @@ def write_bench_pr3(payload: dict, smoke: bool) -> str:
                 meets_target=ep["meets_target"]),
         },
     }
+    if "exact_path_throughput" in payload:
+        tp = payload["exact_path_throughput"]
+        # baseline = the latency-mode fused dispatch: speedup ~1.0 means
+        # the II scan state costs nothing on the exact path
+        bench["benchmarks"]["exact_path_throughput"] = _bench_entry(
+            tp["throughput_median_s"], ep["exact_path_median_s"],
+            population=tp["population"], workloads=tp["workloads"],
+            mode="throughput")
     if "population_sim" in payload:
         ps = payload["population_sim"]
         bench["benchmarks"]["population_sim"] = _bench_entry(
@@ -333,6 +386,9 @@ def run(smoke: bool = False) -> dict:
     if smoke:
         payload = {
             "exact_path": run_exact_path_speedup(
+                population=16, repeats=2,
+                workloads=["kan", "resnet50_int8"]),
+            "exact_path_throughput": run_throughput_exact(
                 population=16, repeats=2,
                 workloads=["kan", "resnet50_int8"]),
         }
@@ -368,6 +424,7 @@ def run(smoke: bool = False) -> dict:
         "ga_engine": run_ga_speedup(),
         "population_sim": run_population_sim_speedup(),
         "exact_path": run_exact_path_speedup(),
+        "exact_path_throughput": run_throughput_exact(),
     }
     save_json("perf_micro", payload)
     write_bench_pr3(payload, smoke=False)
@@ -385,6 +442,14 @@ def _csv_rows(p: dict, smoke: bool = False) -> list:
                     f"{ep['median_speedup']:.1f}x_faster "
                     f"pop={ep['population']} "
                     f"target_10x={'met' if ep['meets_target'] else 'MISSED'}")]
+    if "exact_path_throughput" in p:
+        tp = p["exact_path_throughput"]
+        ratio = ep["exact_path_median_s"] / max(tp["throughput_median_s"],
+                                                1e-12)
+        rows.append(csv_row(
+            "perf_exact_path_throughput", tp["throughput_s"],
+            f"vs_latency_mode_dispatch={ratio:.2f}x "
+            f"pop={tp['population']}"))
     if smoke:
         return rows
     ga = p["ga_engine"]

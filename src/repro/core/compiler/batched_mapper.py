@@ -51,8 +51,8 @@ import jax.numpy as jnp
 from ..arch import MAX_TILES
 from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
 from ..ir import OpClass
-from ..simulator.batched import (CHIP_KEYS, TILE_KEYS, _build_plan_exec,
-                                 _OP_TABLE_KEYS)
+from ..simulator.batched import (CHIP_KEYS, SCHEDULE_MODES, TILE_KEYS,
+                                 _build_plan_exec, _OP_TABLE_KEYS)
 from ..simulator.costs import (OP_COST_KEYS, cost_model,
                                noc_transfer_seconds, split_op_fields)
 
@@ -304,7 +304,8 @@ def batched_map(ws: Dict[str, np.ndarray],
 def map_and_simulate(ws: Dict[str, np.ndarray],
                      cfgs: Dict[str, Dict[str, np.ndarray]],
                      calib: CalibrationTable = DEFAULT_CALIB,
-                     sharding=None, placed=None) -> Dict[str, np.ndarray]:
+                     sharding=None, placed=None,
+                     mode: str = "latency") -> Dict[str, np.ndarray]:
     """The compile-free exact path: batched Eq. 1-3 mapping fused with the
     batched plan executor in one jitted dispatch.
 
@@ -316,7 +317,18 @@ def map_and_simulate(ws: Dict[str, np.ndarray],
     placement arrays and the ``ok`` (B,) mappability mask; rows with
     ``ok == False`` (an op with no compatible tile) carry garbage metrics
     and must be discarded by the caller.
+
+    ``mode`` selects the §3.2 schedule mode the caller scores on.  The
+    fused dispatch always evaluates both surfaces (the latency makespan
+    and the pipelined steady state — ``ii_s``, ``energy_ss_pj``,
+    ``achieved_tops_ss`` and the per-resource bounds — cost one shared
+    scan), so mode only validates and tags the result; an unknown mode
+    raises rather than silently returning latency numbers.
     """
+    if mode not in SCHEDULE_MODES:
+        raise ValueError(
+            f"batched mapper+executor cannot model schedule mode {mode!r}; "
+            f"supported modes: {SCHEDULE_MODES}")
     xs, max_ops = _device_xs(ws)
     tile, chip = placed if placed is not None \
         else place_configs(cfgs, sharding)
@@ -325,4 +337,5 @@ def map_and_simulate(ws: Dict[str, np.ndarray],
     res = {k: np.asarray(v) for k, v in out.items()}
     res["area_mm2"] = cfgs["chip"]["chip_area"]
     res["peak_tops"] = cfgs["chip"]["peak_tops"]
+    res["mode"] = mode
     return res

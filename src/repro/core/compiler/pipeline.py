@@ -113,7 +113,7 @@ def lower_plan(plan: ExecutionPlan, num_tiles: int,
     }
     table = PlanTensor(ops=t, owner=owner, n_split=n_split,
                        split_axis=split_axis, split_mask=split_mask,
-                       num_tiles=num_tiles, aux=aux)
+                       num_tiles=num_tiles, aux=aux, mode=plan.mode)
     table.validate()
     return table
 

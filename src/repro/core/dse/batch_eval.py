@@ -45,7 +45,8 @@ from ..simulator.batched import (CHIP_KEYS, TILE_KEYS, fifo_insert,
                                  stack_chip_configs)
 from ..simulator.costs import (ACC_BYTES, ACT_CACHE_SLOTS, CACHE_FRAC,
                                DSP_OPS_PER_ELEM, DSP_OPS_TABLE, SFU_NEED,
-                               cost_model)
+                               cost_model, pipeline_bounds,
+                               steady_state_energy)
 from ..simulator.orchestrator import noc_hops
 
 __all__ = ["prepare_workload", "prepare_configs", "batch_evaluate"]
@@ -111,7 +112,8 @@ def _make_eval(calib: CalibrationTable, max_ops: int):
 
     def execute(T, op, bw_gbps, dram_rd, dram_wr):
         out = cm.execute(T, op, bw_gbps, dram_rd, dram_wr)
-        return out["seconds"], out["energy_total"], out["cycles"]
+        return (out["seconds"], out["energy_total"], out["cycles"],
+                out["dram_bytes"])
 
     return {
         "supports": cm.supports, "roofline_cycles": cm.roofline_cycles,
@@ -147,7 +149,7 @@ def _build_eval_fn(calib: CalibrationTable, max_ops: int):
 
         def step(carry, op):
             (fin_est, fin_act, opf_est, opf_act, op_tile, tile_ops, energy,
-             cached_at, fifo_ops, fifo_bytes) = carry
+             cached_at, fifo_ops, fifo_bytes, tile_busy, res_occ) = carry
             idx = jnp.asarray(op["index"], jnp.int32)
             active = (op["valid"] > 0) & (op["fused"] == 0)
 
@@ -246,13 +248,15 @@ def _build_eval_fn(calib: CalibrationTable, max_ops: int):
             bw_share = chip["dram_gbps"] / n_active
 
             # single-tile execution on ALL tiles, select owner
-            sec_all, en_all, _ = fns["execute"](T, op, bw_share, dram_rd, dram_wr)
+            sec_all, en_all, _, db_single = fns["execute"](T, op, bw_share,
+                                                           dram_rd, dram_wr)
             t_start_1 = t_start0 + extra_noc_s
             fin_single = t_start_1 + sec_all[owner]
 
             # split execution (mirrors orchestrator._run_split)
-            sec_sub, en_sub, _ = fns["execute"](T, sub, bw_share,
-                                                dram_rd / kf, dram_wr / kf)
+            sec_sub, en_sub, _, db_sub = fns["execute"](T, sub, bw_share,
+                                                        dram_rd / kf,
+                                                        dram_wr / kf)
             starts_sub = jnp.maximum(fin_act, t_dep_act) + extra_noc_s
             fins_sub = jnp.where(mac_mask, starts_sub + sec_sub, -jnp.inf)
             reduce_s = noc_seconds(op["bytes_out"] / kf)
@@ -289,20 +293,40 @@ def _build_eval_fn(calib: CalibrationTable, max_ops: int):
             op_tile = op_tile.at[idx].set(jnp.where(active, owner, -1))
             tile_ops = jnp.where(active, new_ops, tile_ops)
             energy = energy + jnp.where(active, e_op, 0.0)
+
+            # throughput-mode II state: per-tile busy time plus shared
+            # DRAM-byte / NoC-second occupancy (the batched executor's
+            # res_occ twin, on this scan's greedy placements)
+            busy_op = jnp.where(do_split, jnp.where(mac_mask, sec_sub, 0.0),
+                                onehot * sec_all[owner])
+            tile_busy = tile_busy + jnp.where(active, busy_op, 0.0)
+            dram_b_op = jnp.where(
+                do_split,
+                jnp.sum(jnp.where(mac_mask,
+                                  jnp.broadcast_to(db_sub, (MAX_TILES,)),
+                                  0.0)),
+                db_single)
+            noc_s_op = extra_noc_s + jnp.where(do_split, reduce_s, 0.0)
+            res_occ = res_occ + jnp.where(
+                active, jnp.stack([dram_b_op, noc_s_op]), jnp.zeros(2, _F))
+
             fifo_ops, fifo_bytes, cached_at = fifo_insert(
                 fifo_ops, fifo_bytes, cached_at, owner, idx,
                 op["bytes_out"], T["cache_cap"][owner], active)
             return (fin_est, fin_act, opf_est, opf_act, op_tile, tile_ops,
-                    energy, cached_at, fifo_ops, fifo_bytes), None
+                    energy, cached_at, fifo_ops, fifo_bytes, tile_busy,
+                    res_occ), None
 
         init = (jnp.zeros(MAX_TILES, _F), jnp.zeros(MAX_TILES, _F),
                 jnp.zeros(max_ops, _F), jnp.zeros(max_ops, _F),
                 jnp.full(max_ops, -1, jnp.int32), jnp.zeros(MAX_TILES, _F),
                 jnp.asarray(0.0, _F), jnp.full(max_ops, -1, jnp.int32),
                 jnp.full((MAX_TILES, ACT_CACHE_SLOTS), -1, jnp.int32),
-                jnp.zeros((MAX_TILES, ACT_CACHE_SLOTS), _F))
+                jnp.zeros((MAX_TILES, ACT_CACHE_SLOTS), _F),
+                jnp.zeros(MAX_TILES, _F), jnp.zeros(2, _F))
         (fin_est, fin_act, opf_est, opf_act, op_tile, tile_ops, energy,
-         *_), _ = jax.lax.scan(step, init, ops_xs["per_op"])
+         _, _, _, tile_busy, res_occ), _ = jax.lax.scan(step, init,
+                                                        ops_xs["per_op"])
 
         makespan = jnp.max(fin_act)
         gated = tile_ops <= 0
@@ -312,8 +336,25 @@ def _build_eval_fn(calib: CalibrationTable, max_ops: int):
                                  * makespan * resid * 1e9, 0.0))
         energy = energy + leak
         achieved_tops = jnp.where(makespan > 0, total_macs / makespan / 1e12, 0.0)
+
+        # throughput-mode steady state (same pipeline_bounds composition
+        # as the exact backends, over this scan's greedy placements);
+        # unmappable candidates keep inf on the II surface too
+        leak_rate = jnp.sum(jnp.where(T["exists"] > 0,
+                                      c.leak_mw_per_mm2 * T["area_mm2"]
+                                      * resid * 1e9, 0.0))
+        bounds = pipeline_bounds(jnp, makespan, jnp.max(tile_busy),
+                                 res_occ[0], chip["dram_gbps"], res_occ[1])
+        ii = jnp.where(jnp.isfinite(makespan), bounds["ii_s"], jnp.inf)
+        energy_ss = jnp.where(
+            jnp.isfinite(makespan),
+            steady_state_energy(energy, leak, leak_rate, ii), jnp.inf)
+        tops_ss = jnp.where(jnp.isfinite(ii) & (ii > 0),
+                            total_macs / ii / 1e12, 0.0)
         return {"latency_s": makespan, "energy_pj": energy,
-                "achieved_tops": achieved_tops}
+                "achieved_tops": achieved_tops, "ii_s": ii,
+                "energy_ss_pj": energy_ss, "achieved_tops_ss": tops_ss,
+                "fill_latency_s": makespan}
 
     return eval_one
 

@@ -50,8 +50,18 @@ backends sharing one set of cost formulas (``simulator.costs``):
 
 Search uses the engine; finalists are re-scored through ``rescore()``
 (batched exact backend), so reported numbers are exact.  Every
-``evaluate()`` result carries a ``"meta"`` entry reporting the backend
-and the call's cache hit/miss/skip counts.
+``evaluate()`` result carries a ``"meta"`` entry reporting the backend,
+the schedule mode, and the call's cache hit/miss/skip counts.
+
+**Schedule modes** (§3.2, the serving-vs-latency scenario axis).
+``mode="latency"`` (default) scores the one-batch makespan;
+``mode="throughput"`` scores the pipelined steady state — the
+``latency`` column becomes the initiation interval (II), ``energy`` the
+per-inference steady-state energy (leakage charged over II), and
+``tops_w`` the TOPS/W at the pipelined rate.  All three backends model
+both modes through the shared ``costs.pipeline_bounds`` composition
+(oracle/batched at 0 rel err; the scan backend on its in-scan greedy
+placements); memo entries are keyed on (mode, genome).
 
 An optional ``keep`` predicate lets a frontend skip simulation for
 genomes it will discard anyway (e.g. the GA's out-of-bracket children,
@@ -70,7 +80,7 @@ import numpy as np
 
 from ..arch import (KNOB_GRID, MAX_TILE_TYPES, MAX_TILES, prec_mask)
 from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
-from ..simulator.orchestrator import CACHE_FRAC, noc_hops
+from ..simulator.orchestrator import CACHE_FRAC, SCHEDULE_MODES, noc_hops
 from ..workloads import build
 from .batch_eval import (_CHIP_KEYS, _TILE_KEYS, batch_evaluate,
                          prepare_configs, prepare_workload)
@@ -78,9 +88,18 @@ from .encoding import (FIELDS_PER_TILE, GENOME_LEN, _TILE_FIELDS, decode)
 
 __all__ = ["EvalEngine", "EngineStats", "genomes_to_configs",
            "genome_areas", "canonical_genomes", "prepared_workload",
-           "BACKENDS"]
+           "BACKENDS", "SCHEDULE_MODES"]
 
 BACKENDS = ("scan", "batched", "oracle")
+
+# metric keys each §3.2 schedule mode scores on: latency-critical
+# deployment uses the one-batch makespan; serving (throughput) uses the
+# pipelined steady state — initiation interval, per-inference energy with
+# leakage charged over II, and steady-state achieved TOPS
+_MODE_KEYS = {
+    "latency": ("latency_s", "energy_pj", "achieved_tops"),
+    "throughput": ("ii_s", "energy_ss_pj", "achieved_tops_ss"),
+}
 
 
 @functools.lru_cache(maxsize=128)
@@ -384,13 +403,16 @@ class EvalEngine:
                  vectorized: bool = True, shard: bool = False,
                  aggressive_int4: bool = False, enable_fusion: bool = True,
                  memo_limit: int = 500_000, backend: str = "scan",
-                 exact_mapper: str = "batched"):
+                 exact_mapper: str = "batched", mode: str = "latency"):
         if backend not in BACKENDS:
             raise ValueError(f"backend {backend!r} not in {BACKENDS}")
         if exact_mapper not in ("batched", "python"):
             raise ValueError(f"exact_mapper {exact_mapper!r} not in "
                              f"('batched', 'python')")
+        if mode not in SCHEDULE_MODES:
+            raise ValueError(f"mode {mode!r} not in {SCHEDULE_MODES}")
         self.exact_mapper = exact_mapper
+        self.mode = mode
         self.workloads = list(workloads)
         self.calib = calib
         self.batch = batch
@@ -490,14 +512,19 @@ class EvalEngine:
         return {"tile": {k: v[idx] for k, v in cfgs["tile"].items()},
                 "chip": {k: v[idx] for k, v in cfgs["chip"].items()}}
 
-    def _simulate(self, cfgs, n: int, genomes: Optional[np.ndarray] = None):
+    def _simulate(self, cfgs, n: int, genomes: Optional[np.ndarray] = None,
+                  mode: Optional[str] = None):
         """(n, W) lat/en/tw for the first n rows of a (possibly padded)
-        config stack, through this engine's backend."""
+        config stack, through this engine's backend.  In throughput mode
+        the three metrics are the steady-state surface: II (s),
+        per-inference energy (pJ), and TOPS/W at the steady-state rate."""
+        mode = self.mode if mode is None else mode
         if self.backend != "scan":
             return self._simulate_exact(genomes[:n],
                                         oracle=self.backend == "oracle",
                                         pad_to=len(cfgs["chip"]["chip_area"]),
-                                        cfgs=cfgs)
+                                        cfgs=cfgs, mode=mode)
+        lkey, ekey, akey = _MODE_KEYS[mode]
         W = len(self.workloads)
         pad_n = len(cfgs["chip"]["chip_area"])
         lat = np.zeros((pad_n, W))
@@ -506,15 +533,15 @@ class EvalEngine:
         cfgs = self._shard_cfgs(cfgs)
         for j, wname in enumerate(self.workloads):
             res = batch_evaluate(self._prepared(wname), cfgs, self.calib)
-            lat[:, j] = res["latency_s"]
-            en[:, j] = res["energy_pj"]
-            power = res["energy_pj"] * 1e-12 \
-                / np.maximum(res["latency_s"], 1e-30)
-            tw[:, j] = res["achieved_tops"] / np.maximum(power, 1e-30)
+            lat[:, j] = res[lkey]
+            en[:, j] = res[ekey]
+            power = res[ekey] * 1e-12 / np.maximum(res[lkey], 1e-30)
+            tw[:, j] = res[akey] / np.maximum(power, 1e-30)
         return lat[:n], en[:n], tw[:n]
 
     def _simulate_exact(self, genomes: np.ndarray, oracle: bool = False,
-                        pad_to: Optional[int] = None, cfgs=None):
+                        pad_to: Optional[int] = None, cfgs=None,
+                        mode: Optional[str] = None):
         """Exact scoring.  Default (``exact_mapper="batched"``): the
         compile-free path — one fused batched-mapping + plan-execution
         dispatch per workload, placements bitwise equal to ``map_graph``.
@@ -523,17 +550,21 @@ class EvalEngine:
         per-candidate ``ChipSim``.  Unmappable (genome, workload) pairs
         score inf latency/energy on every path.  ``cfgs``, when given,
         is the caller's already-built (``pad_to``-row) config stack for
-        these genomes, so ``evaluate()`` misses don't stack twice."""
+        these genomes, so ``evaluate()`` misses don't stack twice.
+        ``mode`` selects the §3.2 schedule mode (plans are emitted with
+        it, so every exact path scores the same steady state)."""
         from ..compiler.mapper import UnmappableError, map_graph
         from ..compiler.pipeline import lower_plan
         from ..compiler.schedule import emit_schedule
         from ..simulator.batched import simulate_plans
         from ..simulator.orchestrator import simulate as oracle_simulate
 
+        mode = self.mode if mode is None else mode
         genomes = np.asarray(genomes, np.int64).reshape(-1, GENOME_LEN)
         n, W = len(genomes), len(self.workloads)
         if not oracle and self.exact_mapper == "batched":
-            return self._simulate_exact_batched(genomes, pad_to, cfgs)
+            return self._simulate_exact_batched(genomes, pad_to, cfgs, mode)
+        lkey, ekey, akey = _MODE_KEYS[mode]
         chips = [decode(g, f"x{i}") for i, g in enumerate(genomes)]
         lat = np.full((n, W), np.inf)
         en = np.full((n, W), np.inf)
@@ -547,15 +578,22 @@ class EvalEngine:
                     placements = map_graph(g, chip, self.calib)
                 except UnmappableError:
                     continue
-                plans.append(emit_schedule(g, placements))
+                plans.append(emit_schedule(g, placements, mode=mode))
                 rows.append(i)
             if not rows:
                 continue
             if oracle:
                 for i, plan in zip(rows, plans):
                     r = oracle_simulate(chips[i], plan, self.calib)
-                    lat[i, j], en[i, j] = r.latency_s, r.energy_pj
-                    tw[i, j] = r.tops_per_w
+                    if mode == "throughput":
+                        lat[i, j] = r.pipeline["ii_s"]
+                        en[i, j] = r.pipeline["energy_ss_pj"]
+                        a = r.pipeline["achieved_tops_ss"]
+                    else:
+                        lat[i, j], en[i, j] = r.latency_s, r.energy_pj
+                        a = r.achieved_tops
+                    power = en[i, j] * 1e-12 / max(lat[i, j], 1e-30)
+                    tw[i, j] = a / max(power, 1e-30)
                 continue
             sel = list(rows)
             tables = [lower_plan(p, chips[i].num_tiles)
@@ -568,15 +606,15 @@ class EvalEngine:
                 tables = tables + [tables[0]] * reps
             res = simulate_plans([chips[i] for i in sel], tables, self.calib)
             for r, i in enumerate(rows):
-                lat[i, j] = res["latency_s"][r]
-                en[i, j] = res["energy_pj"][r]
-                power = res["energy_pj"][r] * 1e-12 \
-                    / max(res["latency_s"][r], 1e-30)
-                tw[i, j] = res["achieved_tops"][r] / max(power, 1e-30)
+                lat[i, j] = res[lkey][r]
+                en[i, j] = res[ekey][r]
+                power = res[ekey][r] * 1e-12 / max(res[lkey][r], 1e-30)
+                tw[i, j] = res[akey][r] / max(power, 1e-30)
         return lat, en, tw
 
     def _simulate_exact_batched(self, genomes: np.ndarray,
-                                pad_to: Optional[int] = None, cfgs=None):
+                                pad_to: Optional[int] = None, cfgs=None,
+                                mode: Optional[str] = None):
         """The compile-free exact path: per workload, ONE fused
         batched-mapper + plan-executor dispatch over all candidates
         (``compiler.batched_mapper.map_and_simulate``), sharded over the
@@ -586,6 +624,8 @@ class EvalEngine:
         per (workload, candidate) on the host."""
         from ..compiler.batched_mapper import map_and_simulate, place_configs
 
+        mode = self.mode if mode is None else mode
+        lkey, ekey, akey = _MODE_KEYS[mode]
         n, W = len(genomes), len(self.workloads)
         lat = np.full((n, W), np.inf)
         en = np.full((n, W), np.inf)
@@ -603,26 +643,35 @@ class EvalEngine:
         placed = place_configs(cfgs, self._sharding)
         for j, wname in enumerate(self.workloads):
             res = map_and_simulate(self._prepared(wname), cfgs, self.calib,
-                                   placed=placed)
+                                   placed=placed, mode=mode)
             ok = res["ok"][:n]
-            l, e = res["latency_s"][:n], res["energy_pj"][:n]
+            l, e = res[lkey][:n], res[ekey][:n]
             lat[ok, j] = l[ok]
             en[ok, j] = e[ok]
             power = e[ok] * 1e-12 / np.maximum(l[ok], 1e-30)
-            tw[ok, j] = res["achieved_tops"][:n][ok] \
-                / np.maximum(power, 1e-30)
+            tw[ok, j] = res[akey][:n][ok] / np.maximum(power, 1e-30)
         return lat, en, tw
 
     # ------------------------------------------------------------- evaluate
     def evaluate(self, genomes: np.ndarray,
-                 keep: Optional[Callable[[np.ndarray], np.ndarray]] = None
-                 ) -> Dict[str, np.ndarray]:
+                 keep: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+                 mode: Optional[str] = None) -> Dict[str, np.ndarray]:
         """Score every genome on every workload.
 
         ``keep(areas) -> (N,) bool`` optionally pre-filters by chip area:
         genomes with ``keep == False`` (and no memoized result) are not
         simulated and come back with inf latency/energy and zero TOPS/W.
+
+        ``mode`` overrides the engine's §3.2 schedule mode for this call
+        (``"latency"`` or ``"throughput"``).  In throughput mode the
+        ``latency`` column holds the steady-state initiation interval,
+        ``energy`` the per-inference steady-state energy, and ``tops_w``
+        the TOPS/W at the pipelined rate; memo entries are keyed on
+        (mode, genome), so the two modes never cross-contaminate.
         """
+        mode = self.mode if mode is None else mode
+        if mode not in SCHEDULE_MODES:
+            raise ValueError(f"mode {mode!r} not in {SCHEDULE_MODES}")
         t0 = time.perf_counter()
         pre = dataclasses.replace(self.stats)
         genomes = np.asarray(genomes, dtype=np.int64).reshape(-1, GENOME_LEN)
@@ -634,7 +683,8 @@ class EvalEngine:
         area = np.asarray(cfgs["chip"]["chip_area"], np.float64).copy()
         self.stats.requests += n
 
-        keys = [self._key(g) for g in canonical_genomes(genomes)]
+        tag = mode.encode() + b":"
+        keys = [tag + self._key(g) for g in canonical_genomes(genomes)]
         keep_mask = np.ones(n, bool) if keep is None else \
             np.asarray(keep(area), bool)
 
@@ -665,7 +715,8 @@ class EvalEngine:
             pad = self._pad_size(len(chunk))
             sel = chunk + [chunk[0]] * (pad - len(chunk))
             l, e, t = self._simulate(self._take(cfgs, np.asarray(sel)),
-                                     len(chunk), genomes[np.asarray(sel)])
+                                     len(chunk), genomes[np.asarray(sel)],
+                                     mode=mode)
             for r, i in enumerate(chunk):
                 lat[i], en[i], tw[i] = l[r], e[r], t[r]
                 if self.memoize:
@@ -680,7 +731,7 @@ class EvalEngine:
             j = seen_this_call[keys[i]]
             lat[i], en[i], tw[i] = lat[j], en[j], tw[j]
         self.stats.eval_seconds += time.perf_counter() - t0
-        meta = {"backend": self.backend, "requests": n,
+        meta = {"backend": self.backend, "mode": mode, "requests": n,
                 "hits": self.stats.hits - pre.hits,
                 "misses": self.stats.misses - pre.misses,
                 "skips": self.stats.skips - pre.skips}
@@ -688,22 +739,27 @@ class EvalEngine:
         return {"latency": lat, "energy": en, "tops_w": tw, "area": area,
                 "meta": meta}
 
-    def rescore(self, genomes: np.ndarray, oracle: bool = False
-                ) -> Dict[str, np.ndarray]:
+    def rescore(self, genomes: np.ndarray, oracle: bool = False,
+                mode: Optional[str] = None) -> Dict[str, np.ndarray]:
         """Exact re-scoring of finalists through the engine's exact
         mapper — by default the compile-free batched Eq. 1-3 pass fused
         with the batched plan executor (bitwise ``map_graph`` placements,
         no per-candidate compile); ``exact_mapper="python"`` compiles
         per candidate instead, and ``oracle=True`` walks the Python
         ChipSim.  Bypasses the memo — results are exact regardless of
-        this engine's search backend."""
+        this engine's search backend.  ``mode`` overrides the engine's
+        schedule mode (throughput: II / steady-state energy / steady-state
+        TOPS/W in the latency/energy/tops_w columns)."""
+        mode = self.mode if mode is None else mode
+        if mode not in SCHEDULE_MODES:
+            raise ValueError(f"mode {mode!r} not in {SCHEDULE_MODES}")
         genomes = np.asarray(genomes, dtype=np.int64).reshape(-1, GENOME_LEN)
-        lat, en, tw = self._simulate_exact(genomes, oracle=oracle)
+        lat, en, tw = self._simulate_exact(genomes, oracle=oracle, mode=mode)
         mapper = "python" if oracle else self.exact_mapper
         return {"latency": lat, "energy": en, "tops_w": tw,
                 "area": self.areas(genomes),
                 "meta": {"backend": "oracle" if oracle else "batched",
-                         "mapper": mapper,
+                         "mapper": mapper, "mode": mode,
                          "requests": len(genomes), "hits": 0,
                          "misses": len(genomes), "skips": 0,
                          "hit_rate": 0.0}}

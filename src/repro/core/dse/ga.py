@@ -77,7 +77,13 @@ def run_ga(sweep: SweepResult, bracket: float,
     hits, and with ``prefilter`` (default) out-of-bracket children — whose
     Eq. 8 fitness is -inf regardless of their metrics — skip simulation
     entirely.  Both are fitness-preserving: ``best_fitness`` is bitwise
-    identical to the uncached, unfiltered evaluation."""
+    identical to the uncached, unfiltered evaluation.
+
+    A shared engine in ``mode="throughput"`` refines on the pipelined
+    steady state instead (energy column = per-inference energy at II):
+    the Eq. 8 savings term then optimizes serving energy, and an II
+    target can be enforced on finalists via
+    ``objective.serving_fitness``."""
     engine = (engine.check_workloads(sweep.workloads, calib)
               if engine is not None else EvalEngine(sweep.workloads, calib))
     rng = np.random.default_rng(seed + int(bracket))

@@ -132,7 +132,12 @@ def run_sweep(workloads: Sequence[str], samples_per_stratum: int = 64,
     """One seed of the stratified sweep (strata = bracket x family).
 
     Pass a shared ``engine`` to reuse its caches across seeds and into
-    the downstream GA refinement (repeated genomes are free)."""
+    the downstream GA refinement (repeated genomes are free).  The
+    engine's §3.2 schedule mode flows through unchanged: with
+    ``EvalEngine(..., mode="throughput")`` the latency/energy matrices
+    hold the pipelined steady state (II, energy per inference), so the
+    same sweep ranks serving-deployment designs — see
+    ``objective.serving_fitness`` and ``examples/serve_lm.py --dse``."""
     from .encoding import sample_in_bracket
 
     engine = (engine.check_workloads(workloads, calib)

@@ -406,6 +406,12 @@ class PlanTensor:
     split_mask: np.ndarray   # (max_ops, num_tile_slots) int8
     num_tiles: int           # instantiated tiles of the target chip
     aux: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    # §3.2 schedule mode stamped from ExecutionPlan.mode by lower_plan:
+    # "latency" (one batch, makespan-scored) or "throughput" (pipelined
+    # batches, scored by the steady-state initiation interval).  The
+    # batched executor dispatches on it — backends refuse modes they
+    # cannot model instead of silently returning latency numbers.
+    mode: str = "latency"
 
     @property
     def name(self) -> str:

@@ -41,8 +41,8 @@ from ..ir import MAX_PREDS, PlanTensor
 from .area import chip_area, tile_area
 from .costs import (ACT_CACHE_SLOTS, CACHE_FRAC, OP_COST_KEYS, cost_model,
                     noc_transfer_energy_pj, noc_transfer_seconds,
-                    split_op_fields)
-from .orchestrator import noc_hops
+                    pipeline_bounds, split_op_fields, steady_state_energy)
+from .orchestrator import SCHEDULE_MODES, noc_hops
 
 __all__ = ["stack_chip_configs", "stack_plan_tables", "batch_simulate",
            "simulate_plans", "fifo_insert", "TILE_KEYS", "CHIP_KEYS"]
@@ -125,6 +125,10 @@ def stack_plan_tables(tables: Sequence[PlanTensor]) -> Dict[str, np.ndarray]:
     if len(caps) != 1:
         raise ValueError(f"plan tables disagree on max_ops: {sorted(caps)}")
     (cap,) = caps
+    modes = {t.mode for t in tables}
+    if len(modes) != 1:
+        raise ValueError(f"plan tables disagree on schedule mode: "
+                         f"{sorted(modes)}")
     B = len(tables)
     out: Dict[str, np.ndarray] = {}
     for f in _OP_TABLE_KEYS:
@@ -141,6 +145,7 @@ def stack_plan_tables(tables: Sequence[PlanTensor]) -> Dict[str, np.ndarray]:
     out["split_mask"] = mask
     out["total_macs"] = np.asarray([t.aux["total_macs"] for t in tables],
                                    np.float64)
+    out["mode"] = modes.pop()
     return out
 
 
@@ -213,7 +218,8 @@ def _build_plan_exec(calib: CalibrationTable, max_ops: int):
 
         def step(carry, op):
             (tile_finish, op_finish, cached_at, fifo_ops, fifo_bytes,
-             tile_ops, tile_active, tile_macs, e_mod, cache_ev) = carry
+             tile_ops, tile_active, tile_macs, e_mod, cache_ev,
+             res_occ) = carry
             idx = jnp.asarray(op["index"], jnp.int32)
             active = (op["valid"] > 0) & (op["fused"] == 0)
             owner = jnp.asarray(op["owner"], jnp.int32)
@@ -314,12 +320,26 @@ def _build_plan_exec(calib: CalibrationTable, max_ops: int):
             cache_ev = cache_ev + jnp.where(active, ev.astype(_F),
                                             jnp.zeros(3, _F))
 
+            # shared-resource occupancy per batch (throughput-mode II
+            # inputs, mirroring the oracle walk's accumulators): aligned
+            # DRAM bytes as charged, and NoC acquisition + reduce seconds
+            dram_b_op = jnp.where(
+                is_split,
+                jnp.sum(jnp.where(mask,
+                                  jnp.broadcast_to(ex_sub["dram_bytes"],
+                                                   (MAX_TILES,)), 0.0)),
+                jnp.broadcast_to(ex["dram_bytes"], (MAX_TILES,))[owner])
+            noc_s_op = extra_noc_s + jnp.where(is_split, reduce_s, 0.0)
+            occ = jnp.stack([dram_b_op, noc_s_op])
+            res_occ = res_occ + jnp.where(active, occ, jnp.zeros(2, _F))
+
             op_finish = op_finish.at[idx].set(jnp.where(active, fin_op, 0.0))
             fifo_ops, fifo_bytes, cached_at = fifo_insert(
                 fifo_ops, fifo_bytes, cached_at, owner, idx,
                 op["bytes_out"], T["cache_cap"][owner], active)
             return (tile_finish, op_finish, cached_at, fifo_ops, fifo_bytes,
-                    tile_ops, tile_active, tile_macs, e_mod, cache_ev), None
+                    tile_ops, tile_active, tile_macs, e_mod, cache_ev,
+                    res_occ), None
 
         e0 = {m: jnp.asarray(0.0, _F)
               for m in ("compute", "dram", "sram", "irf", "orf", "dsp",
@@ -329,10 +349,11 @@ def _build_plan_exec(calib: CalibrationTable, max_ops: int):
                 jnp.full((MAX_TILES, ACT_CACHE_SLOTS), -1, jnp.int32),
                 jnp.zeros((MAX_TILES, ACT_CACHE_SLOTS), _F),
                 jnp.zeros(MAX_TILES, _F), jnp.zeros(MAX_TILES, _F),
-                jnp.zeros(MAX_TILES, _F), e0, jnp.zeros(3, _F))
+                jnp.zeros(MAX_TILES, _F), e0, jnp.zeros(3, _F),
+                jnp.zeros(2, _F))
         (tile_finish, op_finish, cached_at, _, _, tile_ops, tile_active,
-         tile_macs, e_mod, cache_ev), _ = jax.lax.scan(step, init,
-                                                       xs["per_op"])
+         tile_macs, e_mod, cache_ev, res_occ), _ = jax.lax.scan(
+             step, init, xs["per_op"])
 
         makespan = jnp.max(tile_finish)
         gated = tile_ops <= 0
@@ -355,6 +376,24 @@ def _build_plan_exec(calib: CalibrationTable, max_ops: int):
                "energy_leakage_pj": leakage}
         for m in e_mod:
             out[f"energy_{m}_pj"] = e_mod[m]
+
+        # ---- throughput-mode steady state (§3.2): same composition as
+        # ChipSim._steady_state, via the shared costs.pipeline_bounds ----
+        dram_bytes, noc_busy = res_occ[0], res_occ[1]
+        leak_rate = jnp.sum(jnp.where(T["exists"] > 0,
+                                      c.leak_mw_per_mm2 * T["area_mm2"]
+                                      * resid * 1e9, 0.0))
+        out.update(pipeline_bounds(jnp, makespan, jnp.max(tile_active),
+                                   dram_bytes, chip["dram_gbps"], noc_busy))
+        ii = out["ii_s"]
+        out["fill_latency_s"] = makespan
+        out["dram_bytes_per_batch"] = dram_bytes
+        out["energy_ss_pj"] = steady_state_energy(energy, leakage,
+                                                  leak_rate, ii)
+        out["achieved_tops_ss"] = jnp.where(ii > 0,
+                                            total_macs / ii / 1e12, 0.0)
+        out["pipeline_depth"] = jnp.where(ii > 0, jnp.ceil(makespan / ii),
+                                          1.0)
         return out
 
     return exec_plan
@@ -374,8 +413,8 @@ def _jitted(calib_key: int, max_ops: int):
 
 def batch_simulate(plans: Dict[str, np.ndarray],
                    cfgs: Dict[str, Dict[str, np.ndarray]],
-                   calib: CalibrationTable = DEFAULT_CALIB
-                   ) -> Dict[str, np.ndarray]:
+                   calib: CalibrationTable = DEFAULT_CALIB,
+                   mode: Optional[str] = None) -> Dict[str, np.ndarray]:
     """Execute stacked plan tables against stacked chip configs.
 
     ``plans`` comes from ``stack_plan_tables`` (candidate b's plan must
@@ -385,7 +424,22 @@ def batch_simulate(plans: Dict[str, np.ndarray],
     ``energy_*_pj``, cache event counts, and (B, MAX_TILES) per-tile op /
     active-time / gating stats — the SimResult surface minus the per-op
     trace, which stays with the oracle.
+
+    ``mode`` defaults to the stacked tables' stamped schedule mode
+    (``PlanTensor.mode``); throughput-mode results additionally carry the
+    pipeline steady state — ``ii_s``, ``fill_latency_s``, the three
+    per-resource ``ii_*_bound_s``, ``energy_ss_pj``,
+    ``achieved_tops_ss`` and ``pipeline_depth`` — matching
+    ``ChipSim._steady_state`` through the shared
+    ``costs.pipeline_bounds`` composition.  A mode outside
+    ``SCHEDULE_MODES`` raises instead of silently returning latency
+    numbers.
     """
+    mode = mode if mode is not None else plans.get("mode", "latency")
+    if mode not in SCHEDULE_MODES:
+        raise ValueError(
+            f"batched executor cannot model schedule mode {mode!r}; "
+            f"supported modes: {SCHEDULE_MODES}")
     key = id(calib)
     _CALIB_REGISTRY[key] = calib
     max_ops = plans["op_type"].shape[1]
@@ -406,6 +460,7 @@ def batch_simulate(plans: Dict[str, np.ndarray],
     res = {k: np.asarray(v) for k, v in out.items()}
     res["area_mm2"] = cfgs["chip"]["chip_area"]
     res["peak_tops"] = cfgs["chip"]["peak_tops"]
+    res["mode"] = mode
     return res
 
 

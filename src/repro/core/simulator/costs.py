@@ -40,7 +40,8 @@ __all__ = [
     "CACHE_FRAC", "ACT_CACHE_SLOTS", "ACC_BYTES", "DSP_OPS_PER_ELEM",
     "DSP_OPS_TABLE", "SFU_NEED", "TILE_COST_KEYS", "OP_COST_KEYS",
     "CostModel", "cost_model", "ActivationCache", "noc_transfer_seconds",
-    "noc_transfer_energy_pj", "split_op_fields",
+    "noc_transfer_energy_pj", "split_op_fields", "pipeline_bounds",
+    "steady_state_energy",
 ]
 
 # fraction of per-tile SRAM reserved for the activation cache (§3.3.4)
@@ -139,6 +140,54 @@ def split_op_fields(xp, op, axis, kf):
     sub["bytes_out"] = xp.where(axis != 2, xp.floor(op["bytes_out"] / kf),
                                 op["bytes_out"])
     return sub
+
+
+# =============================================================================
+# throughput-mode steady state (§3.2 schedule modes)
+# =============================================================================
+
+def pipeline_bounds(xp, makespan_s, tile_busy_max_s, dram_bytes, dram_gbps,
+                    noc_busy_s):
+    """Steady-state initiation interval of a pipelined (throughput-mode)
+    schedule: successive inference batches replay the same plan, and in
+    steady state the batch rate is set by the busiest *resource*, not the
+    dependence critical path.
+
+    Three per-batch occupancy lower bounds are composed:
+
+    * ``tile_busy_max_s`` — the bottleneck tile's summed execution time
+      (every op serializes on its owner tile);
+    * DRAM channel — total burst-aligned DRAM bytes of one batch at the
+      full ``dram_gbps`` (steady state overlaps transfers perfectly, so
+      the channel bound uses the undivided bandwidth);
+    * NoC — summed cross-tile acquisition + split-reduce transfer time
+      (the NoC modeled as one shared link).
+
+    ``II = min(makespan, max(bounds))``: the serial replay (one batch per
+    makespan) is always an admissible schedule, so pipelining can never be
+    slower per batch — the clamp keeps the two modes consistent wherever
+    the latency model's dynamic-bandwidth optimism lets overlapping tiles
+    exceed a shared-resource bound.  All backends call this one function,
+    so the II arithmetic cannot drift between them.
+    """
+    dram_bound = dram_bytes / (dram_gbps * 1e9)
+    bottleneck = xp.maximum(xp.maximum(tile_busy_max_s, dram_bound),
+                            noc_busy_s)
+    return {
+        "ii_s": xp.minimum(makespan_s, bottleneck),
+        "ii_tile_bound_s": tile_busy_max_s,
+        "ii_dram_bound_s": dram_bound,
+        "ii_noc_bound_s": noc_busy_s,
+    }
+
+
+def steady_state_energy(energy_total_pj, leakage_pj, leak_rate_pj_per_s,
+                        ii_s):
+    """Per-inference energy in the pipelined steady state: dynamic energy
+    is per batch regardless of mode, but each batch occupies only ``II``
+    of wall time, so leakage is re-charged over the initiation interval
+    instead of the fill makespan."""
+    return energy_total_pj - leakage_pj + leak_rate_pj_per_s * ii_s
 
 
 # =============================================================================
@@ -548,7 +597,7 @@ class CostModel:
             "e_special": st["e_special"], "e_sram": st["e_sram"],
             "e_irf": st["e_irf"], "e_orf": st["e_orf"], "e_dram": e_dram,
             "energy_total": energy_total, "path": st["path"],
-            "roofline": roofline,
+            "roofline": roofline, "dram_bytes": total_dram,
         }
 
     def execute(self, T, op, bw_gbps, dram_rd, dram_wr,

@@ -31,13 +31,19 @@ from ..ir import OpClass, OpNode, WorkloadGraph, slice_op
 from .area import chip_area, tile_area
 from .costs import (ACT_CACHE_SLOTS, CACHE_FRAC, OP_COST_KEYS,
                     TILE_COST_KEYS, ActivationCache, cost_model,
-                    noc_transfer_energy_pj, noc_transfer_seconds)
+                    noc_transfer_energy_pj, noc_transfer_seconds,
+                    pipeline_bounds, steady_state_energy)
 from .modules import tile_cost_dict
 from .outputs import EnergyBreakdown, OpResult, SimResult, TileBreakdown
 from .tile import _PATH_NAME, _ROOFLINE_NAME, OpExec, TileSim, op_cost_dict
 
 __all__ = ["Placement", "ExecutionPlan", "ChipSim", "simulate", "noc_hops",
-           "CACHE_FRAC"]
+           "CACHE_FRAC", "SCHEDULE_MODES"]
+
+# The two §3.2 execution modes (re-exported by compiler.schedule, which
+# owns the user-facing docs).  Lives here so the simulators can validate
+# plans without importing the compiler package (schedule imports us).
+SCHEDULE_MODES = ("latency", "throughput")
 
 
 @dataclasses.dataclass
@@ -154,7 +160,8 @@ class ChipSim:
                       seconds=float(out["seconds"]), energy=e,
                       path=_PATH_NAME[int(out["path"])],
                       roofline=_ROOFLINE_NAME[int(out["roofline"])],
-                      dram_rd=dram_rd, dram_wr=dram_wr)
+                      dram_rd=dram_rd, dram_wr=dram_wr,
+                      dram_bytes=float(out["dram_bytes"]))
 
     # -------------------------------------------------------------- helpers
     def noc_seconds(self, bytes_: float) -> float:
@@ -168,6 +175,10 @@ class ChipSim:
 
     # ------------------------------------------------------------------ run
     def run(self, plan: ExecutionPlan) -> SimResult:
+        if plan.mode not in SCHEDULE_MODES:
+            raise ValueError(
+                f"ChipSim cannot model schedule mode {plan.mode!r}; "
+                f"supported modes: {SCHEDULE_MODES}")
         g = plan.graph
         n_tiles = len(self.tiles)
         # one batched CostModel query for the whole plan (tile/op-only
@@ -190,6 +201,10 @@ class ChipSim:
         op_results: List[OpResult] = []
         chip_energy = EnergyBreakdown()
         total_macs = 0.0
+        # per-batch shared-resource occupancy (throughput-mode II inputs):
+        # burst-aligned DRAM bytes and NoC transfer seconds of one batch
+        dram_bytes_total = 0.0
+        noc_busy_s = 0.0
 
         fused_map: Dict[int, List[int]] = {}
         for j, nd in enumerate(g.nodes):
@@ -241,22 +256,25 @@ class ChipSim:
             n_active = max(n_active, 1)
             bw_share = self.chip.dram_gbps / n_active
 
+            noc_busy_s += extra_noc_s
             if len(pl.tiles) == 1:
                 ex = self._exec_rec(static, rec_of[i], bw_share, dram_rd,
                                     dram_wr)
                 t_start = t_start0 + extra_noc_s
                 t_fin = t_start + ex.seconds
                 tile_finish[tidx0] = t_fin
+                dram_bytes_total += ex.dram_bytes
                 self._account(breakdowns[tidx0], op, ex, chip_energy)
                 op_results.append(OpResult(i, tidx0, ex.path, t_start, t_fin,
                                            ex.cycles, ex.energy, ex.roofline,
                                            1, cache_kind))
             else:
-                t_fin = self._run_split(i, op, pl, tile_finish, t_dep,
-                                        extra_noc_s, dram_rd, dram_wr,
-                                        bw_share, breakdowns, chip_energy,
-                                        op_results, cache_kind,
-                                        static, rec_of[i])
+                t_fin, split_dram_b, reduce_s = self._run_split(
+                    i, op, pl, tile_finish, t_dep, extra_noc_s, dram_rd,
+                    dram_wr, bw_share, breakdowns, chip_energy, op_results,
+                    cache_kind, static, rec_of[i])
+                dram_bytes_total += split_dram_b
+                noc_busy_s += reduce_s
 
             op_finish[i] = t_fin
             op_tile[i] = tidx0
@@ -276,11 +294,14 @@ class ChipSim:
         makespan = max(tile_finish) if any(tile_finish) else 0.0
 
         # --- leakage: active tiles leak fully, idle tiles are power-gated ---
+        leak_rate_pj_per_s = 0.0
         for b, tmpl in zip(breakdowns, self.templates):
             area = tile_area(tmpl, self.calib)
             gated = b.ops == 0
             resid = self.calib.power_gate_residual if gated else 1.0
             leak_pj = self.calib.leak_mw_per_mm2 * area * makespan * resid * 1e9
+            leak_rate_pj_per_s += self.calib.leak_mw_per_mm2 * area * resid \
+                * 1e9
             b.power_gated = gated
             b.energy.leakage += leak_pj
             chip_energy.leakage += leak_pj
@@ -288,22 +309,60 @@ class ChipSim:
         area = chip_area(self.chip, self.calib)
         peak_tops = sum(t.num_macs * t.clock_mhz * 1e6 for t in self.templates) / 1e12
         achieved = total_macs / makespan / 1e12 if makespan > 0 else 0.0
+        pipeline = None
+        if plan.mode == "throughput":
+            pipeline = self._steady_state(
+                makespan, breakdowns, dram_bytes_total, noc_busy_s,
+                chip_energy, leak_rate_pj_per_s, total_macs)
         return SimResult(
             workload=g.name, arch=self.chip.name, latency_s=makespan,
             energy_pj=chip_energy.total_pj, area_mm2=area, peak_tops=peak_tops,
             achieved_tops=achieved, energy_breakdown=chip_energy,
             tiles=breakdowns, ops=op_results, total_macs=total_macs,
-            arithmetic_intensity=g.arithmetic_intensity())
+            arithmetic_intensity=g.arithmetic_intensity(),
+            mode=plan.mode, pipeline=pipeline)
+
+    # ---------------------------------------------- throughput steady state
+    def _steady_state(self, makespan, breakdowns, dram_bytes_total,
+                      noc_busy_s, chip_energy, leak_rate_pj_per_s,
+                      total_macs) -> Dict[str, float]:
+        """Throughput-mode steady state (§3.2): replay successive batches
+        with a per-batch offset of II — the bottleneck-resource occupancy
+        from ``costs.pipeline_bounds``, the same composition the batched
+        backends evaluate in-scan.  Reports the initiation interval, the
+        pipeline-fill latency (= the one-batch makespan), the per-resource
+        bounds, and the steady-state per-inference energy (leakage
+        re-charged over II)."""
+        tile_busy_max = max((b.active_s for b in breakdowns), default=0.0)
+        pipe = {k: float(v) for k, v in pipeline_bounds(
+            np, makespan, tile_busy_max, dram_bytes_total,
+            self.chip.dram_gbps, noc_busy_s).items()}
+        ii = pipe["ii_s"]
+        pipe["fill_latency_s"] = makespan
+        pipe["dram_bytes_per_batch"] = dram_bytes_total
+        pipe["energy_ss_pj"] = float(steady_state_energy(
+            chip_energy.total_pj, chip_energy.leakage, leak_rate_pj_per_s,
+            ii))
+        pipe["achieved_tops_ss"] = total_macs / ii / 1e12 if ii > 0 else 0.0
+        # batches in flight once the pipeline is full (the replay depth
+        # after which batch k's finish times advance by exactly II)
+        pipe["pipeline_depth"] = float(math.ceil(makespan / ii)) \
+            if ii > 0 else 1.0
+        return pipe
 
     # ----------------------------------------------------------- split path
     def _run_split(self, i, op, pl, tile_finish, t_dep, extra_noc_s,
                    dram_rd, dram_wr, bw_share, breakdowns, chip_energy,
-                   op_results, cache_kind, static, rec0) -> float:
-        """Even split along OC / B / IC with explicit reduce cost (Eq. 3)."""
+                   op_results, cache_kind, static, rec0):
+        """Even split along OC / B / IC with explicit reduce cost (Eq. 3).
+        Returns ``(t_fin, dram_bytes, reduce_s)`` — the finish time plus
+        the split's aligned DRAM traffic and NoC reduce occupancy for the
+        throughput-mode resource accounting."""
         k = len(pl.tiles)
         finishes = []
         slice_out = op.bytes_out / k
         sub = slice_op(op, pl.axis, k)
+        dram_bytes = 0.0
         for j, tidx in enumerate(pl.tiles):
             ex = self._exec_rec(static, rec0 + j, bw_share, dram_rd / k,
                                 dram_wr / k)
@@ -311,6 +370,7 @@ class ChipSim:
             t_fin = t_start + ex.seconds
             tile_finish[tidx] = t_fin
             finishes.append(t_fin)
+            dram_bytes += ex.dram_bytes
             self._account(breakdowns[tidx], sub, ex, chip_energy)
             op_results.append(OpResult(i, tidx, ex.path, t_start, t_fin,
                                        ex.cycles, ex.energy, ex.roofline,
@@ -321,7 +381,7 @@ class ChipSim:
             chip_energy.noc += self.noc_energy_pj(slice_out)
         t_fin = max(finishes) + reduce_s
         tile_finish[pl.tiles[0]] = max(tile_finish[pl.tiles[0]], t_fin)
-        return t_fin
+        return t_fin, dram_bytes, reduce_s
 
     @staticmethod
     def _account(b: TileBreakdown, op: OpNode, ex, chip_energy: EnergyBreakdown) -> None:

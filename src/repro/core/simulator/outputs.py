@@ -94,11 +94,25 @@ class SimResult:
     ops: List[OpResult]
     total_macs: float
     arithmetic_intensity: float
+    # §3.2 schedule mode this plan was emitted in.  For throughput-mode
+    # runs ``pipeline`` carries the steady state: ``ii_s`` (initiation
+    # interval), ``fill_latency_s`` (= one-batch makespan), the three
+    # per-resource bounds (``ii_tile_bound_s`` / ``ii_dram_bound_s`` /
+    # ``ii_noc_bound_s``), ``energy_ss_pj`` (per-inference energy with
+    # leakage charged over II) and ``pipeline_depth``.
+    mode: str = "latency"
+    pipeline: Optional[Dict[str, float]] = None
 
     @property
     def avg_power_w(self) -> float:
         # pJ / s -> W is 1e-12
         return self.energy_pj * 1e-12 / self.latency_s if self.latency_s > 0 else 0.0
+
+    @property
+    def ii_s(self) -> float:
+        """Throughput-mode initiation interval (= latency for latency-mode
+        results, where every batch is a full serial replay)."""
+        return self.pipeline["ii_s"] if self.pipeline else self.latency_s
 
     @property
     def tops_per_w(self) -> float:
@@ -113,8 +127,11 @@ class SimResult:
         """Full-precision snapshot for the golden-trace regression harness
         (tests/golden/): chip metrics, per-module energy, per-tile stats.
         Regenerate with ``pytest --regen-golden`` after an intentional
-        cost-model change — the comparator then shows the numeric diff."""
-        return {
+        cost-model change — the comparator then shows the numeric diff.
+        Throughput-mode results additionally freeze the pipeline steady
+        state (mode + II + bounds); latency-mode payloads are unchanged so
+        pre-existing golden files stay valid."""
+        d = {
             "workload": self.workload,
             "arch": self.arch,
             "latency_s": self.latency_s,
@@ -138,9 +155,13 @@ class SimResult:
                 for b in self.tiles
             ],
         }
+        if self.pipeline is not None:
+            d["mode"] = self.mode
+            d["pipeline"] = dict(self.pipeline)
+        return d
 
     def summary(self) -> Dict[str, float]:
-        return {
+        out = {
             "workload": self.workload,
             "arch": self.arch,
             "latency_us": self.latency_s * 1e6,
@@ -153,19 +174,37 @@ class SimResult:
             "tops_per_mm2": self.tops_per_mm2,
             "arithmetic_intensity": self.arithmetic_intensity,
         }
+        if self.pipeline is not None:
+            out["ii_us"] = self.pipeline["ii_s"] * 1e6
+            out["energy_ss_uj"] = self.pipeline["energy_ss_pj"] * 1e-6
+            out["pipeline_depth"] = self.pipeline["pipeline_depth"]
+        return out
 
     # -- chrome trace (stands in for the paper's Perfetto output) ------------
-    def chrome_trace(self) -> str:
+    def chrome_trace(self, batches: int = 1) -> str:
+        """Per-op timeline (one ``pid`` row group per batch).
+
+        For throughput-mode results ``batches > 1`` replays the plan with
+        the per-batch steady-state offset of II seconds, visualizing the
+        pipelined overlap of successive inferences (the fill batch is
+        ``pid 0``; batch ``b`` is shifted by ``b * II``)."""
+        if batches > 1 and self.pipeline is None:
+            raise ValueError(
+                "multi-batch traces need a throughput-mode result "
+                "(plan emitted with mode='throughput')")
+        offset = self.pipeline["ii_s"] if batches > 1 else 0.0
         events = []
-        for r in self.ops:
-            events.append({
-                "name": f"op{r.op_index}:{r.path}",
-                "ph": "X",
-                "ts": r.start_s * 1e6,
-                "dur": max(r.latency_s * 1e6, 1e-3),
-                "pid": 0,
-                "tid": r.tile_index,
-                "args": {"cycles": r.cycles, "roofline": r.roofline,
-                         "cache": r.cache, "split": r.split_tiles},
-            })
+        for b in range(batches):
+            for r in self.ops:
+                events.append({
+                    "name": f"op{r.op_index}:{r.path}",
+                    "ph": "X",
+                    "ts": (r.start_s + b * offset) * 1e6,
+                    "dur": max(r.latency_s * 1e6, 1e-3),
+                    "pid": b,
+                    "tid": r.tile_index,
+                    "args": {"cycles": r.cycles, "roofline": r.roofline,
+                             "cache": r.cache, "split": r.split_tiles,
+                             "batch": b},
+                })
         return json.dumps({"traceEvents": events})

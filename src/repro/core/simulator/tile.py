@@ -69,6 +69,7 @@ class OpExec:
     roofline: str
     dram_rd: float
     dram_wr: float
+    dram_bytes: float = 0.0  # burst-aligned rd+wr as charged (Eq. 5 stage)
 
 
 class TileSim:
@@ -123,4 +124,5 @@ class TileSim:
         return OpExec(cycles=cycles, seconds=cycles / self.clock_hz, energy=e,
                       path=_PATH_NAME[int(out["path"])],
                       roofline=_ROOFLINE_NAME[int(out["roofline"])],
-                      dram_rd=dram_rd, dram_wr=dram_wr)
+                      dram_rd=dram_rd, dram_wr=dram_wr,
+                      dram_bytes=float(out["dram_bytes"]))

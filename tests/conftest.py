@@ -10,6 +10,26 @@ import pytest
 
 GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
 
+# Persistent XLA compilation cache (mirrors benchmarks/common.py): when CI
+# sets JAX_COMPILATION_CACHE_DIR (persisted via actions/cache keyed on the
+# jax pin), the jitted simulator/mapper compiles are restored across runs
+# instead of re-paying ~5-10 s per (calib, op-bucket) pair.
+if os.environ.get("JAX_COMPILATION_CACHE_DIR"):
+    try:
+        import jax
+
+        jax.config.update("jax_compilation_cache_dir",
+                          os.environ["JAX_COMPILATION_CACHE_DIR"])
+        for _knob, _val in (
+                ("jax_persistent_cache_min_compile_time_secs", 0.0),
+                ("jax_persistent_cache_min_entry_size_bytes", 0)):
+            try:
+                jax.config.update(_knob, _val)
+            except Exception:  # pragma: no cover - knob-less jax version
+                pass
+    except Exception:  # pragma: no cover - jax unavailable
+        pass
+
 # Hypothesis example budgets: the default profile keeps tier-1 fast; the
 # CI "thorough" profile (non-blocking -m slow job) widens the search.
 try:

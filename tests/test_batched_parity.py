@@ -149,6 +149,35 @@ def test_idle_tile_never_cuts_energy_below_gating_floor(g, sram_idx):
     assert bool(res["power_gated"][0][1])
 
 
+@given(small_graphs(), st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_pipelining_never_slower_per_batch(g, seed):
+    """Throughput-mode theorem: the steady-state initiation interval never
+    exceeds the latency-mode makespan (serial replay — one batch per
+    makespan — is always an admissible pipelined schedule), and the
+    batched executor agrees with the oracle on the whole steady-state
+    surface for random graph x chip pairs."""
+    chip = decode(random_genomes(np.random.default_rng(seed), 1)[0], "prop")
+    try:
+        plan = compile_workload(g, chip, mode="throughput")
+    except UnmappableError:
+        assume(False)
+    r = simulate(chip, plan)
+    assert r.pipeline is not None
+    assert r.pipeline["ii_s"] <= r.latency_s * (1 + 1e-12)
+    # every resource bound is a lower bound on II up to the serial clamp
+    assert r.pipeline["ii_s"] <= max(r.pipeline["ii_tile_bound_s"],
+                                     r.pipeline["ii_dram_bound_s"],
+                                     r.pipeline["ii_noc_bound_s"]) \
+        * (1 + 1e-12) + 1e-30
+    res = simulate_plans([chip], [lower_plan(plan, chip.num_tiles)])
+    assert res["mode"] == "throughput"
+    for k in ("ii_s", "ii_tile_bound_s", "ii_dram_bound_s",
+              "ii_noc_bound_s", "energy_ss_pj"):
+        assert float(res[k][0]) == pytest.approx(r.pipeline[k], rel=REL,
+                                                 abs=1e-30), k
+
+
 @pytest.mark.slow
 @given(small_graphs(), st.integers(0, 2 ** 31 - 1))
 @settings(max_examples=150, deadline=None)

@@ -3,17 +3,28 @@
 Freezes the reference simulator's full ``SimResult`` surface for a
 Big+Little+Special-Function chip on six representative workloads
 (tests/golden/*.json, regenerate with ``pytest --regen-golden``), and pins
-the batched plan executor to the oracle on the same runs.  The slow
-marker extends the backend-agreement check to the full 20-workload suite
-(the ISSUE-2 acceptance bar).
+the batched plan executor to the oracle on the same runs.  Throughput-mode
+(§3.2 pipelined) runs freeze the steady-state pipeline section too, and
+both the batched executor and the fused batched mapper+executor are
+pinned to the oracle's II on the same runs.  The slow marker extends the
+backend-agreement checks (both schedule modes) to the full 20-workload
+suite (the ISSUE-2/ISSUE-4 acceptance bars).
 """
 import numpy as np
 import pytest
 
 from repro.core import compile_workload, hetero_bls, simulate
+from repro.core.compiler.batched_mapper import map_and_simulate
 from repro.core.compiler.pipeline import lower_plan
-from repro.core.simulator.batched import simulate_plans
+from repro.core.dse.engine import prepared_workload
+from repro.core.simulator.batched import simulate_plans, stack_chip_configs
 from repro.core.workloads import build, workload_names
+
+# throughput-mode steady-state surface every backend must agree on
+PIPELINE_KEYS = ("ii_s", "ii_tile_bound_s", "ii_dram_bound_s",
+                 "ii_noc_bound_s", "fill_latency_s", "energy_ss_pj",
+                 "achieved_tops_ss", "pipeline_depth",
+                 "dram_bytes_per_batch")
 
 # one per execution-path family: quantized CNN, FP16 ViT, INT4 LLM,
 # SNN (LIF), FFT long-conv, polynomial (KAN)
@@ -63,6 +74,46 @@ def test_batched_matches_oracle_on_golden_runs(wname):
                                [b.active_s for b in r.tiles], rtol=REL_TOL)
 
 
+def _run_throughput(wname):
+    chip = _reference_chip()
+    plan = compile_workload(build(wname), chip, mode="throughput")
+    return chip, plan, simulate(chip, plan)
+
+
+def _assert_throughput_parity(wname, chip, plan, r):
+    """Oracle II vs (a) the batched executor replaying the compiled plan,
+    (b) the fused compile-free mapper+executor — the 0-rel-err bar."""
+    assert r.mode == "throughput" and r.pipeline is not None
+    table = lower_plan(plan, chip.num_tiles)
+    assert table.mode == "throughput"
+    res = simulate_plans([chip], [table])
+    assert res["mode"] == "throughput"
+    fused = map_and_simulate(prepared_workload(wname),
+                             stack_chip_configs([chip]), mode="throughput")
+    assert bool(fused["ok"][0]), wname
+    for k in PIPELINE_KEYS:
+        assert float(res[k][0]) == pytest.approx(r.pipeline[k],
+                                                 rel=REL_TOL), (wname, k)
+        assert float(fused[k][0]) == pytest.approx(r.pipeline[k],
+                                                   rel=REL_TOL), (wname, k)
+    # pipelining is never slower per batch than the serial replay
+    assert r.pipeline["ii_s"] <= r.latency_s * (1 + 1e-12)
+
+
+@pytest.mark.parametrize("wname", GOLDEN_WORKLOADS)
+def test_golden_trace_throughput(wname, golden):
+    """Freeze the throughput-mode steady state (II + bounds + per-batch
+    energy) for the hetero-BLS reference runs."""
+    _, _, r = _run_throughput(wname)
+    golden(f"{wname}_throughput", r.golden_dict())
+
+
+@pytest.mark.parametrize("wname", GOLDEN_WORKLOADS)
+def test_throughput_backends_match_oracle_on_golden_runs(wname):
+    chip, plan, r = _run_throughput(wname)
+    _assert_throughput_parity(wname, chip, plan, r)
+
+
 @pytest.mark.slow
 def test_batched_matches_oracle_full_suite():
     """Acceptance bar: backend agreement across all 20 stock workloads on
@@ -76,3 +127,13 @@ def test_batched_matches_oracle_full_suite():
                                                     rel=REL_TOL), wname
         assert res["energy_pj"][0] == pytest.approx(r.energy_pj,
                                                     rel=REL_TOL), wname
+
+
+@pytest.mark.slow
+def test_throughput_backends_match_oracle_full_suite():
+    """ISSUE-4 acceptance bar: throughput-mode II agreement (batched
+    executor AND fused mapper+executor vs ChipSim) across all 20 stock
+    workloads on the fixed reference chip."""
+    for wname in workload_names():
+        chip, plan, r = _run_throughput(wname)
+        _assert_throughput_parity(wname, chip, plan, r)

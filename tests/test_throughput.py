@@ -1,0 +1,169 @@
+"""Throughput-mode (§3.2) dispatch and DSE surface.
+
+Mode is a first-class scenario axis: ``emit_schedule`` stamps it,
+``lower_plan`` carries it onto the plan table, every backend either
+models it or raises a clear error, and the engine scores the pipelined
+steady state (II / per-inference energy / steady-state TOPS/W) when asked
+to.  Parity of the steady-state numbers themselves is pinned by
+tests/test_golden_traces.py and tests/test_batched_parity.py.
+"""
+import numpy as np
+import pytest
+
+from repro.core import compile_workload, hetero_bls, simulate
+from repro.core.compiler.batched_mapper import map_and_simulate
+from repro.core.compiler.pipeline import lower_plan
+from repro.core.compiler.schedule import SCHEDULE_MODES, emit_schedule
+from repro.core.dse.encoding import random_genomes
+from repro.core.dse.engine import EvalEngine, prepared_workload
+from repro.core.dse.objective import serving_fitness
+from repro.core.simulator.batched import (batch_simulate, simulate_plans,
+                                          stack_chip_configs,
+                                          stack_plan_tables)
+from repro.core.simulator.orchestrator import ChipSim, ExecutionPlan
+from repro.core.workloads import build
+
+WORKLOAD = "kan"  # smallest golden-family workload: fast jit
+
+
+def _plan(mode="throughput"):
+    chip = hetero_bls()
+    return chip, compile_workload(build(WORKLOAD), chip, mode=mode)
+
+
+# ---------------------------------------------------------------- dispatch
+def test_emit_schedule_rejects_unknown_mode():
+    chip, plan = _plan("latency")
+    with pytest.raises(ValueError, match="unknown schedule mode"):
+        emit_schedule(plan.graph, plan.placements, mode="warp-speed")
+
+
+def test_modes_change_results_not_just_tags():
+    """The historical bug: both modes silently produced identical result
+    surfaces.  Now the mode dispatches — throughput results carry the
+    pipeline steady state, latency results do not."""
+    chip, plan_t = _plan("throughput")
+    r_t = simulate(chip, plan_t)
+    r_l = simulate(chip, compile_workload(build(WORKLOAD), chip))
+    assert r_l.mode == "latency" and r_l.pipeline is None
+    assert r_t.mode == "throughput" and r_t.pipeline is not None
+    assert r_t.pipeline["ii_s"] <= r_t.latency_s * (1 + 1e-12)
+    assert r_l.ii_s == r_l.latency_s       # serial replay fallback
+    assert r_t.ii_s == r_t.pipeline["ii_s"]
+
+
+def test_chipsim_rejects_unknown_mode():
+    chip, plan = _plan("latency")
+    bad = ExecutionPlan(graph=plan.graph, placements=plan.placements,
+                        mode="warp-speed")
+    with pytest.raises(ValueError, match="cannot model schedule mode"):
+        ChipSim(chip).run(bad)
+
+
+def test_batched_executor_rejects_unknown_mode():
+    chip, plan = _plan("latency")
+    plans = stack_plan_tables([lower_plan(plan, chip.num_tiles)])
+    cfgs = stack_chip_configs([chip])
+    with pytest.raises(ValueError, match="cannot model schedule mode"):
+        batch_simulate(plans, cfgs, mode="warp-speed")
+
+
+def test_fused_mapper_rejects_unknown_mode():
+    chip = hetero_bls()
+    with pytest.raises(ValueError, match="cannot model schedule mode"):
+        map_and_simulate(prepared_workload(WORKLOAD),
+                         stack_chip_configs([chip]), mode="warp-speed")
+
+
+def test_plan_table_carries_mode_and_mismatch_raises():
+    chip, plan_t = _plan("throughput")
+    _, plan_l = _plan("latency")
+    t_t = lower_plan(plan_t, chip.num_tiles)
+    t_l = lower_plan(plan_l, chip.num_tiles)
+    assert (t_t.mode, t_l.mode) == ("throughput", "latency")
+    with pytest.raises(ValueError, match="disagree on schedule mode"):
+        stack_plan_tables([t_t, t_l])
+    # stamped mode flows through to the executor without an explicit arg
+    res = simulate_plans([chip], [t_t])
+    assert res["mode"] == "throughput"
+
+
+def test_chrome_trace_replays_batches_at_ii_offsets():
+    chip, plan = _plan("throughput")
+    r = simulate(chip, plan)
+    import json
+    ev = json.loads(r.chrome_trace(batches=3))["traceEvents"]
+    per_batch = len(r.ops)
+    assert len(ev) == 3 * per_batch
+    ii_us = r.pipeline["ii_s"] * 1e6
+    assert ev[2 * per_batch]["ts"] - ev[0]["ts"] == pytest.approx(
+        2 * ii_us, rel=1e-9)
+    r_l = simulate(chip, compile_workload(build(WORKLOAD), chip))
+    with pytest.raises(ValueError, match="throughput-mode result"):
+        r_l.chrome_trace(batches=2)
+
+
+# ------------------------------------------------------------------ engine
+def test_engine_mode_validation():
+    with pytest.raises(ValueError, match="mode"):
+        EvalEngine([WORKLOAD], mode="warp-speed")
+    eng = EvalEngine([WORKLOAD])
+    g = random_genomes(np.random.default_rng(0), 2)
+    with pytest.raises(ValueError, match="mode"):
+        eng.evaluate(g, mode="warp-speed")
+    with pytest.raises(ValueError, match="mode"):
+        eng.rescore(g, mode="warp-speed")
+    assert set(SCHEDULE_MODES) == {"latency", "throughput"}
+
+
+def test_engine_throughput_mode_scores_steady_state():
+    """Scan-backend engine in throughput mode: latency column = II <=
+    the latency-mode makespan; meta reports the mode; the per-mode memo
+    keys keep the two modes from cross-contaminating."""
+    g = random_genomes(np.random.default_rng(1), 6)
+    eng = EvalEngine([WORKLOAD], mode="throughput")
+    m_t = eng.evaluate(g)
+    assert m_t["meta"]["mode"] == "throughput"
+    m_l = eng.evaluate(g, mode="latency")
+    assert m_l["meta"]["mode"] == "latency"
+    assert m_l["meta"]["hits"] == 0       # distinct memo namespace
+    ok = np.isfinite(m_l["latency"])
+    assert ok.any()
+    assert np.all(m_t["latency"][ok] <= m_l["latency"][ok] * (1 + 1e-12))
+    # memoized replay returns the mode-correct rows
+    m_t2 = eng.evaluate(g)
+    assert m_t2["meta"]["hits"] == len(g)
+    np.testing.assert_array_equal(m_t2["latency"], m_t["latency"])
+
+
+def test_engine_rescore_throughput_matches_oracle():
+    """Exact rescore (fused batched mapper) vs the ChipSim oracle on the
+    throughput surface — the tier-1 slice of the 0-rel-err acceptance
+    bar (the full 20-workload sweep runs under -m slow)."""
+    g = random_genomes(np.random.default_rng(2), 4)
+    eng = EvalEngine([WORKLOAD], mode="throughput")
+    rb = eng.rescore(g)
+    ro = eng.rescore(g, oracle=True)
+    assert rb["meta"]["mode"] == ro["meta"]["mode"] == "throughput"
+    ok = np.isfinite(ro["latency"])
+    np.testing.assert_allclose(rb["latency"][ok], ro["latency"][ok],
+                               rtol=1e-9)
+    np.testing.assert_allclose(rb["energy"][ok], ro["energy"][ok],
+                               rtol=1e-9)
+
+
+# --------------------------------------------------------------- objective
+def test_serving_fitness_ii_target():
+    e = np.array([[1.0, 2.0], [0.5, 0.5], [3.0, 3.0]])
+    ii = np.array([[1e-3, 2e-3], [1e-3, 5e-3], [1e-4, 1e-4]])
+    s = serving_fitness(e, ii, 2e-3)
+    assert s[1] == -np.inf                 # misses the rate target
+    assert s[2] < s[0] < 0                 # lower energy wins among feasible
+    # per-workload targets broadcast: relaxing workload 1's target makes
+    # the previously infeasible row 1 feasible
+    s2 = serving_fitness(e, ii, np.array([2e-3, 5e-3]))
+    assert np.isfinite(s2[1])
+    # infeasible/unmappable rows (inf energy) never win
+    s3 = serving_fitness(np.array([[np.inf, np.inf]]),
+                         np.array([[1e-9, 1e-9]]), 1.0)
+    assert s3[0] == -np.inf
