@@ -1,17 +1,21 @@
 """Perf-trajectory comparison: fresh smoke numbers vs the committed
 baseline.
 
-Loads the just-written ``BENCH_PR3_smoke.json`` (produced by
-``python -m benchmarks.perf_micro --smoke``) and the committed
-``BENCH_PR3.json`` trajectory file, and emits a markdown table of
-per-benchmark speedups with the delta against the baseline's recorded
-speedup.  In CI the table is appended to ``$GITHUB_STEP_SUMMARY`` so the
-per-PR perf history is visible on the workflow run page; locally it
-prints to stdout.
+Loads the just-written ``BENCH_PR5_smoke.json`` (produced by
+``python -m benchmarks.perf_micro --smoke``; falls back to the legacy
+``BENCH_PR3_smoke.json``) and the committed ``BENCH_PR5.json``
+trajectory file (falling back to the PR-4 ``BENCH_PR3.json`` for
+benchmarks recorded there — e.g. on the first run after a trajectory
+file rename), and emits a markdown table of per-benchmark speedups with
+the delta against the baseline's recorded speedup.  Benchmarks new in
+the fresh file (``run_ga_exact_speedup``) show a baseline of "—" until
+a full run commits them.  In CI the table is appended to
+``$GITHUB_STEP_SUMMARY`` so the per-PR perf history is visible on the
+workflow run page; locally it prints to stdout.
 
 Smoke runs use a smaller population than the committed full-population
 numbers, so the comparison is trajectory-shaped (is the speedup holding?)
-rather than an apples-to-apples gate — the hard floor stays in
+rather than an apples-to-apples gate — the hard floors stay in
 ``perf_micro --smoke`` itself.
 
   PYTHONPATH=src python -m benchmarks.perf_compare
@@ -57,7 +61,7 @@ def render_markdown(rows: list, fresh: dict, baseline: dict) -> str:
         return f"{v:.2f}{suffix}" if v is not None else "—"
 
     lines = [
-        "## Perf trajectory: smoke run vs committed BENCH_PR3.json",
+        "## Perf trajectory: smoke run vs committed BENCH_PR5/PR3 baseline",
         "",
         f"fresh: smoke={fresh.get('smoke')} · "
         f"baseline: pr={baseline.get('pr')} smoke={baseline.get('smoke')}",
@@ -75,17 +79,40 @@ def render_markdown(rows: list, fresh: dict, baseline: dict) -> str:
     return "\n".join(lines) + "\n"
 
 
+def _load_first(*filenames):
+    for f in filenames:
+        data = _load(f)
+        if data is not None:
+            return data
+    return None
+
+
+def _merged_baseline():
+    """Committed baseline: BENCH_PR5.json, with BENCH_PR3.json filling
+    in benchmarks the newer file doesn't carry (rename transition)."""
+    new = _load("BENCH_PR5.json")
+    old = _load("BENCH_PR3.json")
+    if new is None:
+        return old
+    if old is not None:
+        merged = dict(old.get("benchmarks", {}))
+        merged.update(new.get("benchmarks", {}))
+        new = dict(new)
+        new["benchmarks"] = merged
+    return new
+
+
 def main() -> int:
-    fresh = _load("BENCH_PR3_smoke.json")
-    baseline = _load("BENCH_PR3.json")
+    fresh = _load_first("BENCH_PR5_smoke.json", "BENCH_PR3_smoke.json")
+    baseline = _merged_baseline()
     if fresh is None:
-        print("perf_compare: BENCH_PR3_smoke.json missing — run "
+        print("perf_compare: BENCH_PR5_smoke.json missing — run "
               "`python -m benchmarks.perf_micro --smoke` first",
               file=sys.stderr)
         return 1
     if baseline is None:
-        print("perf_compare: no committed BENCH_PR3.json baseline",
-              file=sys.stderr)
+        print("perf_compare: no committed BENCH_PR5.json / BENCH_PR3.json "
+              "baseline", file=sys.stderr)
         return 1
     md = render_markdown(compare(fresh, baseline), fresh, baseline)
     summary = os.environ.get("GITHUB_STEP_SUMMARY")

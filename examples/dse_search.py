@@ -23,11 +23,16 @@ def main():
     ap.add_argument("--workloads", nargs="*", default=[
         "resnet50_int8", "vit_b16_int8", "llama7b_int8", "hyena_1_3b",
         "kan", "spec_decode"])
+    ap.add_argument("--exact", action="store_true",
+                    help="search on the exact fused-mapper backend: the "
+                         "sweep AND the GA score with bitwise-rescore-grade "
+                         "metrics (no approximate/rescore gap)")
     args = ap.parse_args()
 
     # one cache-aware engine end to end: the GA re-scores sweep genomes
     # (its seed population) and its own elites for free
-    engine = EvalEngine(args.workloads)
+    engine = EvalEngine(args.workloads,
+                        backend="exact" if args.exact else "scan")
 
     print(f"[1/3] stratified sweep ({args.samples}/stratum x 15 strata)...")
     sw = run_sweep(args.workloads, samples_per_stratum=args.samples, seed=0,

@@ -31,6 +31,23 @@ simulate — runs without any per-candidate Python work.  With a
 ``NamedSharding`` over the candidate axis the same dispatch spans every
 available device (``launch.mesh.candidate_sharding``).
 
+``search_and_simulate`` is the *search-loop* variant of the same exact
+path: mapping and execution fused into ONE ``lax.scan`` (each op is
+placed and then immediately executed in the same step), with the cost
+model **class-specialized** — ``op_cls`` / ``splittable`` are workload
+properties shared across the candidate axis (``vmap in_axes=None``), so
+the kernel branches on them with ``lax.cond`` and only the taken class's
+sub-models run: MAC operators never evaluate the SFU/lowering math,
+DSP operators skip the MAC tiling pass entirely, and the Eq. 3
+three-axis split probe runs only for statically splittable MAC ops.
+The taken-path arithmetic is term-for-term the full model
+(``costs.CostModel.execute_static_{mac,dsp,special}`` /
+``roofline_cycles_*`` / ``supports_*``), so the metric surface is
+**bitwise identical** to ``map_and_simulate`` — at a fraction of the
+compute, and returning only the (B,) scoring surface (no per-op
+placement materialization).  This is what ``EvalEngine``'s exact search
+backend and the device GA loop dispatch per generation.
+
 The Python ``map_graph`` stays the oracle reference; unmappable
 candidates (some op with no compatible tile, the ``UnmappableError``
 case) are reported through the ``ok`` output instead of an exception.
@@ -52,11 +69,15 @@ from ..arch import MAX_TILES
 from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
 from ..ir import OpClass
 from ..simulator.batched import (CHIP_KEYS, SCHEDULE_MODES, TILE_KEYS,
-                                 _build_plan_exec, _OP_TABLE_KEYS)
-from ..simulator.costs import (OP_COST_KEYS, cost_model,
-                               noc_transfer_seconds, split_op_fields)
+                                 _build_plan_exec, _OP_TABLE_KEYS,
+                                 fifo_insert)
+from ..simulator.costs import (ACT_CACHE_SLOTS, OP_COST_KEYS, cost_model,
+                               noc_transfer_energy_pj, noc_transfer_seconds,
+                               pipeline_bounds, split_op_fields,
+                               steady_state_energy)
 
-__all__ = ["batched_map", "map_and_simulate", "place_configs"]
+__all__ = ["batched_map", "map_and_simulate", "search_and_simulate",
+           "search_population", "place_configs"]
 
 _F = jnp.float64
 
@@ -256,6 +277,34 @@ def _device_xs(ws: Dict[str, np.ndarray]) -> Tuple[dict, int]:
     return {"per_op": per_op}, max_ops
 
 
+# Device staging of prepared-workload op tables, cached by identity: the
+# search loop dispatches the same handful of ``prepared_workload`` dicts
+# every generation, and re-uploading ~30 (max_ops,) arrays per dispatch
+# is measurable host overhead.  Holding the ws reference in the value
+# pins the id, so a dead dict can never alias a cached entry; the caches
+# are FIFO-bounded (dropping an entry releases the pin with it).
+_XS_CACHE: Dict[int, tuple] = {}
+_SEARCH_XS_CACHE: Dict[int, tuple] = {}
+_XS_CACHE_MAX = 64
+
+
+def _staged(cache: Dict[int, tuple], ws: Dict[str, np.ndarray],
+            stage) -> tuple:
+    """Identity-pinned FIFO memo shared by the two staging caches."""
+    hit = cache.get(id(ws))
+    if hit is not None and hit[0] is ws:
+        return hit[1:]
+    out = stage(ws)
+    while len(cache) >= _XS_CACHE_MAX:
+        cache.pop(next(iter(cache)))
+    cache[id(ws)] = (ws,) + out
+    return out
+
+
+def _device_xs_cached(ws: Dict[str, np.ndarray]) -> Tuple[dict, int]:
+    return _staged(_XS_CACHE, ws, _device_xs)
+
+
 def place_configs(cfgs, sharding=None):
     """Stage a stacked config dict on device (optionally with the
     candidate-axis ``NamedSharding``) once, so callers looping over
@@ -288,7 +337,7 @@ def batched_map(ws: Dict[str, np.ndarray],
     for each candidate — and ``ok`` (B,) bool (False where ``map_graph``
     would raise ``UnmappableError``).
     """
-    xs, max_ops = _device_xs(ws)
+    xs, max_ops = _device_xs_cached(ws)
     tile, chip = placed if placed is not None \
         else place_configs(cfgs, sharding)
     out = _jitted_map(calib, max_ops, enable_split)(tile, chip, xs)
@@ -329,7 +378,7 @@ def map_and_simulate(ws: Dict[str, np.ndarray],
         raise ValueError(
             f"batched mapper+executor cannot model schedule mode {mode!r}; "
             f"supported modes: {SCHEDULE_MODES}")
-    xs, max_ops = _device_xs(ws)
+    xs, max_ops = _device_xs_cached(ws)
     tile, chip = placed if placed is not None \
         else place_configs(cfgs, sharding)
     fn = _jitted_map_exec(calib, max_ops)
@@ -339,3 +388,449 @@ def map_and_simulate(ws: Dict[str, np.ndarray],
     res["peak_tops"] = cfgs["chip"]["peak_tops"]
     res["mode"] = mode
     return res
+
+
+# =============================================================================
+# the search kernel: single-scan fused map+execute, class-specialized
+# =============================================================================
+
+def _build_search(calib: CalibrationTable, n_steps: int, n_state: int,
+                  enable_split: bool = True):
+    """ONE ``lax.scan`` over the op axis that maps *and* executes each op
+    in the same step, with the cost model specialized per operator class.
+
+    The class predicates (``op_cls``, ``splittable``, ``macs > 0``) come
+    from the shared workload op table (``vmap in_axes=None``), so every
+    ``lax.cond`` below keeps real branch semantics under vmap: only the
+    taken class's sub-models are evaluated at runtime.  The taken-path
+    arithmetic is the exact restriction of the full model
+    (``CostModel.execute_static_*`` / ``roofline_cycles_*`` /
+    ``supports_*``), so latency/energy/TOPS (both §3.2 schedule-mode
+    surfaces) are bitwise equal to ``map_and_simulate`` — pinned by
+    tests/test_ga_device.py and the exact-search parity property.
+
+    The scan axis is the *compacted* op table (``_search_xs_cached``):
+    fused children and padding rows — which the full executors cost and
+    then gate out with ``active``, 30-90 % of the rows on real graphs —
+    are dropped host-side.  ``n_steps`` is the compacted (bucketed)
+    scan length; ``n_state`` the ORIGINAL op count, which still sizes
+    the per-op state arrays so ``preds`` gathers use original indices
+    (an inactive row never writes state, so dropping it is bitwise
+    inert; compaction padding carries ``index == n_state`` and its
+    state writes fall out via scatter ``mode="drop"``).
+    """
+    cm = cost_model(calib, jnp)
+    c = calib
+
+    def run(tile, chip, xs, total_macs):
+        T = tile
+        num_macs = T["num_macs"]
+        n_tiles = jnp.sum(T["exists"])
+        # static per-tile bandwidth share of the estimate domain (§3.2)
+        bw_share_est = chip["dram_gbps"] / n_tiles
+
+        def noc_s(nbytes):
+            return noc_transfer_seconds(jnp, nbytes, chip["noc_bpc"],
+                                        chip["hops"],
+                                        chip["noc_base_cycles"],
+                                        chip["ref_clock_hz"])
+
+        def noc_e(nbytes):
+            return noc_transfer_energy_pj(jnp, nbytes,
+                                          c.e_noc_pj_per_byte_hop,
+                                          chip["hops"])
+
+        def step(carry, op):
+            (m_tile_finish, m_op_finish, m_op_tile, ok,
+             tile_finish, op_finish, cached_at, fifo_ops, fifo_bytes,
+             tile_ops, tile_active, e_mod, res_occ) = carry
+            idx = jnp.asarray(op["index"], jnp.int32)
+            active = (op["valid"] > 0) & (op["fused"] == 0)
+
+            # workload-static class predicates (shared across candidates)
+            is_spec_u = op["op_cls"] == int(OpClass.SPECIAL)
+            is_mac_u = op["op_cls"] == int(OpClass.MAC)
+            can_split_u = jnp.asarray(enable_split) & is_mac_u \
+                & (op["splittable"] > 0) & (op["macs"] > 0)
+
+            # ---- mapping: compat + SPECIAL->SFU routing + Eq. 2 roofline
+            def map_spec(o):
+                compat0 = cm.supports_special(T, o)
+                native = cm.sfu_native(T, o) & compat0
+                compat1 = jnp.where(jnp.any(native), native, compat0)
+                return compat1, cm.roofline_cycles_special(T, o, bw_share_est)
+
+            def map_mac(o):
+                return (cm.supports_mac(T, o),
+                        cm.roofline_cycles_mac(T, o, bw_share_est))
+
+            def map_dsp(o):
+                return (cm.supports_dsp(T, o),
+                        cm.roofline_cycles_dsp(T, o, bw_share_est))
+
+            compat, c_hat = jax.lax.cond(
+                is_spec_u, map_spec,
+                lambda o: jax.lax.cond(is_mac_u, map_mac, map_dsp, o), op)
+            any_compat = jnp.any(compat)
+
+            # ---- Eq. 1 earliest start per tile ---------------------------
+            preds = jnp.asarray(op["preds"], jnp.int32)
+            pred_ok = preds >= 0
+            pidx = jnp.maximum(preds, 0)
+            per_pred = op["per_pred_bytes"]
+            noc_pred_s = noc_s(per_pred)
+            pf = jnp.where(pred_ok, m_op_finish[pidx], 0.0)
+            ptile = jnp.where(pred_ok, m_op_tile[pidx], -1)
+            cross = (ptile[:, None] >= 0) \
+                & (ptile[:, None] != jnp.arange(MAX_TILES)[None, :])
+            dep = jnp.max(jnp.where(
+                pred_ok[:, None],
+                pf[:, None] + jnp.where(cross, noc_pred_s, 0.0),
+                0.0), axis=0)
+            t_start = jnp.maximum(m_tile_finish, dep)
+            fins = t_start + c_hat / T["clock_hz"]
+
+            # map_graph's sequential tie-break fold (see _build_mapper)
+            best_t = jnp.asarray(-1, jnp.int32)
+            best_fin = jnp.asarray(jnp.inf, _F)
+            best_nm = jnp.asarray(0.0, _F)
+            for t in range(MAX_TILES):
+                fin, nm = fins[t], num_macs[t]
+                better = fin < best_fin - _TIE
+                tie = (jnp.abs(fin - best_fin) <= _TIE) & (best_t >= 0) \
+                    & (nm < best_nm)
+                upd = compat[t] & (better | tie)
+                best_t = jnp.where(upd, t, best_t).astype(jnp.int32)
+                best_fin = jnp.where(upd, fin, best_fin)
+                best_nm = jnp.where(upd, nm, best_nm)
+
+            # ---- Eq. 3 split probe: statically splittable MAC ops only ---
+            mac_mask = compat & (num_macs > 0)
+
+            def probe_split(o):
+                ksplit = jnp.sum(mac_mask)
+                kf = jnp.maximum(ksplit.astype(_F), 1.0)
+
+                def axis_fin(axis):
+                    sub = split_op_fields(jnp, o, axis, kf)
+                    ch_s = cm.roofline_cycles_mac(T, sub, bw_share_est / kf) \
+                        / T["clock_hz"]
+                    fins_s = jnp.where(mac_mask, t_start + ch_s, -jnp.inf)
+                    return jnp.max(fins_s) + noc_s(o["bytes_out"] / kf)
+
+                fins3 = jnp.stack([axis_fin(0), axis_fin(1), axis_fin(2)])
+                best_axis = jnp.argmin(fins3).astype(jnp.int32)
+                do_split = (ksplit > 1) & (fins3[best_axis] < best_fin)
+                return ksplit, best_axis, do_split, fins3[best_axis]
+
+            def no_split(o):
+                return (jnp.asarray(0, jnp.sum(mac_mask).dtype),
+                        jnp.asarray(-1, jnp.int32),
+                        jnp.asarray(False), jnp.asarray(jnp.inf, _F))
+
+            ksplit, best_axis, do_split, split_fin = jax.lax.cond(
+                can_split_u, probe_split, no_split, op)
+
+            first_mac = jnp.argmax(mac_mask).astype(jnp.int32)
+            owner = jnp.where(do_split, first_mac, best_t)
+            choice_fin = jnp.where(do_split, split_fin, best_fin)
+
+            # ---- mapping-state update (map_graph's finish bookkeeping) ---
+            placed = active & any_compat
+            onehot = jnp.arange(MAX_TILES) == owner
+            mtf_single = jnp.where(onehot, choice_fin, m_tile_finish)
+            mtf_split = jnp.where(mac_mask,
+                                  jnp.maximum(m_tile_finish, choice_fin),
+                                  m_tile_finish)
+            m_tile_finish = jnp.where(
+                placed, jnp.where(do_split, mtf_split, mtf_single),
+                m_tile_finish)
+            # compaction-padding rows carry index == n_state: drop their
+            # state writes instead of clipping onto a real op's slot
+            m_op_finish = m_op_finish.at[idx].set(
+                jnp.where(placed, choice_fin, 0.0), mode="drop")
+            m_op_tile = m_op_tile.at[idx].set(
+                jnp.where(placed, owner, -1).astype(jnp.int32), mode="drop")
+            ok = ok & (any_compat | ~active)
+
+            # ---- execution of this op (batched.exec_plan semantics) ------
+            k_ex = jnp.where(placed & do_split, ksplit, 1).astype(_F)
+            mask = jnp.where(do_split, mac_mask, onehot) & placed
+            is_split = k_ex > 1.0
+
+            t_dep_e = jnp.max(jnp.where(pred_ok, op_finish[pidx], 0.0))
+            src = jnp.where(pred_ok, cached_at[pidx], -1)
+            via_noc = pred_ok & (src >= 0) & (src != owner)
+            miss = pred_ok & (src < 0)
+            dram_rd = op["bytes_w"] \
+                + jnp.sum(jnp.where(miss, per_pred, 0.0)) \
+                + jnp.where(op["num_preds"] == 0, op["bytes_in"], 0.0)
+            extra_noc_s = jnp.sum(jnp.where(via_noc, noc_pred_s, 0.0))
+            e_noc_in = jnp.sum(jnp.where(via_noc, noc_e(per_pred), 0.0))
+            dram_wr = jnp.where(op["bytes_out"] > T["cache_cap"][owner],
+                                op["bytes_out"], 0.0)
+
+            t_start0 = jnp.maximum(tile_finish[owner], t_dep_e)
+            n_active = jnp.maximum(jnp.sum(
+                jnp.where(T["exists"] > 0, tile_finish > t_start0, False)),
+                1.0)
+            bw = chip["dram_gbps"] / n_active
+
+            def ex_spec(o):
+                return cm.execute_static_special(T, o)
+
+            def ex_mac(o):
+                return cm.execute_static_mac(T, o)
+
+            def ex_dsp(o):
+                return cm.execute_static_dsp(T, o)
+
+            st = jax.lax.cond(
+                is_spec_u, ex_spec,
+                lambda o: jax.lax.cond(is_mac_u, ex_mac, ex_dsp, o), op)
+            ex = cm.execute_dynamic(st, T, bw, dram_rd, dram_wr)
+            fin_single = t_start0 + extra_noc_s + ex["seconds"][owner]
+
+            def exec_split(o):
+                kf = jnp.maximum(k_ex, 1.0)
+                sub = split_op_fields(jnp, o, best_axis, kf)
+                st_s = cm.execute_static_mac(T, sub)  # splits are MAC ops
+                ex_s = cm.execute_dynamic(st_s, T, bw, dram_rd / kf,
+                                          dram_wr / kf)
+                starts_sub = jnp.maximum(tile_finish, t_dep_e) + extra_noc_s
+                fins_sub = jnp.where(mask, starts_sub + ex_s["seconds"],
+                                     -jnp.inf)
+                slice_out = o["bytes_out"] / kf
+                reduce_s = noc_s(slice_out)
+                e_split = {m: ex_s[m] for m in
+                           ("e_compute", "e_dram", "e_sram", "e_irf",
+                            "e_orf", "e_dsp", "e_special")}
+                return (ex_s["seconds"], fins_sub,
+                        jnp.max(fins_sub) + reduce_s,
+                        (kf - 1.0) * noc_e(slice_out), reduce_s,
+                        e_split, ex_s["dram_bytes"])
+
+            def exec_no_split(o):
+                z = jnp.zeros(MAX_TILES, _F)
+                zs = jnp.asarray(0.0, _F)
+                e_split = {m: z for m in ("e_compute", "e_sram", "e_irf",
+                                          "e_orf", "e_dsp", "e_special")}
+                e_split["e_dram"] = zs   # e_dram is op-scalar, not per-tile
+                return (z, z - jnp.inf, zs, zs, zs, e_split, zs)
+
+            (sec_sub, fins_sub, fin_split, e_noc_split, reduce_s, e_sub,
+             dram_b_sub) = jax.lax.cond(can_split_u, exec_split,
+                                        exec_no_split, op)
+
+            fin_op = jnp.where(is_split, fin_split, fin_single)
+
+            tf_single = jnp.where(onehot, fin_single, tile_finish)
+            tf_split = jnp.where(mask, fins_sub, tile_finish)
+            tf_split = jnp.where(onehot,
+                                 jnp.maximum(tf_split, fin_split), tf_split)
+            new_tf = jnp.where(is_split, tf_split, tf_single)
+            tile_finish = jnp.where(placed, new_tf, tile_finish)
+
+            exec_mask = jnp.where(is_split, mask, onehot)
+            tile_ops = tile_ops + jnp.where(placed & exec_mask, 1.0, 0.0)
+            sec_each = jnp.where(is_split, sec_sub, ex["seconds"])
+            tile_active = tile_active + jnp.where(placed & exec_mask,
+                                                  sec_each, 0.0)
+
+            new_e = dict(e_mod)
+            for mod, key in (("compute", "e_compute"), ("dram", "e_dram"),
+                             ("sram", "e_sram"), ("irf", "e_irf"),
+                             ("orf", "e_orf"), ("dsp", "e_dsp"),
+                             ("special", "e_special")):
+                single_v = jnp.broadcast_to(ex[key], (MAX_TILES,))[owner]
+                contrib = jnp.where(
+                    is_split,
+                    jnp.sum(jnp.where(
+                        mask, jnp.broadcast_to(e_sub[key], (MAX_TILES,)),
+                        0.0)),
+                    single_v)
+                new_e[mod] = e_mod[mod] + jnp.where(placed, contrib, 0.0)
+            e_noc_op = e_noc_in + jnp.where(is_split, e_noc_split, 0.0)
+            new_e["noc"] = e_mod["noc"] + jnp.where(placed, e_noc_op, 0.0)
+            new_e["dsp"] = new_e["dsp"] + jnp.where(
+                placed, op["fused_lane_ops"] * c.e_dsp_pj_per_lane_op, 0.0)
+            new_e["fuse_savings"] = e_mod["fuse_savings"] + jnp.where(
+                placed,
+                op["fused_refund_bytes"] * c.e_sram_pj_per_byte, 0.0)
+            e_mod = new_e
+
+            dram_b_op = jnp.where(
+                is_split,
+                jnp.sum(jnp.where(
+                    mask, jnp.broadcast_to(dram_b_sub, (MAX_TILES,)), 0.0)),
+                jnp.broadcast_to(ex["dram_bytes"], (MAX_TILES,))[owner])
+            noc_s_op = extra_noc_s + jnp.where(is_split, reduce_s, 0.0)
+            occ = jnp.stack([dram_b_op, noc_s_op])
+            res_occ = res_occ + jnp.where(placed, occ, jnp.zeros(2, _F))
+
+            op_finish = op_finish.at[idx].set(
+                jnp.where(placed, fin_op, 0.0), mode="drop")
+            fifo_ops, fifo_bytes, cached_at = fifo_insert(
+                fifo_ops, fifo_bytes, cached_at, owner, idx,
+                op["bytes_out"], T["cache_cap"][owner], placed)
+            return (m_tile_finish, m_op_finish, m_op_tile, ok,
+                    tile_finish, op_finish, cached_at, fifo_ops, fifo_bytes,
+                    tile_ops, tile_active, e_mod, res_occ), None
+
+        e0 = {m: jnp.asarray(0.0, _F)
+              for m in ("compute", "dram", "sram", "irf", "orf", "dsp",
+                        "special", "noc", "fuse_savings")}
+        init = (jnp.zeros(MAX_TILES, _F), jnp.zeros(n_state, _F),
+                jnp.full(n_state, -1, jnp.int32), jnp.asarray(True),
+                jnp.zeros(MAX_TILES, _F), jnp.zeros(n_state, _F),
+                jnp.full(n_state, -1, jnp.int32),
+                jnp.full((MAX_TILES, ACT_CACHE_SLOTS), -1, jnp.int32),
+                jnp.zeros((MAX_TILES, ACT_CACHE_SLOTS), _F),
+                jnp.zeros(MAX_TILES, _F), jnp.zeros(MAX_TILES, _F),
+                e0, jnp.zeros(2, _F))
+        (_, _, _, ok, tile_finish, _, _, _, _, tile_ops, tile_active,
+         e_mod, res_occ), _ = jax.lax.scan(step, init, xs["per_op"])
+
+        # final surface: batched.exec_plan's reductions, verbatim
+        makespan = jnp.max(tile_finish)
+        gated = tile_ops <= 0
+        resid = jnp.where(gated, c.power_gate_residual, 1.0)
+        leak_t = jnp.where(T["exists"] > 0,
+                           c.leak_mw_per_mm2 * T["area_mm2"] * makespan
+                           * resid * 1e9, 0.0)
+        leakage = jnp.sum(leak_t)
+        energy = (e_mod["compute"] + e_mod["dram"] + e_mod["sram"]
+                  + e_mod["irf"] + e_mod["orf"] + e_mod["dsp"]
+                  + e_mod["special"] + e_mod["noc"] + leakage
+                  - e_mod["fuse_savings"])
+        achieved = jnp.where(makespan > 0, total_macs / makespan / 1e12, 0.0)
+        out = {"latency_s": makespan, "energy_pj": energy,
+               "achieved_tops": achieved, "ok": ok}
+        dram_bytes, noc_busy = res_occ[0], res_occ[1]
+        leak_rate = jnp.sum(jnp.where(T["exists"] > 0,
+                                      c.leak_mw_per_mm2 * T["area_mm2"]
+                                      * resid * 1e9, 0.0))
+        out.update(pipeline_bounds(jnp, makespan, jnp.max(tile_active),
+                                   dram_bytes, chip["dram_gbps"], noc_busy))
+        ii = out["ii_s"]
+        out["fill_latency_s"] = makespan
+        out["dram_bytes_per_batch"] = dram_bytes
+        out["energy_ss_pj"] = steady_state_energy(energy, leakage,
+                                                  leak_rate, ii)
+        out["achieved_tops_ss"] = jnp.where(ii > 0,
+                                            total_macs / ii / 1e12, 0.0)
+        out["pipeline_depth"] = jnp.where(ii > 0, jnp.ceil(makespan / ii),
+                                          1.0)
+        return out
+
+    return run
+
+
+def _search_xs_cached(ws: Dict[str, np.ndarray]):
+    """Compacted device staging for the search kernel (same identity-
+    pinned cache as ``_device_xs_cached``): (xs dict of compacted
+    (n_steps, ...) arrays, n_steps, n_state, total_macs)."""
+    return _staged(_SEARCH_XS_CACHE, ws, _search_xs)
+
+
+def _search_xs(ws: Dict[str, np.ndarray]):
+    n_state = len(ws["op_type"])
+    sel = np.flatnonzero((np.asarray(ws["valid"]) > 0)
+                         & (np.asarray(ws["fused"]) == 0))
+    # bucket the compacted scan length (multiples of 16) so near-size
+    # workloads share a jit trace; padding rows are valid=0 with
+    # index == n_state (their state writes are scatter-dropped)
+    n_steps = max(-(-len(sel) // 16) * 16, 16)
+    pad = n_steps - len(sel)
+    per_op = {}
+    for k in _WS_KEYS:
+        a = np.asarray(ws[k], np.float64)[sel]
+        per_op[k] = jnp.asarray(np.concatenate(
+            [a, np.zeros(pad, np.float64)]))
+    preds = np.asarray(ws["preds"], np.int32)[sel]
+    per_op["preds"] = jnp.asarray(np.concatenate(
+        [preds, np.full((pad,) + preds.shape[1:], -1, np.int32)]))
+    per_op["index"] = jnp.asarray(np.concatenate(
+        [sel.astype(np.int32), np.full(pad, n_state, np.int32)]))
+    xs = {"per_op": per_op}
+    tm = jnp.asarray(float(ws["total_macs"]), _F)
+    return xs, n_steps, n_state, tm
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_search_population(calib: CalibrationTable,
+                              shapes: Tuple[Tuple[int, int], ...],
+                              enable_split: bool = True):
+    """One jitted dispatch evaluating a candidate batch on EVERY workload
+    of a generation: the per-workload single-scan search kernels run
+    back-to-back inside one executable, so a GA generation costs one
+    evaluation dispatch instead of W (no per-workload host sync, no
+    executable alternation between kernels)."""
+    fns = [_build_search(calib, n_steps, n_state, enable_split)
+           for n_steps, n_state in shapes]
+
+    def run_all(tile, chip, xs_list, tm_list):
+        return [fn(tile, chip, xs, tm)
+                for fn, xs, tm in zip(fns, xs_list, tm_list)]
+
+    batched = jax.vmap(run_all, in_axes=({k: 0 for k in TILE_KEYS},
+                                         {k: 0 for k in CHIP_KEYS},
+                                         None, None))
+    return jax.jit(batched)
+
+
+def search_population(ws_list, cfgs, calib: CalibrationTable = DEFAULT_CALIB,
+                      sharding=None, placed=None, mode: str = "latency",
+                      out_keys: Optional[Tuple[str, ...]] = None):
+    """Exact search scoring of one candidate batch on a list of prepared
+    workloads, as ONE device dispatch (see ``_jitted_search_population``).
+    Returns one result dict per workload — the ``search_and_simulate``
+    surface (restricted to ``out_keys`` + ``ok`` when given: the engine
+    fetches only the mode's three metric columns).  This is what
+    ``EvalEngine(backend="exact")`` dispatches per miss batch, and hence
+    what the device GA loop costs per generation."""
+    if mode not in SCHEDULE_MODES:
+        raise ValueError(
+            f"exact search kernel cannot model schedule mode {mode!r}; "
+            f"supported modes: {SCHEDULE_MODES}")
+    staged = [_search_xs_cached(ws) for ws in ws_list]
+    shapes = tuple((s[1], s[2]) for s in staged)
+    xs_list = tuple(s[0] for s in staged)
+    tm_list = tuple(s[3] for s in staged)
+    tile, chip = placed if placed is not None \
+        else place_configs(cfgs, sharding)
+    fn = _jitted_search_population(calib, shapes)
+    outs = fn(tile, chip, xs_list, tm_list)
+    results = []
+    for out in outs:
+        keys = out.keys() if out_keys is None \
+            else tuple(out_keys) + ("ok",)
+        res = {k: np.asarray(out[k]) for k in keys}
+        res["area_mm2"] = cfgs["chip"]["chip_area"]
+        res["peak_tops"] = cfgs["chip"]["peak_tops"]
+        res["mode"] = mode
+        results.append(res)
+    return results
+
+
+def search_and_simulate(ws: Dict[str, np.ndarray],
+                        cfgs: Dict[str, Dict[str, np.ndarray]],
+                        calib: CalibrationTable = DEFAULT_CALIB,
+                        sharding=None, placed=None,
+                        mode: str = "latency") -> Dict[str, np.ndarray]:
+    """The exact *search* dispatch: one class-specialized scan that maps
+    and executes every (active) op, returning only the (B,) scoring
+    surface.
+
+    Metrics are bitwise equal to ``map_and_simulate`` (same formulas —
+    only the untaken operator-class branches and the inert fused/padding
+    rows are skipped), for a fraction of its wall-clock: no second scan
+    pass, no per-op placement materialization, no untaken-class
+    arithmetic, no dead scan steps.  Both §3.2 schedule surfaces ride in
+    the one scan; ``mode`` validates and tags the result.  Rows with
+    ``ok == False`` carry garbage metrics and must be discarded by the
+    caller.  For scoring several workloads per batch, prefer
+    ``search_population`` (one dispatch for all of them).
+    """
+    return search_population([ws], cfgs, calib, sharding=sharding,
+                             placed=placed, mode=mode)[0]

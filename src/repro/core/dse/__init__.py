@@ -17,8 +17,16 @@ engine:
 * ``ga``        — per-area-budget genetic refinement seeded from the sweep
                   bests (population 200, tournament 5, 80 % crossover,
                   20 % mutation, 10 % elitism at paper scale).
+* ``ga_device`` — the GA generation loop as jitted device dispatches
+                  (``run_ga``'s default): tournament/crossover/mutation/
+                  elitism + memo-key canonicalization in one
+                  ``jax.random``-keyed kernel per generation, scoring
+                  *exact* fused-mapper metrics through the engine's
+                  ``backend="exact"`` (search fitness == ``rescore()``
+                  bitwise; seeded runs bitwise-deterministic).
 * ``bayes``     — sample-efficient Bayesian-optimization backend (RBF
-                  surrogate + expected improvement).
+                  surrogate + expected improvement), scoring exact by
+                  default.
 * ``objective`` — Eq. 8 fitness: workload-equal-weighted mean iso-area
                   energy savings + alpha * normalized TOPS/W.
 * ``batch_eval``— the JAX-native evaluator: the whole compile+simulate

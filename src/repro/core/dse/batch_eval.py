@@ -17,8 +17,19 @@ plan.
 
 Equivalence is pinned by tests/test_batch_eval.py: median relative error
 vs the reference simulator and a tolerance band over random config
-batches.  The DSE uses this evaluator for search and re-scores finalists
-through the exact backends, so reported numbers are exact.
+batches.
+
+**Status (PR 5).**  Exact search is no longer more expensive than this
+approximate scan: ``compiler.batched_mapper.search_and_simulate`` fuses
+the *exact* Eq. 1-3 mapping with plan execution in one
+class-specialized scan, and ``EvalEngine(backend="exact")`` routes
+search through it — the device GA loop and the BO backend score on
+exact metrics directly (search-time fitness == ``rescore()`` bitwise),
+with no finalist re-ranking step.  This scan remains the engine's
+default ``"scan"`` backend for bulk sweeps and as the approximate-search
+baseline the perf trajectory is measured against
+(``benchmarks/perf_micro.py``); searches that rank on it must still
+re-score finalists through an exact backend.
 """
 from __future__ import annotations
 

@@ -30,28 +30,37 @@ optimization, genome hillclimb) funnels its candidate scoring through one
    shapes up to a mesh-size multiple (after bucket rounding) so uneven
    populations never fall back to per-device replication.
 
-**Evaluation backends.**  Cache misses are simulated by one of three
+**Evaluation backends.**  Cache misses are simulated by one of four
 backends sharing one set of cost formulas (``simulator.costs``):
 
-* ``"scan"`` (default for search) — ``batch_eval``'s fused
-  compile+simulate scan: exact orchestrator semantics but an in-scan
-  greedy re-derivation of the Eq. 1-3 mapping (epsilon tie-breaks,
-  ragged-remainder-free splits);
-* ``"batched"`` (default *exact* backend: ``rescore()``) — the
-  compile-free exact path: ``compiler.batched_mapper.map_and_simulate``
-  fuses an exact batched Eq. 1-3 mapping scan (placements pinned
-  *bitwise* to ``map_graph``) with the vmapped/jitted
-  ``simulator.batched`` plan executor in one dispatch, with zero
-  per-candidate Python work.  ``exact_mapper="python"`` falls back to
-  the per-candidate ``map_graph`` -> ``lower_plan`` pipeline (the
-  oracle-reference compile path, bitwise-identical results);
+* ``"scan"`` (default) — ``batch_eval``'s fused compile+simulate scan:
+  exact orchestrator semantics but an in-scan greedy re-derivation of
+  the Eq. 1-3 mapping (epsilon tie-breaks, ragged-remainder-free
+  splits).  Retained as the approximate-search baseline;
+* ``"exact"`` (the *search* grade of the exact path) — the
+  class-specialized single-scan kernel
+  (``compiler.batched_mapper.search_and_simulate``): exact Eq. 1-3
+  mapping fused with exact plan execution in ONE scan, with only the
+  op's class sub-models evaluated per step.  Metrics are bitwise equal
+  to ``rescore()``, so a search running this backend never needs a
+  post-hoc exact re-score — searching on an approximate objective and
+  re-ranking finalists (the fidelity gap HARP-style taxonomies warn
+  about) is retired for GA refinement;
+* ``"batched"`` — the two-scan exact path:
+  ``compiler.batched_mapper.map_and_simulate`` fuses the exact batched
+  Eq. 1-3 mapping scan (placements pinned *bitwise* to ``map_graph``)
+  with the vmapped/jitted ``simulator.batched`` plan executor.
+  ``exact_mapper="python"`` falls back to the per-candidate
+  ``map_graph`` -> ``lower_plan`` pipeline (the oracle-reference
+  compile path, bitwise-identical results);
 * ``"oracle"`` — ``map_graph`` + the per-candidate Python ``ChipSim``
   walk, kept as the ground truth the other two are pinned against.
 
-Search uses the engine; finalists are re-scored through ``rescore()``
-(batched exact backend), so reported numbers are exact.  Every
-``evaluate()`` result carries a ``"meta"`` entry reporting the backend,
-the schedule mode, and the call's cache hit/miss/skip counts.
+Search uses the engine; finalists of approximate (``scan``) searches
+are re-scored through ``rescore()`` (exact), and ``exact``-backend
+searches are already exact at search time.  Every ``evaluate()`` result
+carries a ``"meta"`` entry reporting the backend, the schedule mode,
+and the call's cache hit/miss/skip counts.
 
 **Schedule modes** (§3.2, the serving-vs-latency scenario axis).
 ``mode="latency"`` (default) scores the one-batch makespan;
@@ -90,7 +99,7 @@ __all__ = ["EvalEngine", "EngineStats", "genomes_to_configs",
            "genome_areas", "canonical_genomes", "prepared_workload",
            "BACKENDS", "SCHEDULE_MODES"]
 
-BACKENDS = ("scan", "batched", "oracle")
+BACKENDS = ("scan", "exact", "batched", "oracle")
 
 # metric keys each §3.2 schedule mode scores on: latency-critical
 # deployment uses the one-batch makespan; serving (throughput) uses the
@@ -402,8 +411,9 @@ class EvalEngine:
                  batch: int = 1024, memoize: bool = True,
                  vectorized: bool = True, shard: bool = False,
                  aggressive_int4: bool = False, enable_fusion: bool = True,
-                 memo_limit: int = 500_000, backend: str = "scan",
-                 exact_mapper: str = "batched", mode: str = "latency"):
+                 memo_max: int = 131_072, backend: str = "scan",
+                 exact_mapper: str = "batched", mode: str = "latency",
+                 memo_limit: Optional[int] = None):
         if backend not in BACKENDS:
             raise ValueError(f"backend {backend!r} not in {BACKENDS}")
         if exact_mapper not in ("batched", "python"):
@@ -411,6 +421,9 @@ class EvalEngine:
                              f"('batched', 'python')")
         if mode not in SCHEDULE_MODES:
             raise ValueError(f"mode {mode!r} not in {SCHEDULE_MODES}")
+        if backend == "exact" and exact_mapper != "batched":
+            raise ValueError("backend='exact' is the fused search kernel; "
+                             "it cannot run exact_mapper='python'")
         self.exact_mapper = exact_mapper
         self.mode = mode
         self.workloads = list(workloads)
@@ -428,8 +441,19 @@ class EvalEngine:
         # Bounded LRU (hits refresh recency): a paper-scale multi-seed
         # random sweep sees millions of unique genomes with near-zero
         # reuse, and an unbounded memo would hold them all for nothing.
-        # >= batch so entries stored in one call can't evict each other
-        self.memo_limit = max(memo_limit, batch)
+        # The default cap holds ~6 full paper-scale GA refinements
+        # (population 200 x 101 generations of novel canonical genomes
+        # per (bracket, seed)) before recency eviction kicks in, so long
+        # multi-seed multi-bracket runs stay bounded without evicting the
+        # live refinement's working set.  ``memo_limit`` is the pre-PR-5
+        # name, accepted as an alias.  >= batch so entries stored in one
+        # call can't evict each other.
+        if memo_limit is not None:
+            if memo_max != 131_072:
+                raise ValueError("pass memo_max or its legacy alias "
+                                 "memo_limit, not both")
+            memo_max = memo_limit
+        self.memo_max = max(memo_max, batch)
         self._memo: Dict[bytes, Tuple[np.ndarray, np.ndarray,
                                       np.ndarray]] = {}
         self._sharding = None
@@ -563,7 +587,8 @@ class EvalEngine:
         genomes = np.asarray(genomes, np.int64).reshape(-1, GENOME_LEN)
         n, W = len(genomes), len(self.workloads)
         if not oracle and self.exact_mapper == "batched":
-            return self._simulate_exact_batched(genomes, pad_to, cfgs, mode)
+            return self._simulate_exact_fused(genomes, pad_to, cfgs, mode,
+                                              lean=self.backend == "exact")
         lkey, ekey, akey = _MODE_KEYS[mode]
         chips = [decode(g, f"x{i}") for i, g in enumerate(genomes)]
         lat = np.full((n, W), np.inf)
@@ -612,17 +637,25 @@ class EvalEngine:
                 tw[i, j] = res[akey][r] / max(power, 1e-30)
         return lat, en, tw
 
-    def _simulate_exact_batched(self, genomes: np.ndarray,
-                                pad_to: Optional[int] = None, cfgs=None,
-                                mode: Optional[str] = None):
+    def _simulate_exact_fused(self, genomes: np.ndarray,
+                              pad_to: Optional[int] = None, cfgs=None,
+                              mode: Optional[str] = None,
+                              lean: bool = False):
         """The compile-free exact path: per workload, ONE fused
-        batched-mapper + plan-executor dispatch over all candidates
-        (``compiler.batched_mapper.map_and_simulate``), sharded over the
-        candidate axis when the engine shards.  The per-workload compiler
-        passes 1-2 + tensorization come from the process-wide
-        ``prepared_workload`` cache (``self._prepared``) — nothing runs
-        per (workload, candidate) on the host."""
-        from ..compiler.batched_mapper import map_and_simulate, place_configs
+        batched-mapper + plan-executor dispatch over all candidates,
+        sharded over the candidate axis when the engine shards.
+        ``lean=True`` (the ``"exact"`` search backend) dispatches the
+        class-specialized single-scan search kernel
+        (``compiler.batched_mapper.search_and_simulate``); ``lean=False``
+        (the ``"batched"`` backend and ``rescore()``) keeps the two-scan
+        ``map_and_simulate`` dispatch — metrics are bitwise identical
+        either way (and to the per-candidate compile path).  The
+        per-workload compiler passes 1-2 + tensorization come from the
+        process-wide ``prepared_workload`` cache (``self._prepared``) —
+        nothing runs per (workload, candidate) on the host."""
+        from ..compiler.batched_mapper import (map_and_simulate,
+                                               place_configs,
+                                               search_population)
 
         mode = self.mode if mode is None else mode
         lkey, ekey, akey = _MODE_KEYS[mode]
@@ -641,9 +674,19 @@ class EvalEngine:
                 cfgs = self._take(cfgs, sel)
         # device placement (and sharding) once, not once per workload
         placed = place_configs(cfgs, self._sharding)
-        for j, wname in enumerate(self.workloads):
-            res = map_and_simulate(self._prepared(wname), cfgs, self.calib,
-                                   placed=placed, mode=mode)
+        if lean:
+            # the search grade: ONE class-specialized dispatch scores the
+            # batch on every workload (no per-workload host round trips),
+            # fetching only the mode's metric columns
+            results = search_population(
+                [self._prepared(w) for w in self.workloads], cfgs,
+                self.calib, placed=placed, mode=mode,
+                out_keys=(lkey, ekey, akey))
+        else:
+            results = [map_and_simulate(self._prepared(w), cfgs, self.calib,
+                                        placed=placed, mode=mode)
+                       for w in self.workloads]
+        for j, res in enumerate(results):
             ok = res["ok"][:n]
             l, e = res[lkey][:n], res[ekey][:n]
             lat[ok, j] = l[ok]
@@ -655,7 +698,9 @@ class EvalEngine:
     # ------------------------------------------------------------- evaluate
     def evaluate(self, genomes: np.ndarray,
                  keep: Optional[Callable[[np.ndarray], np.ndarray]] = None,
-                 mode: Optional[str] = None) -> Dict[str, np.ndarray]:
+                 mode: Optional[str] = None,
+                 canonical: Optional[np.ndarray] = None
+                 ) -> Dict[str, np.ndarray]:
         """Score every genome on every workload.
 
         ``keep(areas) -> (N,) bool`` optionally pre-filters by chip area:
@@ -668,6 +713,14 @@ class EvalEngine:
         ``energy`` the per-inference steady-state energy, and ``tops_w``
         the TOPS/W at the pipelined rate; memo entries are keyed on
         (mode, genome), so the two modes never cross-contaminate.
+
+        ``canonical`` optionally supplies the rows'
+        ``canonical_genomes`` forms when the caller already computed
+        them (the device GA loop canonicalizes children on device in the
+        same dispatch as the genetics, so memo keys cost it no extra
+        host pass).  Must be bitwise equal to
+        ``canonical_genomes(genomes)`` — pinned for the device
+        canonicalizer by tests/test_ga_device.py.
         """
         mode = self.mode if mode is None else mode
         if mode not in SCHEDULE_MODES:
@@ -684,7 +737,9 @@ class EvalEngine:
         self.stats.requests += n
 
         tag = mode.encode() + b":"
-        keys = [tag + self._key(g) for g in canonical_genomes(genomes)]
+        canon = canonical_genomes(genomes) if canonical is None else \
+            np.asarray(canonical, np.int64).reshape(-1, GENOME_LEN)
+        keys = [tag + self._key(g) for g in canon]
         keep_mask = np.ones(n, bool) if keep is None else \
             np.asarray(keep(area), bool)
 
@@ -720,7 +775,7 @@ class EvalEngine:
             for r, i in enumerate(chunk):
                 lat[i], en[i], tw[i] = l[r], e[r], t[r]
                 if self.memoize:
-                    while len(self._memo) >= self.memo_limit:
+                    while len(self._memo) >= self.memo_max:
                         self._memo.pop(next(iter(self._memo)))
                     self._memo.setdefault(
                         keys[i], (l[r].copy(), e[r].copy(), t[r].copy()))
@@ -763,6 +818,17 @@ class EvalEngine:
                          "requests": len(genomes), "hits": 0,
                          "misses": len(genomes), "skips": 0,
                          "hit_rate": 0.0}}
+
+    def reserve_shapes(self, max_batch: int = 64) -> None:
+        """Pre-register the search-loop batch buckets in the emitted-shape
+        set WITHOUT compiling, so ``_pad_size`` always pads minimally
+        instead of reusing a previously-minted larger shape (up to 1.5x
+        wasted rows per dispatch).  Each shape still jit-compiles lazily
+        on first use — the device GA loop calls this because its jits are
+        process-global and its per-generation miss counts sweep the whole
+        bucket range; ``warmup()`` remains the compile-ahead variant."""
+        for b in range(16, _bucket(max_batch) + 4, 4):
+            self._pad_size(b)
 
     def warmup(self, buckets: Sequence[int] = tuple(range(16, 68, 4))
                ) -> None:

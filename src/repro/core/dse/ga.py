@@ -5,6 +5,13 @@ size 5, 80 % crossover, 20 % mutation, 10 % elitism, seeded from the top
 50 sweep individuals at each budget, ten-generation no-improvement early
 stop.  Fitness is Eq. 8 against the sweep's best-homogeneous baseline at
 the same bracket.
+
+``run_ga`` delegates to the jitted device generation loop
+(``ga_device.run_ga_device``) by default — genetics + canonicalization
+as one device dispatch per generation, scoring exact fused-mapper
+metrics (``EvalEngine(backend="exact")``) so the selected-on fitness
+equals a post-hoc exact ``rescore()`` bitwise.  The numpy loop below
+(``loop="host"``) is retained as the PR-4 reference/benchmark baseline.
 """
 from __future__ import annotations
 
@@ -69,8 +76,21 @@ def run_ga(sweep: SweepResult, bracket: float,
            cfg: GAConfig = GAConfig(), seed: int = 0,
            calib: CalibrationTable = DEFAULT_CALIB,
            verbose: bool = False, engine: Optional[EvalEngine] = None,
-           prefilter: bool = True) -> Optional[GAResult]:
+           prefilter: bool = True, loop: str = "device"
+           ) -> Optional[GAResult]:
     """GA refinement at one area budget, seeded from the sweep.
+
+    ``loop="device"`` (default) delegates to the jitted generation loop
+    (``ga_device.run_ga_device``): tournament selection, uniform
+    crossover, Poisson-k mutation, elitism and canonicalization run as
+    one ``jax.random``-keyed device dispatch per generation, and —
+    absent an explicit ``engine`` — scoring runs the *exact* search
+    backend (``EvalEngine(backend="exact")``), so the fitness the GA
+    selects on equals a post-hoc ``rescore()`` bitwise.  Seeded runs
+    are deterministic; same numpy API and ``GAResult`` contract.
+    ``loop="host"`` keeps the historical numpy generation loop (the
+    PR-4 benchmark baseline; a different random stream, so the two
+    loops explore different — equally valid — trajectories).
 
     Scoring goes through a (optionally shared) ``EvalEngine``: the 10 %
     elites re-entering every generation and duplicate children are cache
@@ -84,6 +104,13 @@ def run_ga(sweep: SweepResult, bracket: float,
     the Eq. 8 savings term then optimizes serving energy, and an II
     target can be enforced on finalists via
     ``objective.serving_fitness``."""
+    if loop not in ("device", "host"):
+        raise ValueError(f"loop {loop!r} not in ('device', 'host')")
+    if loop == "device":
+        from .ga_device import run_ga_device
+        return run_ga_device(sweep, bracket, cfg, seed=seed, calib=calib,
+                             verbose=verbose, engine=engine,
+                             prefilter=prefilter)
     engine = (engine.check_workloads(sweep.workloads, calib)
               if engine is not None else EvalEngine(sweep.workloads, calib))
     rng = np.random.default_rng(seed + int(bracket))

@@ -1,0 +1,320 @@
+"""Device-side GA generation loop (paper §4.5) over the exact search path.
+
+The Stage-2 refinement loop, with the genetics moved off the host: one
+jitted ``jax.random``-keyed dispatch per generation runs tournament
+selection (size ``cfg.tournament``), uniform crossover, Poisson-k gene
+mutation and elitism over the whole ``(P, GENOME_LEN)`` population —
+replacing the ~P Python tournament draws, per-child numpy crossover
+/mutation, and per-generation host round trips of the historical loop
+(``ga.run_ga(loop="host")``).  The same dispatch canonicalizes the
+children (``canonical_genomes``, ported to jnp bit-for-bit), so the
+engine's mode-keyed memo lookup costs no extra host pass: elites and
+duplicate children are cache hits that skip the simulation scan
+entirely.
+
+Scoring goes through an ``EvalEngine`` — by default one constructed
+with ``backend="exact"``, the class-specialized fused mapping+execution
+scan (``compiler.batched_mapper.search_and_simulate``), so the Eq. 8
+fitness the tournament selects on is computed from *exact*
+(fused-mapper) metrics: search-time fitness equals a post-hoc
+``rescore()`` bitwise, retiring the approximate-search-then-rescore
+fidelity gap for GA refinement.  The Eq. 8 fitness itself (iso-area
+savings vs the bracket's homogeneous baseline + the alpha TOPS/W
+tie-break, with the area-bracket validity mask) is a jitted device
+kernel over the (P, W) metric matrices.
+
+Seeded runs are bitwise-deterministic: the genome stream is a
+``jax.random`` fold of (seed, bracket), engine metrics are
+batch-composition-independent (pinned by tests/test_engine.py), and two
+same-seed runs produce identical ``best_genome``/``history``
+(tests/test_ga_device.py).  With a sharded engine and a population
+divisible by the mesh, the population axis of the genetics dispatch is
+placed with the same ``NamedSharding`` as the evaluation batches
+(``launch.mesh.population_sharding``).
+
+The one *documented* departure from the host loop's numpy genetics: the
+Poisson-k mutation draw is truncated at ``MUT_GENES_MAX`` (= 8) genes
+per child (P[k > 8 | k ~ Poisson(2)] < 3e-4); the host loop keeps the
+unbounded draw.  Both are the paper's operator — the two loops walk
+different (equally valid) random streams either way.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Optional
+
+import numpy as np
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+
+from ..arch import MAX_TILE_TYPES
+from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
+from .encoding import FIELDS_PER_TILE, GENOME_LEN, genome_bounds, random_genomes
+from .engine import (_ASYM_CANON, _ASYM_COL, _FIELD_COL, _PREC_COL, _SFU,
+                     _SFU_COL, _SPECIAL_INERT_COLS, EvalEngine)
+from .objective import ALPHA, AREA_BRACKETS, area_bracket
+
+__all__ = ["run_ga_device", "MUT_GENES_MAX", "canonical_genomes_device",
+           "fitness_device", "bracket_bounds"]
+
+# Poisson-k mutation truncation of the device loop (see module docstring)
+MUT_GENES_MAX = 8
+
+_SFU_DEV = jnp.asarray(_SFU)
+_ASYM_CANON_DEV = jnp.asarray(_ASYM_CANON, jnp.int32)
+
+
+# =============================================================================
+# device canonicalization (bitwise port of engine.canonical_genomes)
+# =============================================================================
+
+def _canonical_device(g):
+    """jnp mirror of ``engine.canonical_genomes`` on a (P, GENOME_LEN)
+    int array — same zeroing order, same tables, bit-for-bit (pinned by
+    tests/test_ga_device.py)."""
+    n_types = g[:, 0] + 1
+    for t in range(MAX_TILE_TYPES):
+        base = 1 + t * FIELDS_PER_TILE
+        inactive = t >= n_types
+        block = g[:, base:base + FIELDS_PER_TILE]
+        g = g.at[:, base:base + FIELDS_PER_TILE].set(
+            jnp.where(inactive[:, None], 0, block))
+        special = (_SFU_DEV[g[:, base + _SFU_COL] % len(_SFU)] > 0) \
+            & ~inactive
+        for col in _SPECIAL_INERT_COLS:
+            g = g.at[:, base + col].set(
+                jnp.where(special, 0, g[:, base + col]))
+        g = g.at[:, base + _ASYM_COL].set(
+            _ASYM_CANON_DEV[g[:, base + _PREC_COL] % 4,
+                            g[:, base + _ASYM_COL] % 4].astype(g.dtype))
+    return g
+
+
+@jax.jit
+def _canonical_device_jit(g):
+    return _canonical_device(g)
+
+
+def canonical_genomes_device(genomes: np.ndarray) -> np.ndarray:
+    """Host-callable wrapper over the jitted device canonicalizer."""
+    g = np.asarray(genomes, np.int64).reshape(-1, GENOME_LEN)
+    return np.asarray(_canonical_device_jit(jnp.asarray(g)))
+
+
+# =============================================================================
+# Eq. 8 fitness kernel
+# =============================================================================
+
+def bracket_bounds(bracket: float):
+    """(lo, hi] area band equivalent to ``area_bracket(a) == bracket``
+    (the last bracket is open above: oversized chips land in it)."""
+    if bracket not in AREA_BRACKETS:
+        return math.nan, math.nan      # no design can match (host parity)
+    bi = AREA_BRACKETS.index(bracket)
+    lo = AREA_BRACKETS[bi - 1] if bi > 0 else -math.inf
+    hi = bracket if bi < len(AREA_BRACKETS) - 1 else math.inf
+    return lo, hi
+
+
+@jax.jit
+def _fitness_kernel(en, tw, lat, area, e_homo, lo, hi, alpha):
+    """Eq. 8 on the (P, W) metric matrices, on device: mean iso-area
+    savings vs the bracket's homogeneous baseline + alpha * TOPS/W
+    normalized over comparable (in-bracket, valid) designs only;
+    invalid/out-of-bracket rows score -inf (``ga._fitness`` semantics)."""
+    sav = (e_homo[None, :] - en) / jnp.maximum(e_homo[None, :], 1e-30)
+    fit = sav.mean(axis=1)
+    peak_tw = tw.max(axis=1)
+    bad = ~jnp.isfinite(lat).all(axis=1) | ~(lat > 0).all(axis=1)
+    bad = bad | ~((area > lo) & (area <= hi))
+    ok = ~bad
+    max_tw = jnp.max(jnp.where(ok, peak_tw, -jnp.inf))
+    max_tw = jnp.where(jnp.any(ok), max_tw, 1.0)
+    fit = fit + alpha * peak_tw / jnp.maximum(max_tw, 1e-30)
+    return jnp.where(bad, -jnp.inf, fit)
+
+
+def fitness_device(metrics: Dict[str, np.ndarray], e_homo: np.ndarray,
+                   bracket: float, alpha: float = ALPHA) -> np.ndarray:
+    """Eq. 8 fitness of an engine ``evaluate()``/``rescore()`` result
+    through the device kernel — the scoring the device GA loop selects
+    on (and what the exact-search/rescore parity property compares)."""
+    lo, hi = bracket_bounds(bracket)
+    return np.asarray(_fitness_kernel(
+        jnp.asarray(metrics["energy"]), jnp.asarray(metrics["tops_w"]),
+        jnp.asarray(metrics["latency"]), jnp.asarray(metrics["area"]),
+        jnp.asarray(e_homo, jnp.float64), jnp.asarray(lo, jnp.float64),
+        jnp.asarray(hi, jnp.float64), jnp.asarray(alpha, jnp.float64)))
+
+
+# =============================================================================
+# the jitted generation kernel
+# =============================================================================
+
+@functools.lru_cache(maxsize=32)
+def _genetics_kernel(population: int, tournament: int, n_elite: int,
+                     crossover_rate: float, mutation_rate: float):
+    """One GA generation as a single jitted dispatch:
+    ``(pop, fit, key) -> (children, canonical(children))``.
+
+    Mirrors the host loop's operator semantics — elites pass through
+    unchanged, each non-elite slot pair comes from two size-K
+    tournaments, uniform crossover swaps genes with p=0.5 at
+    ``crossover_rate``, and mutated children redraw Poisson-k genes
+    uniformly under ``genome_bounds`` (k truncated at MUT_GENES_MAX on
+    device) — over a different (jax.random) stream.
+    """
+    bounds = jnp.asarray(genome_bounds(), jnp.int32)
+    L = GENOME_LEN
+    n_pairs = max(-(-(population - n_elite) // 2), 0)
+    n_children = n_pairs * 2
+
+    def gen(pop, fit, key):
+        pop = pop.astype(jnp.int32)
+        k_t, k_cx, k_cxm, k_mut, k_mk, k_mg, k_mv = jax.random.split(key, 7)
+        # ---- elitism -----------------------------------------------------
+        elite_idx = jnp.argsort(-fit)[:n_elite]
+        elites = pop[elite_idx]
+        # ---- tournament selection (all draws in one dispatch) ------------
+        idx = jax.random.randint(k_t, (n_children, tournament), 0, population)
+        winners = idx[jnp.arange(n_children), jnp.argmax(fit[idx], axis=1)]
+        pa = pop[winners[0::2]]
+        pb = pop[winners[1::2]]
+        # ---- uniform crossover ------------------------------------------
+        do_cx = jax.random.uniform(k_cx, (n_pairs,)) < crossover_rate
+        swap = do_cx[:, None] & (jax.random.uniform(k_cxm, (n_pairs, L)) < 0.5)
+        ca = jnp.where(swap, pb, pa)
+        cb = jnp.where(swap, pa, pb)
+        children = jnp.stack([ca, cb], axis=1).reshape(n_children, L)
+        # ---- Poisson-k gene mutation ------------------------------------
+        do_mut = jax.random.uniform(k_mut, (n_children,)) < mutation_rate
+        k_genes = jnp.clip(jax.random.poisson(k_mk, 2.0, (n_children,)),
+                           1, MUT_GENES_MAX)
+        genes = jax.random.randint(k_mg, (n_children, MUT_GENES_MAX), 0, L)
+        vals = jnp.floor(jax.random.uniform(k_mv, (n_children, MUT_GENES_MAX))
+                         * bounds[genes]).astype(jnp.int32)
+
+        def mutate(child, do, kk, gg, vv):
+            # sequential application: later draws overwrite earlier ones
+            # on duplicate gene indices, like the host fancy assignment
+            def body(j, ch):
+                return jnp.where(do & (j < kk), ch.at[gg[j]].set(vv[j]), ch)
+            return jax.lax.fori_loop(0, MUT_GENES_MAX, body, child)
+
+        children = jax.vmap(mutate)(children, do_mut, k_genes, genes, vals)
+        new_pop = jnp.concatenate([elites, children])[:population]
+        return new_pop, _canonical_device(new_pop)
+
+    return jax.jit(gen)
+
+
+# =============================================================================
+# the generation loop
+# =============================================================================
+
+def run_ga_device(sweep, bracket: float, cfg=None, seed: int = 0,
+                  calib: CalibrationTable = DEFAULT_CALIB,
+                  verbose: bool = False, engine: Optional[EvalEngine] = None,
+                  prefilter: bool = True):
+    """GA refinement at one area budget on the device generation loop.
+
+    Same contract as ``ga.run_ga`` (which delegates here by default):
+    seeded from the sweep's top-k at the bracket, returns a ``GAResult``
+    or None when the bracket has no homogeneous baseline.  Without an
+    explicit ``engine``, scoring runs the exact search backend — one
+    class-specialized fused map+execute dispatch per workload per
+    generation, memo hits (elites, duplicate children) and
+    bracket-prefiltered genomes skipping the scan.
+    """
+    from .ga import GAConfig, GAResult
+    cfg = cfg or GAConfig()
+    engine = (engine.check_workloads(sweep.workloads, calib)
+              if engine is not None
+              else EvalEngine(sweep.workloads, calib, backend="exact"))
+    rng = np.random.default_rng(seed + int(bracket))
+    base = sweep.homo_baseline()
+    if bracket not in base:
+        return None
+    e_homo = np.asarray(base[bracket], np.float64)
+    lo, hi = bracket_bounds(bracket)
+
+    # ---- seed population: identical to the host loop -----------------------
+    fit_sweep = sweep.fitness(cfg.alpha)
+    in_b = np.nonzero((sweep.bracket == bracket) & np.isfinite(fit_sweep))[0]
+    order = in_b[np.argsort(-fit_sweep[in_b])][:cfg.seed_top_k]
+    pop = sweep.genomes[order].copy()
+    while len(pop) < cfg.population:
+        fill = random_genomes(rng, cfg.population - len(pop),
+                              family="hetero_bls" if rng.random() < 0.5
+                              else None)
+        pop = np.concatenate([pop, fill])[:cfg.population]
+    pop = np.ascontiguousarray(pop, np.int32)
+
+    def keep(areas: np.ndarray) -> np.ndarray:
+        # vectorized `area_bracket(a) == bracket` (bracket_bounds parity
+        # is pinned by tests/test_ga_device.py)
+        return (areas > lo) & (areas <= hi)
+
+    def evaluate(genomes: np.ndarray, canonical=None):
+        m = engine.evaluate(genomes, keep=keep if prefilter else None,
+                            canonical=canonical)
+        m.pop("meta", None)  # best_metrics holds per-genome arrays only
+        fit = fitness_device(m, e_homo, bracket, cfg.alpha)
+        return fit, m
+
+    # per-generation miss counts sweep the whole bucket range: register
+    # the shapes up front so every dispatch is minimally padded
+    engine.reserve_shapes(cfg.population)
+    fit, metrics = evaluate(pop)
+    best_i = int(np.argmax(fit))
+    best = (fit[best_i], pop[best_i].copy(),
+            {k: v[best_i] for k, v in metrics.items()})
+    history = [float(best[0])]
+    evaluated = len(pop)
+    stall = 0
+
+    n_elite = max(int(cfg.elitism * cfg.population), 1)
+    gen_fn = _genetics_kernel(cfg.population, cfg.tournament, n_elite,
+                              cfg.crossover_rate, cfg.mutation_rate)
+    key = jax.random.PRNGKey(seed + int(bracket))
+    sharding = None
+    if engine._sharding is not None \
+            and cfg.population % engine._sharding.mesh.size == 0:
+        from ...launch.mesh import population_sharding
+        sharding = population_sharding()
+    pop_dev = jnp.asarray(pop, jnp.int32)
+    if sharding is not None:
+        pop_dev = jax.device_put(pop_dev, sharding)
+
+    for gen in range(cfg.generations):
+        key, sub = jax.random.split(key)
+        pop_dev, canon_dev = gen_fn(pop_dev, jnp.asarray(fit), sub)
+        # ONE host transfer per generation: the (P, GENOME_LEN) children
+        # + their canonical forms (the engine's memo keys)
+        pop = np.asarray(pop_dev)
+        canon = np.asarray(canon_dev)
+        fit, metrics = evaluate(pop, canonical=canon)
+        evaluated += len(pop)
+        gi = int(np.argmax(fit))
+        if fit[gi] > best[0]:
+            best = (fit[gi], pop[gi].copy(),
+                    {k: v[gi] for k, v in metrics.items()})
+            stall = 0
+        else:
+            stall += 1
+        history.append(float(best[0]))
+        if verbose:
+            print(f"[ga-dev {bracket:.0f}mm2] gen {gen}: best={best[0]:+.4f} "
+                  f"(stall {stall})")
+        if stall >= cfg.early_stop:
+            break
+
+    sav = (e_homo - best[2]["energy"]) / np.maximum(e_homo, 1e-30)
+    return GAResult(bracket=bracket, best_genome=best[1],
+                    best_fitness=float(best[0]), best_savings_per_wl=sav,
+                    best_metrics=best[2], history=history, evaluated=evaluated)

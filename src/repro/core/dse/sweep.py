@@ -128,7 +128,8 @@ def run_sweep(workloads: Sequence[str], samples_per_stratum: int = 64,
               seed: int = 0, calib: CalibrationTable = DEFAULT_CALIB,
               brackets: Sequence[float] = AREA_BRACKETS,
               verbose: bool = False,
-              engine: Optional[EvalEngine] = None) -> SweepResult:
+              engine: Optional[EvalEngine] = None,
+              exact: bool = False) -> SweepResult:
     """One seed of the stratified sweep (strata = bracket x family).
 
     Pass a shared ``engine`` to reuse its caches across seeds and into
@@ -137,11 +138,20 @@ def run_sweep(workloads: Sequence[str], samples_per_stratum: int = 64,
     ``EvalEngine(..., mode="throughput")`` the latency/energy matrices
     hold the pipelined steady state (II, energy per inference), so the
     same sweep ranks serving-deployment designs — see
-    ``objective.serving_fitness`` and ``examples/serve_lm.py --dse``."""
+    ``objective.serving_fitness`` and ``examples/serve_lm.py --dse``.
+
+    ``exact=True`` (only meaningful without a shared ``engine``) scores
+    the sweep through the exact search backend
+    (``EvalEngine(backend="exact")``): every metric matrix — and hence
+    the homogeneous baselines the GA's Eq. 8 fitness is measured
+    against — holds exact fused-mapper numbers instead of the in-scan
+    approximate mapping's."""
     from .encoding import sample_in_bracket
 
     engine = (engine.check_workloads(workloads, calib)
-              if engine is not None else EvalEngine(workloads, calib))
+              if engine is not None
+              else EvalEngine(workloads, calib,
+                              backend="exact" if exact else "scan"))
     rng = np.random.default_rng(seed)
 
     def area_fn(genome):

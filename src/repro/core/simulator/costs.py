@@ -617,6 +617,168 @@ class CostModel:
         return self.execute_dynamic(self.execute_static(T, op, cache_frac),
                                     T, bw_gbps, dram_rd, dram_wr)
 
+    # ----------------------------------------------- class-specialized halves
+    # ``op_cls`` is a *workload* property — identical for every candidate
+    # chip in a batched evaluation.  The restrictions below are
+    # :meth:`execute_static` / :meth:`roofline_cycles` / :meth:`supports`
+    # with the class selects resolved at the call site: when the caller
+    # already knows the class (the fused search kernel branches on the
+    # op-table value with ``lax.cond``, so only the taken class runs), the
+    # other classes' sub-models are never evaluated.  Each restriction is
+    # term-for-term the corresponding ``_sel`` branch of the full method,
+    # so the bits are identical — pinned by the batched-mapper parity
+    # suite and the engine's exact-search/rescore property tests.
+
+    def _stream_static(self, T, op):
+        """Streaming (non-MAC-array) SRAM terms shared by all classes."""
+        xp = self.xp
+        stream_b = op["bytes_in"] + op["bytes_out"]
+        e_sram_stream = stream_b * self.c.e_sram_pj_per_byte
+        c_mem_stream = xp.ceil(stream_b / T["sram_bpc"])
+        return e_sram_stream, c_mem_stream
+
+    def _bw_cycles(self, T, op, bw_gbps):
+        xp = self.xp
+        total_b = op["bytes_in"] + op["bytes_w"] + op["bytes_out"]
+        bpc = bw_gbps * 1e9 / T["clock_hz"]
+        return total_b / xp.maximum(bpc, 1e-9)
+
+    def execute_static_mac(self, T, op, cache_frac=CACHE_FRAC):
+        """:meth:`execute_static` restricted to ``OpClass.MAC`` operators
+        (on-array execution or DSP lowering; no SFU terms evaluated)."""
+        xp = self.xp
+        c = self.c
+        prec_idx = self._i32(op["precision"])
+        bpe = self.bpe_t[prec_idx]
+        eta = self.eta(T["sparsity"], op["act_sparsity"], op["w_sparsity"])
+        m_t, k_t, n_t = self.mac_tiling(T, op["m"], op["k"], op["n"], bpe,
+                                        cache_frac)
+        c_mac = self.mac_cycles(T, op["m"], op["k"], op["n"], eta,
+                                m_t, k_t, n_t)
+        e_mac_path = (op["macs"] / eta) * self.mac_energy_pj(T, prec_idx)
+        in_b, w_b, out_b, tk = self.sram_traffic(
+            T, op["m"], op["k"], op["n"], bpe, m_t, k_t, n_t)
+        e_sram_mac = (in_b + w_b + out_b) * c.e_sram_pj_per_byte
+        irf_w = xp.ceil(in_b / 32.0) * 32.0
+        irf_r = in_b * (1.0 - xp.minimum(op["act_sparsity"], 0.95))
+        e_irf = (irf_w + irf_r) * c.e_irf_pj_per_byte
+        orf_b = op["m"] * op["n"] * _ACC * (2.0 * tk - 1.0)
+        e_orf = orf_b * c.e_orf_pj_per_byte
+        c_mem_mac = xp.ceil((in_b + w_b + out_b) / T["sram_bpc"])
+        e_sram_stream, c_mem_stream = self._stream_static(T, op)
+        lanes = xp.maximum(T["dsp_lanes"], 1.0)
+        c_mac_on_dsp = xp.ceil(2.0 * op["macs"] / lanes)
+        e_mac_on_dsp = 2.0 * op["macs"] * c.e_dsp_pj_per_lane_op
+        on_mac = (T["num_macs"] > 0) \
+            & self.supports_precision(T, op["precision"])
+        zero = xp.zeros_like(c_mac)
+        return {
+            "c_cmp": xp.where(on_mac, c_mac, c_mac_on_dsp),
+            "c_mem": xp.where(on_mac, c_mem_mac, c_mem_stream),
+            "e_compute": xp.where(on_mac, e_mac_path, 0.0),
+            "e_dsp": xp.where(on_mac, 0.0, e_mac_on_dsp),
+            "e_special": zero,
+            "e_sram": xp.where(on_mac, e_sram_mac, e_sram_stream),
+            "e_irf": xp.where(on_mac, e_irf, 0.0),
+            "e_orf": xp.where(on_mac, e_orf, 0.0),
+            "e_static": xp.where(
+                on_mac, e_mac_path + e_sram_mac + e_irf + e_orf,
+                e_mac_on_dsp + e_sram_stream),
+            "path": xp.where(on_mac, zero, 1.0 + zero),
+        }
+
+    def execute_static_dsp(self, T, op):
+        """:meth:`execute_static` restricted to ``OpClass.DSP`` operators
+        (the cheap vector path: no MAC tiling, no SFU lowering)."""
+        xp = self.xp
+        c_dsp, e_dsp = self.dsp_cycles_energy(T, op["op_type"], op["elems"],
+                                              op["seq_len"])
+        e_sram_stream, c_mem_stream = self._stream_static(T, op)
+        zero = xp.zeros_like(c_dsp)
+        return {
+            "c_cmp": c_dsp, "c_mem": c_mem_stream + zero,
+            "e_compute": zero, "e_dsp": e_dsp, "e_special": zero,
+            "e_sram": e_sram_stream + zero, "e_irf": zero, "e_orf": zero,
+            "e_static": e_dsp + e_sram_stream,
+            "path": 1.0 + zero,
+        }
+
+    def execute_static_special(self, T, op):
+        """:meth:`execute_static` restricted to ``OpClass.SPECIAL``
+        operators (native SFU or §2.5 lowering; no MAC tiling pass)."""
+        xp = self.xp
+        prec_idx = self._i32(op["precision"])
+        c_sfu, e_sfu = self.sfu_cycles_energy(
+            T, op["op_type"], op["elems"], op["fft_n"], op["poly_degree"],
+            op["snn_timesteps"])
+        c_low, e_low, extra_sram_low, fft_on_mac = self.lowered_cycles_energy(
+            T, op, prec_idx)
+        native = self.sfu_native(T, op)
+        e_sram_stream, c_mem_stream = self._stream_static(T, op)
+        c_spec = xp.where(native, c_sfu, c_low)
+        e_spec = xp.where(native, e_sfu, e_low)
+        e_spec_sram = e_sram_stream + xp.where(native, 0.0, extra_sram_low)
+        spec_lowered_mac = ~native & fft_on_mac
+        zero = xp.zeros_like(c_spec)
+        return {
+            "c_cmp": c_spec, "c_mem": c_mem_stream + zero,
+            "e_compute": xp.where(spec_lowered_mac, e_spec, 0.0),
+            "e_dsp": xp.where(native | fft_on_mac, 0.0, e_spec),
+            "e_special": xp.where(native, e_spec, 0.0),
+            "e_sram": e_spec_sram, "e_irf": zero, "e_orf": zero,
+            "e_static": e_spec + e_spec_sram,
+            "path": xp.where(spec_lowered_mac, zero,
+                             xp.where(native, 2.0 + zero, 1.0 + zero)),
+        }
+
+    def roofline_cycles_mac(self, T, op, bw_gbps):
+        """:meth:`roofline_cycles` restricted to ``OpClass.MAC``."""
+        xp = self.xp
+        eta = self.eta(T["sparsity"], op["act_sparsity"], op["w_sparsity"])
+        c_mac = xp.where(
+            (T["num_macs"] > 0) & self.supports_precision(T, op["precision"]),
+            op["macs"] / xp.maximum(T["num_macs"] * eta, 1e-9),
+            xp.ceil(2.0 * op["macs"] / xp.maximum(T["dsp_lanes"], 1.0)))
+        return xp.maximum(c_mac, self._bw_cycles(T, op, bw_gbps))
+
+    def roofline_cycles_dsp(self, T, op, bw_gbps):
+        """:meth:`roofline_cycles` restricted to ``OpClass.DSP``."""
+        xp = self.xp
+        c_dsp, _ = self.dsp_cycles_energy(T, op["op_type"], op["elems"],
+                                          op["seq_len"])
+        return xp.maximum(c_dsp, self._bw_cycles(T, op, bw_gbps))
+
+    def roofline_cycles_special(self, T, op, bw_gbps):
+        """:meth:`roofline_cycles` restricted to ``OpClass.SPECIAL``."""
+        xp = self.xp
+        c_sfu_nat, _ = self.sfu_cycles_energy(
+            T, op["op_type"], op["elems"], op["fft_n"], op["poly_degree"],
+            op["snn_timesteps"])
+        prec_idx = self._i32(op["precision"])
+        c_low, _, _, _ = self.lowered_cycles_energy(T, op, prec_idx)
+        c_spec = xp.where(self.sfu_native(T, op), c_sfu_nat, c_low)
+        return xp.maximum(c_spec, self._bw_cycles(T, op, bw_gbps))
+
+    def supports_mac(self, T, op):
+        """:meth:`supports` restricted to ``OpClass.MAC``."""
+        prec_ok = self.supports_precision(T, op["precision"])
+        has_dsp = T["dsp_count"] > 0
+        return (T["exists"] > 0) & (((T["num_macs"] > 0) & prec_ok) | has_dsp)
+
+    def supports_dsp(self, T, op):
+        """:meth:`supports` restricted to ``OpClass.DSP``."""
+        return (T["exists"] > 0) & (T["dsp_count"] > 0)
+
+    def supports_special(self, T, op):
+        """:meth:`supports` restricted to ``OpClass.SPECIAL``."""
+        prec_ok = self.supports_precision(T, op["precision"])
+        has_dsp = T["dsp_count"] > 0
+        spec_ok = self.sfu_native(T, op) \
+            | ((op["op_type"] == int(OpType.FFT)) & (T["num_macs"] > 0)
+               & prec_ok) \
+            | has_dsp
+        return (T["exists"] > 0) & spec_ok
+
 
 @functools.lru_cache(maxsize=32)
 def _cached_model(calib: CalibrationTable, backend: str) -> CostModel:

@@ -17,7 +17,7 @@ from __future__ import annotations
 import jax
 
 __all__ = ["make_production_mesh", "make_mesh_for_devices",
-           "mesh_axis_kwargs", "candidate_sharding"]
+           "mesh_axis_kwargs", "candidate_sharding", "population_sharding"]
 
 
 def mesh_axis_kwargs(n_axes: int) -> dict:
@@ -46,6 +46,18 @@ def candidate_sharding():
                          **mesh_axis_kwargs(1))
     return jax.sharding.NamedSharding(
         mesh, jax.sharding.PartitionSpec("candidates"))
+
+
+def population_sharding():
+    """The GA generation loop's sharding: the (P, GENOME_LEN) population
+    and its per-generation genetics dispatch
+    (``core.dse.ga_device``) shard over the same ``"candidates"`` axis
+    the evaluation batches use, so one mesh covers the whole
+    search loop — selection/crossover/mutation on device AND the fused
+    exact scoring dispatches.  Same divisibility rule: the population
+    must be a mesh-size multiple or the device loop falls back to a
+    single-device placement (it checks before placing)."""
+    return candidate_sharding()
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -191,6 +191,70 @@ def test_pad_size_rounds_to_mesh_multiple_after_bucket():
     assert plain._pad_size(17) == 20
 
 
+def test_memo_lru_eviction_bounded_and_correct():
+    """The canonical-genome memo is a bounded LRU: size never exceeds
+    ``memo_max``, the oldest (least recently touched) entries are evicted
+    first, and evicted genomes re-simulate to identical rows."""
+    rng = np.random.default_rng(8)
+    g = random_genomes(rng, 12)
+    eng = EvalEngine(["kan"], memo_max=8, batch=4)
+    assert eng.memo_max == 8
+    first = eng.evaluate(g)
+    assert len(eng._memo) <= 8
+    # the first rows were evicted -> re-scoring them is a miss, not a hit
+    misses_before = eng.stats.misses
+    again = eng.evaluate(g[:4])
+    assert eng.stats.misses > misses_before
+    for k in ("latency", "energy", "tops_w", "area"):
+        assert np.array_equal(first[k][:4], again[k]), k
+    # hits refresh recency: a touched entry survives newer insertions
+    eng2 = EvalEngine(["kan"], memo_max=8, batch=4)
+    eng2.evaluate(g[:8])
+    keep_key = b"latency:" + eng2._key(canonical_genomes(g[:1])[0])
+    eng2.evaluate(g[:1])              # touch -> most recent
+    eng2.evaluate(g[8:12])            # insert 4 more, evicting the LRU end
+    assert keep_key in eng2._memo
+    assert len(eng2._memo) <= 8
+    # memo_limit stays accepted as the pre-PR-5 alias
+    assert EvalEngine(["kan"], memo_limit=9, batch=4).memo_max == 9
+
+
+def test_exact_backend_evaluate_matches_rescore():
+    """backend='exact' (the fused class-specialized search kernel) scores
+    evaluate() bitwise identically to the exact rescore path, reports
+    itself in meta, and memoizes like any other backend."""
+    g = random_genomes(np.random.default_rng(9), 10)
+    eng = EvalEngine(WLS, backend="exact")
+    out = eng.evaluate(g)
+    assert out["meta"]["backend"] == "exact"
+    ref = EvalEngine(WLS).rescore(g)
+    for k in ("latency", "energy", "tops_w", "area"):
+        assert np.array_equal(out[k], ref[k]), k
+    again = eng.evaluate(g)
+    assert again["meta"]["hit_rate"] == 1.0
+    for k in ("latency", "energy", "tops_w", "area"):
+        assert np.array_equal(out[k], again[k]), k
+    # throughput mode rides the same scan
+    tp = eng.evaluate(g, mode="throughput")
+    tp_ref = EvalEngine(WLS).rescore(g, mode="throughput")
+    for k in ("latency", "energy", "tops_w", "area"):
+        assert np.array_equal(tp[k], tp_ref[k]), k
+    # the fused search kernel rejects the python per-candidate mapper
+    with pytest.raises(ValueError):
+        EvalEngine(WLS, backend="exact", exact_mapper="python")
+
+
+def test_evaluate_accepts_precomputed_canonical():
+    g = random_genomes(np.random.default_rng(10), 6)
+    eng = EvalEngine(["kan"])
+    a = eng.evaluate(g, canonical=canonical_genomes(g))
+    b = EvalEngine(["kan"]).evaluate(g)
+    for k in ("latency", "energy", "tops_w", "area"):
+        assert np.array_equal(a[k], b[k]), k
+    # memo keys line up: the same genomes are now all hits
+    assert eng.evaluate(g)["meta"]["hit_rate"] == 1.0
+
+
 def test_rescore_batched_mapper_matches_python_mapper():
     """The compile-free exact path (default) scores bitwise identically
     to the per-candidate map_graph + lower_plan pipeline."""
