@@ -1,14 +1,14 @@
 """Perf-trajectory comparison: fresh smoke numbers vs the committed
 baseline.
 
-Loads the just-written ``BENCH_PR5_smoke.json`` (produced by
-``python -m benchmarks.perf_micro --smoke``; falls back to the legacy
-``BENCH_PR3_smoke.json``) and the committed ``BENCH_PR5.json``
-trajectory file (falling back to the PR-4 ``BENCH_PR3.json`` for
-benchmarks recorded there — e.g. on the first run after a trajectory
-file rename), and emits a markdown table of per-benchmark speedups with
-the delta against the baseline's recorded speedup.  Benchmarks new in
-the fresh file (``run_ga_exact_speedup``) show a baseline of "—" until
+Scans the repo root for every ``BENCH_PR<N>.json`` trajectory file
+(committed full runs) and ``BENCH_PR<N>_smoke.json`` (just written by
+``python -m benchmarks.perf_micro --smoke`` / ``--service``), merges
+each side newest-entry-per-benchmark — a benchmark recorded by several
+PRs is taken from the highest-numbered file, while benchmarks that only
+an older PR carries survive the merge — and emits a markdown table of
+per-benchmark speedups with the delta against the baseline's recorded
+speedup.  Benchmarks new in the fresh file show a baseline of "—" until
 a full run commits them.  In CI the table is appended to
 ``$GITHUB_STEP_SUMMARY`` so the per-PR perf history is visible on the
 workflow run page; locally it prints to stdout.
@@ -24,13 +24,14 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import sys
 
 # not benchmarks.common's REPO_ROOT: importing common would pull in jax
 # (and mutate its config) just to diff two JSON files
 REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
 
-__all__ = ["compare", "render_markdown"]
+__all__ = ["compare", "render_markdown", "merged_trajectory"]
 
 
 def _load(filename: str):
@@ -39,6 +40,27 @@ def _load(filename: str):
         return None
     with open(path) as f:
         return json.load(f)
+
+
+def merged_trajectory(smoke: bool):
+    """Merge every ``BENCH_PR<N>[_smoke].json`` in the repo root, newest
+    entry winning per benchmark key.  Returns None when no file matches."""
+    suffix = "_smoke" if smoke else ""
+    pat = re.compile(rf"^BENCH_PR(\d+){suffix}\.json$")
+    hits = []
+    for name in os.listdir(REPO_ROOT):
+        m = pat.match(name)
+        if m:
+            hits.append((int(m.group(1)), name))
+    if not hits:
+        return None
+    merged: dict = {"benchmarks": {}}
+    for _, name in sorted(hits):  # ascending PR number: newest overwrites
+        data = _load(name) or {}
+        merged.update({k: v for k, v in data.items() if k != "benchmarks"})
+        merged["benchmarks"].update(data.get("benchmarks", {}))
+    merged["files"] = [name for _, name in sorted(hits)]
+    return merged
 
 
 def compare(fresh: dict, baseline: dict) -> list:
@@ -61,10 +83,10 @@ def render_markdown(rows: list, fresh: dict, baseline: dict) -> str:
         return f"{v:.2f}{suffix}" if v is not None else "—"
 
     lines = [
-        "## Perf trajectory: smoke run vs committed BENCH_PR5/PR3 baseline",
+        "## Perf trajectory: smoke run vs committed BENCH_PR* baseline",
         "",
-        f"fresh: smoke={fresh.get('smoke')} · "
-        f"baseline: pr={baseline.get('pr')} smoke={baseline.get('smoke')}",
+        f"fresh: {', '.join(fresh.get('files', []))} · "
+        f"baseline: {', '.join(baseline.get('files', []))}",
         "",
         "| benchmark | fresh speedup | committed speedup | delta |",
         "|---|---|---|---|",
@@ -79,40 +101,17 @@ def render_markdown(rows: list, fresh: dict, baseline: dict) -> str:
     return "\n".join(lines) + "\n"
 
 
-def _load_first(*filenames):
-    for f in filenames:
-        data = _load(f)
-        if data is not None:
-            return data
-    return None
-
-
-def _merged_baseline():
-    """Committed baseline: BENCH_PR5.json, with BENCH_PR3.json filling
-    in benchmarks the newer file doesn't carry (rename transition)."""
-    new = _load("BENCH_PR5.json")
-    old = _load("BENCH_PR3.json")
-    if new is None:
-        return old
-    if old is not None:
-        merged = dict(old.get("benchmarks", {}))
-        merged.update(new.get("benchmarks", {}))
-        new = dict(new)
-        new["benchmarks"] = merged
-    return new
-
-
 def main() -> int:
-    fresh = _load_first("BENCH_PR5_smoke.json", "BENCH_PR3_smoke.json")
-    baseline = _merged_baseline()
+    fresh = merged_trajectory(smoke=True)
+    baseline = merged_trajectory(smoke=False)
     if fresh is None:
-        print("perf_compare: BENCH_PR5_smoke.json missing — run "
+        print("perf_compare: no BENCH_PR*_smoke.json — run "
               "`python -m benchmarks.perf_micro --smoke` first",
               file=sys.stderr)
         return 1
     if baseline is None:
-        print("perf_compare: no committed BENCH_PR5.json / BENCH_PR3.json "
-              "baseline", file=sys.stderr)
+        print("perf_compare: no committed BENCH_PR*.json baseline",
+              file=sys.stderr)
         return 1
     md = render_markdown(compare(fresh, baseline), fresh, baseline)
     summary = os.environ.get("GITHUB_STEP_SUMMARY")

@@ -25,16 +25,24 @@
   the SAME exact (fused-mapper) metrics through ``backend="batched"``
   — iso-fidelity, so the measured win is pure framework (ISSUE 5
   targets >= 5x; the approximate-scan search time is recorded alongside
-  for the fidelity-cost context).
+  for the fidelity-cost context);
+* cross-tenant coalescing through the DSE evaluation service
+  (``repro.serve.dse_service``): two concurrent GA tenants on one
+  shared exact engine + persistent store vs the same tenants run
+  sequentially on private local engines — wall clock, fused-dispatch
+  reduction, and the warm persistent-store hit rate, with bitwise
+  parity asserted (PR 6; ``python -m benchmarks.perf_micro --service``
+  runs just this one and writes ``BENCH_PR6.json``).
 
 Besides the per-run ``results/bench/perf_micro.json`` payload, ``run``
-writes the machine-readable cross-PR trajectory file ``BENCH_PR5.json``
-at the repo root (superseding ``BENCH_PR3.json``, which stays committed
-as the PR-4 baseline): per-benchmark median seconds + speedup vs
-baseline.  ``python -m benchmarks.perf_micro --smoke`` runs
-small-population exact-path + exact-GA checks for CI (exit 1 when the
-exact path drops below its 5x floor or the exact GA below its fail-soft
-3x floor — the perf-smoke job is non-blocking, so this fails soft).
+writes the machine-readable cross-PR trajectory files ``BENCH_PR5.json``
+and ``BENCH_PR6.json`` at the repo root (``perf_compare`` merges every
+``BENCH_PR*.json`` newest-entry-per-benchmark): per-benchmark median
+seconds + speedup vs baseline.  ``python -m benchmarks.perf_micro
+--smoke`` runs small-population exact-path + exact-GA + service checks
+for CI (exit 1 when the exact path drops below its 5x floor or the
+exact GA below its fail-soft 3x floor — the perf-smoke job is
+non-blocking, so this fails soft).
 """
 from __future__ import annotations
 
@@ -424,6 +432,118 @@ def run_throughput_exact(population: int = 64, repeats: int = 3,
     }
 
 
+def run_service_coalescing(population: int = 32, generations: int = 6,
+                           workloads=("kan", "resnet50_int8"),
+                           seeds=(0, 1), max_wait_ms: float = 100.0,
+                           max_batch: int = 256) -> dict:
+    """Cross-tenant coalescing through the DSE evaluation service vs the
+    same tenants run back-to-back on private local exact engines.
+
+    Baseline: each seed's GA refinement on its own fresh
+    ``EvalEngine(backend="exact")``, sequential — wall times and engine
+    dispatch counts summed.  Service side: one shared exact engine behind
+    a ``DSEService`` (memory-LRU over a persistent sqlite store), the
+    same seeds as concurrent client threads.  Identical seeds share their
+    sweep-derived seed populations and the elites they converge to, so
+    the continuous-batching loop both coalesces the tenants into fused
+    micro-batches and serves repeats from the store — the win is
+    dispatch elimination, measured alongside the wall-clock ratio.  A
+    warm rerun against the same sqlite file reports the persistent-store
+    hit rate a fresh service starts with.  Results are checked bitwise
+    against the local baseline (the fused metrics are batch-composition
+    independent, so coalescing is fidelity-free)."""
+    import os
+    import tempfile
+    import threading
+
+    from repro.core.dse.store import (MemoryLRUStore, SqliteStore,
+                                      TieredStore)
+    from repro.serve.dse_service import DSEClient, DSEService
+
+    workloads = list(workloads)
+    bracket = 200.0
+    cfg = GAConfig(population=population, generations=generations,
+                   seed_top_k=min(16, population), early_stop=10_000)
+    sweep = run_sweep(workloads, samples_per_stratum=4, seed=0,
+                      brackets=(100.0, bracket),
+                      engine=EvalEngine(workloads, backend="exact"))
+
+    # ---- baseline: sequential tenants on private local engines ----------
+    local, local_wall, local_dispatches = {}, 0.0, 0
+    for s in seeds:
+        eng = EvalEngine(workloads, backend="exact")
+        t0 = time.perf_counter()
+        local[s] = run_ga(sweep, bracket, cfg, seed=s, engine=eng)
+        local_wall += time.perf_counter() - t0
+        local_dispatches += eng.stats.dispatches
+
+    # ---- service: concurrent tenants on one shared engine + store -------
+    db = os.path.join(tempfile.mkdtemp(prefix="mosaic_bench_store_"),
+                      "results.sqlite")
+
+    def serve(run_seeds):
+        eng = EvalEngine(workloads, backend="exact",
+                         store=TieredStore(MemoryLRUStore(),
+                                           SqliteStore(db)))
+        svc = DSEService(eng, max_batch=max_batch, max_wait_ms=max_wait_ms)
+        svc.start()
+        try:
+            out, errs = {}, []
+
+            def tenant(s):
+                try:
+                    out[s] = run_ga(sweep, bracket, cfg, seed=s,
+                                    engine=DSEClient(service=svc))
+                except Exception as e:  # pragma: no cover - surfaced below
+                    errs.append(e)
+
+            threads = [threading.Thread(target=tenant, args=(s,))
+                       for s in run_seeds]
+            t0 = time.perf_counter()
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            wall = time.perf_counter() - t0
+            if errs:
+                raise errs[0]
+            return out, wall, svc.stats.snapshot(max_batch)
+        finally:
+            svc.stop()
+
+    served, service_wall, st = serve(seeds)
+    parity = all(
+        served[s].best_fitness == local[s].best_fitness
+        and np.array_equal(served[s].best_genome, local[s].best_genome)
+        for s in seeds)
+
+    # warm rerun: a fresh service over the same sqlite file should answer
+    # mostly from the persistent store
+    warm, _, warm_st = serve(seeds[:1])
+    warm_rate = warm_st["store_hits"] / max(warm_st["request_genomes"], 1)
+    parity &= warm[seeds[0]].best_fitness == local[seeds[0]].best_fitness
+
+    return {
+        "population": population,
+        "generations": generations,
+        "workloads": workloads,
+        "tenants": len(seeds),
+        "local_wall_s": local_wall,
+        "service_wall_s": service_wall,
+        "local_dispatches": local_dispatches,
+        "service_dispatches": st["engine_dispatches"],
+        "dispatch_reduction": 1.0 - st["engine_dispatches"]
+        / max(local_dispatches, 1),
+        "batches": st["batches"],
+        "coalesced_batches": st["coalesced_batches"],
+        "batch_occupancy": st["batch_occupancy"],
+        "mean_queue_ms": st["mean_queue_ms"],
+        "store_hit_rate": st["store_hits"] / max(st["request_genomes"], 1),
+        "warm_store_hit_rate": warm_rate,
+        "bitwise_parity": bool(parity),
+    }
+
+
 def _bench_entry(median: float, baseline_median: float, **extra) -> dict:
     """One trajectory-file benchmark record: median seconds + speedup."""
     return {"median_s": median, "baseline_median_s": baseline_median,
@@ -492,6 +612,39 @@ def write_bench_pr5(payload: dict, smoke: bool) -> str:
         "BENCH_PR5_smoke.json" if smoke else "BENCH_PR5.json", bench)
 
 
+def write_bench_pr6(payload: dict, smoke: bool) -> str:
+    """Distill the service benchmark into the PR-6 trajectory file
+    ``BENCH_PR6.json`` at the repo root (``perf_compare`` merges every
+    ``BENCH_PR*.json`` newest-entry-per-benchmark, so the PR-5/PR-3
+    files keep carrying the benchmarks this one doesn't).  Smoke runs
+    write the gitignored ``BENCH_PR6_smoke.json`` instead."""
+    sc = payload["service_coalescing"]
+    bench = {
+        "pr": 6,
+        "smoke": smoke,
+        "benchmarks": {
+            # baseline = the same tenants run sequentially on private
+            # local exact engines; the speedup is wall-clock, the
+            # coalescing/dedup win shows up as the dispatch reduction
+            "run_service_coalescing": _bench_entry(
+                sc["service_wall_s"], sc["local_wall_s"],
+                population=sc["population"],
+                generations=sc["generations"],
+                workloads=sc["workloads"],
+                tenants=sc["tenants"],
+                local_dispatches=sc["local_dispatches"],
+                service_dispatches=sc["service_dispatches"],
+                dispatch_reduction=sc["dispatch_reduction"],
+                coalesced_batches=sc["coalesced_batches"],
+                batch_occupancy=sc["batch_occupancy"],
+                warm_store_hit_rate=sc["warm_store_hit_rate"],
+                bitwise_parity=sc["bitwise_parity"]),
+        },
+    }
+    return save_repo_json(
+        "BENCH_PR6_smoke.json" if smoke else "BENCH_PR6.json", bench)
+
+
 def run(smoke: bool = False) -> dict:
     """Full microbenchmark suite; ``smoke=True`` runs small-population
     exact-path + exact-GA checks (the non-blocking CI perf-smoke job:
@@ -510,8 +663,11 @@ def run(smoke: bool = False) -> dict:
             "ga_exact": run_ga_exact_speedup(
                 repeats=3, population=32, generations=8,
                 workloads=["kan", "resnet50_int8"]),
+            "service_coalescing": run_service_coalescing(
+                population=16, generations=4),
         }
         write_bench_pr5(payload, smoke=True)
+        write_bench_pr6(payload, smoke=True)
         save_json("perf_micro_smoke", payload)
         return payload
 
@@ -547,9 +703,11 @@ def run(smoke: bool = False) -> dict:
         "population_sim": run_population_sim_speedup(),
         "exact_path": run_exact_path_speedup(),
         "exact_path_throughput": run_throughput_exact(),
+        "service_coalescing": run_service_coalescing(),
     }
     save_json("perf_micro", payload)
     write_bench_pr5(payload, smoke=False)
+    write_bench_pr6(payload, smoke=False)
     return payload
 
 
@@ -580,6 +738,16 @@ def _csv_rows(p: dict, smoke: bool = False) -> list:
             f"vs_pr4_approx_search={gx['speedup_vs_scan_search']:.1f}x "
             f"pop={gx['ga_population']} "
             f"target_5x={'met' if gx['meets_target'] else 'MISSED'}"))
+    if "service_coalescing" in p:
+        sc = p["service_coalescing"]
+        rows.append(csv_row(
+            "perf_service_coalescing", sc["service_wall_s"],
+            f"vs_sequential_local="
+            f"{sc['local_wall_s'] / max(sc['service_wall_s'], 1e-12):.2f}x "
+            f"dispatches={sc['service_dispatches']}/"
+            f"{sc['local_dispatches']} "
+            f"warm_hit_rate={sc['warm_store_hit_rate']:.0%} "
+            f"parity={'ok' if sc['bitwise_parity'] else 'BROKEN'}"))
     if smoke:
         return rows
     ga = p["ga_engine"]
@@ -607,7 +775,25 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="small-population exact-path check only; exit 1 "
                          "when the speedup drops below 5x (CI fails soft)")
+    ap.add_argument("--service", action="store_true",
+                    help="run only the service-coalescing benchmark and "
+                         "write BENCH_PR6.json (full-suite benchmarks stay "
+                         "carried by the earlier BENCH_PR*.json files)")
     args = ap.parse_args()
+    if args.service:
+        payload = {"service_coalescing": run_service_coalescing()}
+        write_bench_pr6(payload, smoke=False)
+        save_json("perf_service", payload)
+        sc = payload["service_coalescing"]
+        print(csv_row(
+            "perf_service_coalescing", sc["service_wall_s"],
+            f"vs_sequential_local="
+            f"{sc['local_wall_s'] / max(sc['service_wall_s'], 1e-12):.2f}x "
+            f"dispatches={sc['service_dispatches']}/"
+            f"{sc['local_dispatches']} "
+            f"warm_hit_rate={sc['warm_store_hit_rate']:.0%} "
+            f"parity={'ok' if sc['bitwise_parity'] else 'BROKEN'}"))
+        sys.exit(0 if sc["bitwise_parity"] else 1)
     payload = run(smoke=args.smoke)
     for line in _csv_rows(payload, smoke=args.smoke):
         print(line)

@@ -82,6 +82,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
+import threading
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -89,11 +91,13 @@ import numpy as np
 
 from ..arch import (KNOB_GRID, MAX_TILE_TYPES, MAX_TILES, prec_mask)
 from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
+from ..simulator.costs import COST_MODEL_VERSION
 from ..simulator.orchestrator import CACHE_FRAC, SCHEDULE_MODES, noc_hops
 from ..workloads import build
 from .batch_eval import (_CHIP_KEYS, _TILE_KEYS, batch_evaluate,
                          prepare_configs, prepare_workload)
 from .encoding import (FIELDS_PER_TILE, GENOME_LEN, _TILE_FIELDS, decode)
+from .store import MemoryLRUStore, ResultStore
 
 __all__ = ["EvalEngine", "EngineStats", "genomes_to_configs",
            "genome_areas", "canonical_genomes", "prepared_workload",
@@ -374,6 +378,9 @@ class EngineStats:
     misses: int = 0
     eval_seconds: float = 0.0
     workloads: int = 0
+    # fused miss-batch dispatches: one per simulated micro-batch (the unit
+    # the serving layer's cross-request coalescing reduces)
+    dispatches: int = 0
 
     def hit_rate(self) -> float:
         return self.hits / max(self.requests, 1)
@@ -413,7 +420,8 @@ class EvalEngine:
                  aggressive_int4: bool = False, enable_fusion: bool = True,
                  memo_max: int = 131_072, backend: str = "scan",
                  exact_mapper: str = "batched", mode: str = "latency",
-                 memo_limit: Optional[int] = None):
+                 memo_limit: Optional[int] = None,
+                 store: Optional[ResultStore] = None):
         if backend not in BACKENDS:
             raise ValueError(f"backend {backend!r} not in {BACKENDS}")
         if exact_mapper not in ("batched", "python"):
@@ -454,12 +462,47 @@ class EvalEngine:
                                  "memo_limit, not both")
             memo_max = memo_limit
         self.memo_max = max(memo_max, batch)
-        self._memo: Dict[bytes, Tuple[np.ndarray, np.ndarray,
-                                      np.ndarray]] = {}
+        # Caching policy lives behind the pluggable ResultStore interface
+        # (dse.store): the default is the historical in-process LRU; pass
+        # a TieredStore(MemoryLRUStore(), SqliteStore(path)) to accumulate
+        # exact metrics across processes/CI runs/users.  The store is
+        # bound to this engine's content context (workloads x calib x
+        # flags x backend fidelity x cost-model version), so persistent
+        # entries can never be served across incompatible engines.
+        self.store: ResultStore = \
+            store if store is not None else MemoryLRUStore(self.memo_max)
+        self.store.bind(self.context_key())
         self._sharding = None
         if shard:
             self._sharding = self._make_sharding()
         self._shapes: set = set()   # batch sizes this engine has emitted
+        self._shape_lock = threading.Lock()
+
+    def context_key(self) -> bytes:
+        """Digest of everything a memoized metric row depends on besides
+        the (canonical genome, mode) pair the short store key carries:
+        the workload list *and order* (metric columns follow it), the
+        calibration table, the precision/fusion compile flags, the
+        backend's fidelity class (the ``scan`` backend's approximate
+        in-scan mapping produces different numbers than the exact
+        family, which is bitwise-shared by exact/batched/oracle), and
+        the cost-model version.  Persistent stores fold this into their
+        content address, so results accumulated by one engine are served
+        to another exactly when every one of these matches."""
+        fidelity = "approx" if self.backend == "scan" else "exact"
+        text = repr((tuple(self.workloads), repr(self.calib),
+                     bool(self.aggressive_int4), bool(self.enable_fusion),
+                     fidelity, COST_MODEL_VERSION))
+        return hashlib.sha256(text.encode()).digest()
+
+    @property
+    def _memo(self) -> Dict[bytes, Tuple[np.ndarray, np.ndarray,
+                                         np.ndarray]]:
+        """Legacy view of the in-memory cache tier (PR 1-5 name): the
+        LRU-ordered dict of the store's front tier, or an unshared empty
+        dict when the configured store has no in-memory tier."""
+        d = self.store.lru_dict()
+        return d if d is not None else {}
 
     def _pad_size(self, n: int) -> int:
         """Batch padding: the jit bucket, rounded up — AFTER bucket
@@ -472,16 +515,20 @@ class EvalEngine:
         count (the shape set converges after a few generations; warmup()
         pre-populates it so padding is then always minimal).  Reused
         shapes are filtered to mesh-size multiples too, so a shape minted
-        before sharding context changed can never leak back in."""
+        before sharding context changed can never leak back in.  The
+        shape set is lock-guarded: reentrant ``score_batch`` callers
+        (the evaluation service's dispatch thread racing a local caller)
+        must not corrupt it."""
         pad = _bucket(n)
         ndev = self._sharding.mesh.size if self._sharding is not None else 1
         pad = ((pad + ndev - 1) // ndev) * ndev
-        reusable = [s for s in self._shapes
-                    if pad <= s <= pad * 3 // 2 and s % ndev == 0]
-        if reusable:
-            return min(reusable)
-        self._shapes.add(pad)
-        return pad
+        with self._shape_lock:
+            reusable = [s for s in self._shapes
+                        if pad <= s <= pad * 3 // 2 and s % ndev == 0]
+            if reusable:
+                return min(reusable)
+            self._shapes.add(pad)
+            return pad
 
     # ------------------------------------------------------------- sharding
     @staticmethod
@@ -543,6 +590,7 @@ class EvalEngine:
         the three metrics are the steady-state surface: II (s),
         per-inference energy (pJ), and TOPS/W at the steady-state rate."""
         mode = self.mode if mode is None else mode
+        self.stats.dispatches += 1
         if self.backend != "scan":
             return self._simulate_exact(genomes[:n],
                                         oracle=self.backend == "oracle",
@@ -695,6 +743,45 @@ class EvalEngine:
             tw[ok, j] = res[akey][:n][ok] / np.maximum(power, 1e-30)
         return lat, en, tw
 
+    # ----------------------------------------------------------- score_batch
+    def score_batch(self, genomes: np.ndarray,
+                    mode: Optional[str] = None) -> Dict[str, np.ndarray]:
+        """The reentrant engine core: canonical (or raw) genomes in,
+        exact-per-backend metrics out, one fused dispatch per padded
+        micro-batch — no cache interaction, no keep predicate, no
+        request/hit/miss accounting.  This is what the coalescing
+        evaluation service (``repro.serve.dse_service``) drives and what
+        ``evaluate()`` composes with the caching policy.
+
+        Pure up to process-global compile caches, the engine's emitted
+        shape set (lock-guarded), and the monotonic ``stats.dispatches``
+        telemetry counter; concurrent callers get independent, bitwise
+        batch-composition-independent results (pinned by
+        tests/test_engine.py / tests/test_service.py).
+
+        Returns ``latency``/``energy``/``tops_w`` (N, W) and ``area``
+        (N,) arrays (no ``meta``: nothing request-scoped happens here).
+        """
+        mode = self.mode if mode is None else mode
+        if mode not in SCHEDULE_MODES:
+            raise ValueError(f"mode {mode!r} not in {SCHEDULE_MODES}")
+        genomes = np.asarray(genomes, dtype=np.int64).reshape(-1, GENOME_LEN)
+        n = len(genomes)
+        cfgs = self._configs(genomes)
+        area = np.asarray(cfgs["chip"]["chip_area"], np.float64).copy()
+        lat = np.zeros((n, len(self.workloads)))
+        en = np.zeros_like(lat)
+        tw = np.zeros_like(lat)
+        for s in range(0, n, self.batch):
+            chunk = np.arange(s, min(s + self.batch, n))
+            pad = self._pad_size(len(chunk))
+            sel = np.concatenate(
+                [chunk, np.full(pad - len(chunk), chunk[0], np.int64)])
+            l, e, t = self._simulate(self._take(cfgs, sel), len(chunk),
+                                     genomes[sel], mode=mode)
+            lat[chunk], en[chunk], tw[chunk] = l, e, t
+        return {"latency": lat, "energy": en, "tops_w": tw, "area": area}
+
     # ------------------------------------------------------------- evaluate
     def evaluate(self, genomes: np.ndarray,
                  keep: Optional[Callable[[np.ndarray], np.ndarray]] = None,
@@ -747,10 +834,9 @@ class EvalEngine:
         dup_idx: List[int] = []
         seen_this_call: Dict[bytes, int] = {}
         for i, k in enumerate(keys):
-            row = self._memo.get(k) if self.memoize else None
+            row = self.store.get(k) if self.memoize else None
             if row is not None:
                 lat[i], en[i], tw[i] = row
-                self._memo[k] = self._memo.pop(k)  # refresh LRU recency
                 self.stats.hits += 1
             elif not keep_mask[i]:
                 lat[i] = np.inf
@@ -775,12 +861,10 @@ class EvalEngine:
             for r, i in enumerate(chunk):
                 lat[i], en[i], tw[i] = l[r], e[r], t[r]
                 if self.memoize:
-                    while len(self._memo) >= self.memo_max:
-                        self._memo.pop(next(iter(self._memo)))
-                    self._memo.setdefault(
+                    self.store.put(
                         keys[i], (l[r].copy(), e[r].copy(), t[r].copy()))
         # duplicates copy their first occurrence's output row directly —
-        # never via the memo, whose LRU bound may already have evicted the
+        # never via the store, whose LRU bound may already have evicted the
         # entry within a single paper-scale call
         for i in dup_idx:
             j = seen_this_call[keys[i]]
@@ -789,7 +873,8 @@ class EvalEngine:
         meta = {"backend": self.backend, "mode": mode, "requests": n,
                 "hits": self.stats.hits - pre.hits,
                 "misses": self.stats.misses - pre.misses,
-                "skips": self.stats.skips - pre.skips}
+                "skips": self.stats.skips - pre.skips,
+                "dispatches": self.stats.dispatches - pre.dispatches}
         meta["hit_rate"] = meta["hits"] / max(n, 1)
         return {"latency": lat, "energy": en, "tops_w": tw, "area": area,
                 "meta": meta}

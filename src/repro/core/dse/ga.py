@@ -16,7 +16,7 @@ equals a post-hoc exact ``rescore()`` bitwise.  The numpy loop below
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -76,8 +76,8 @@ def run_ga(sweep: SweepResult, bracket: float,
            cfg: GAConfig = GAConfig(), seed: int = 0,
            calib: CalibrationTable = DEFAULT_CALIB,
            verbose: bool = False, engine: Optional[EvalEngine] = None,
-           prefilter: bool = True, loop: str = "device"
-           ) -> Optional[GAResult]:
+           prefilter: bool = True, loop: str = "device",
+           on_generation: Optional[Callable] = None) -> Optional[GAResult]:
     """GA refinement at one area budget, seeded from the sweep.
 
     ``loop="device"`` (default) delegates to the jitted generation loop
@@ -103,14 +103,21 @@ def run_ga(sweep: SweepResult, bracket: float,
     steady state instead (energy column = per-inference energy at II):
     the Eq. 8 savings term then optimizes serving energy, and an II
     target can be enforced on finalists via
-    ``objective.serving_fitness``."""
+    ``objective.serving_fitness``.
+
+    ``on_generation(gen, pop, fit, metrics)``, when given, is called
+    after every scored population — ``gen`` 0 for the seed population,
+    then 1..N — with the raw genomes, their Eq. 8 fitness, and the
+    metric arrays.  The evaluation service streams Pareto-front updates
+    from it; it must not mutate its arguments."""
     if loop not in ("device", "host"):
         raise ValueError(f"loop {loop!r} not in ('device', 'host')")
     if loop == "device":
         from .ga_device import run_ga_device
         return run_ga_device(sweep, bracket, cfg, seed=seed, calib=calib,
                              verbose=verbose, engine=engine,
-                             prefilter=prefilter)
+                             prefilter=prefilter,
+                             on_generation=on_generation)
     engine = (engine.check_workloads(sweep.workloads, calib)
               if engine is not None else EvalEngine(sweep.workloads, calib))
     rng = np.random.default_rng(seed + int(bracket))
@@ -142,6 +149,8 @@ def run_ga(sweep: SweepResult, bracket: float,
         return fit, m
 
     fit, metrics = evaluate(pop)
+    if on_generation is not None:
+        on_generation(0, pop, fit, metrics)
     best_i = int(np.argmax(fit))
     best = (fit[best_i], pop[best_i].copy(),
             {k: v[best_i] for k, v in metrics.items()})
@@ -172,6 +181,8 @@ def run_ga(sweep: SweepResult, bracket: float,
                 children.append(child)
         pop = np.asarray(children[:cfg.population])
         fit, metrics = evaluate(pop)
+        if on_generation is not None:
+            on_generation(gen + 1, pop, fit, metrics)
         evaluated += len(pop)
         gi = int(np.argmax(fit))
         if fit[gi] > best[0]:

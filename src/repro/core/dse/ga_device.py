@@ -42,7 +42,7 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Dict, Optional
+from typing import Callable, Dict, Optional
 
 import numpy as np
 
@@ -220,7 +220,8 @@ def _genetics_kernel(population: int, tournament: int, n_elite: int,
 def run_ga_device(sweep, bracket: float, cfg=None, seed: int = 0,
                   calib: CalibrationTable = DEFAULT_CALIB,
                   verbose: bool = False, engine: Optional[EvalEngine] = None,
-                  prefilter: bool = True):
+                  prefilter: bool = True,
+                  on_generation: Optional[Callable] = None):
     """GA refinement at one area budget on the device generation loop.
 
     Same contract as ``ga.run_ga`` (which delegates here by default):
@@ -229,7 +230,13 @@ def run_ga_device(sweep, bracket: float, cfg=None, seed: int = 0,
     explicit ``engine``, scoring runs the exact search backend — one
     class-specialized fused map+execute dispatch per workload per
     generation, memo hits (elites, duplicate children) and
-    bracket-prefiltered genomes skipping the scan.
+    bracket-prefiltered genomes skipping the scan.  ``engine`` may be
+    any object with the engine scoring surface — e.g. the evaluation
+    service's ``DSEClient``, which coalesces this loop's populations
+    with other tenants' candidates.  ``on_generation(gen, pop, fit,
+    metrics)`` is invoked after every scored population (gen 0 = the
+    seed population) — the hook the service streams Pareto-front
+    updates from.
     """
     from .ga import GAConfig, GAResult
     cfg = cfg or GAConfig()
@@ -271,6 +278,8 @@ def run_ga_device(sweep, bracket: float, cfg=None, seed: int = 0,
     # the shapes up front so every dispatch is minimally padded
     engine.reserve_shapes(cfg.population)
     fit, metrics = evaluate(pop)
+    if on_generation is not None:
+        on_generation(0, pop, fit, metrics)
     best_i = int(np.argmax(fit))
     best = (fit[best_i], pop[best_i].copy(),
             {k: v[best_i] for k, v in metrics.items()})
@@ -299,6 +308,8 @@ def run_ga_device(sweep, bracket: float, cfg=None, seed: int = 0,
         pop = np.asarray(pop_dev)
         canon = np.asarray(canon_dev)
         fit, metrics = evaluate(pop, canonical=canon)
+        if on_generation is not None:
+            on_generation(gen + 1, pop, fit, metrics)
         evaluated += len(pop)
         gi = int(np.argmax(fit))
         if fit[gi] > best[0]:

@@ -1,0 +1,330 @@
+"""Pluggable result stores for the DSE evaluation engine.
+
+The engine's caching policy (PR 1's in-process LRU memo) is factored out
+behind one small interface so the same ``EvalEngine.evaluate()`` loop can
+run against
+
+* ``MemoryLRUStore`` — the historical in-process bounded LRU (the
+  default; hits refresh recency, inserts evict the oldest entry);
+* ``SqliteStore`` — a *persistent content-addressed* store: one sqlite
+  file (WAL mode, safe under concurrent writers from many processes)
+  keyed by canonical genome x engine context x schedule mode x cost-model
+  version, so exact metrics accumulate across processes, CI runs, and
+  users.  A ``COST_MODEL_VERSION`` bump changes every key and thereby
+  invalidates stale entries automatically (``purge_stale()`` reclaims
+  the dead rows);
+* ``TieredStore`` — an LRU front over a persistent back: gets probe the
+  front first and promote back-tier hits, puts write through to both.
+
+Keys and values
+---------------
+The engine hands stores *short* keys — ``b"<mode>:" + canonical genome
+bytes`` — plus, once at construction, a binding **context**: a digest of
+everything else the metrics depend on (workload list and order, the
+calibration table, precision/fusion flags, backend fidelity class, and
+``simulator.costs.COST_MODEL_VERSION``).  In-process stores may ignore
+the context (the engine instance itself scopes them); persistent stores
+MUST fold it into the stored key, which is what makes the addressing
+content-based: two engines with identical context share entries, any
+difference (or a cost-model version bump) keeps them apart.
+
+Values are the engine's memo rows: a ``(lat, en, tw)`` triple of
+float64 ``(W,)`` arrays.  Persistence round-trips them through raw
+little-endian bytes, so a store-served result is *bitwise* identical to
+the freshly computed one (pinned by tests/test_store.py).
+
+``put`` is put-if-absent everywhere: metrics for one key are immutable
+(bitwise reproducible), so first-write-wins makes concurrent writers
+trivially safe — two processes racing on one key insert the same bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import sqlite3
+import threading
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from ..simulator.costs import COST_MODEL_VERSION
+
+__all__ = ["StoreStats", "ResultStore", "MemoryLRUStore", "SqliteStore",
+           "TieredStore", "COST_MODEL_VERSION"]
+
+Row = Tuple[np.ndarray, np.ndarray, np.ndarray]
+
+
+@dataclasses.dataclass
+class StoreStats:
+    """Lifetime counters of one store instance (not of the backing file:
+    a shared sqlite file is fed by many instances across processes)."""
+
+    gets: int = 0
+    hits: int = 0
+    puts: int = 0
+    evictions: int = 0
+
+    def hit_rate(self) -> float:
+        return self.hits / max(self.gets, 1)
+
+    def snapshot(self) -> Dict[str, float]:
+        return {"gets": self.gets, "hits": self.hits, "puts": self.puts,
+                "evictions": self.evictions, "hit_rate": self.hit_rate()}
+
+
+class ResultStore:
+    """Interface the engine's caching policy is written against."""
+
+    def bind(self, context: bytes) -> "ResultStore":
+        """Attach the engine-context digest (see module docstring).
+        Returns self.  Persistent stores fold it into every key;
+        in-process stores may ignore it.  Rebinding with a different
+        context raises — one store instance serves one engine context
+        (share the *file*, not the instance)."""
+        raise NotImplementedError
+
+    def get(self, key: bytes) -> Optional[Row]:
+        raise NotImplementedError
+
+    def put(self, key: bytes, row: Row) -> None:
+        """Put-if-absent; values for one key are immutable."""
+        raise NotImplementedError
+
+    def peek(self, key: bytes) -> bool:
+        """Presence probe with no stats or recency side effects (the
+        service uses it for per-request store-hit attribution)."""
+        raise NotImplementedError
+
+    def __len__(self) -> int:
+        raise NotImplementedError
+
+    def lru_dict(self) -> Optional[Dict[bytes, Row]]:
+        """The in-memory LRU mapping when this store (or its front tier)
+        has one — the engine's legacy ``_memo`` view — else None."""
+        return None
+
+    def close(self) -> None:
+        pass
+
+
+class _Bindable(ResultStore):
+    def __init__(self) -> None:
+        self._context: Optional[bytes] = None
+        self.stats = StoreStats()
+
+    def bind(self, context: bytes) -> "ResultStore":
+        if self._context is not None and self._context != context:
+            raise ValueError(
+                "store instance already bound to a different engine "
+                "context — construct one instance per engine (a "
+                "persistent store may still share the same file path)")
+        self._context = context
+        return self
+
+
+class MemoryLRUStore(_Bindable):
+    """The historical engine memo as a store: bounded dict-ordered LRU.
+    ``get`` refreshes recency; ``put`` evicts the least recently touched
+    entry once ``max_entries`` is reached.  Not persistent; the binding
+    context is ignored (the owning engine scopes the instance)."""
+
+    def __init__(self, max_entries: int = 131_072):
+        super().__init__()
+        self.max_entries = max(int(max_entries), 1)
+        self.data: Dict[bytes, Row] = {}
+        self._lock = threading.Lock()
+
+    def get(self, key: bytes) -> Optional[Row]:
+        with self._lock:
+            self.stats.gets += 1
+            row = self.data.get(key)
+            if row is None:
+                return None
+            self.data[key] = self.data.pop(key)   # refresh recency
+            self.stats.hits += 1
+            return row
+
+    def put(self, key: bytes, row: Row) -> None:
+        with self._lock:
+            if key in self.data:
+                return
+            while len(self.data) >= self.max_entries:
+                self.data.pop(next(iter(self.data)))
+                self.stats.evictions += 1
+            self.data[key] = row
+            self.stats.puts += 1
+
+    def peek(self, key: bytes) -> bool:
+        return key in self.data
+
+    def __len__(self) -> int:
+        return len(self.data)
+
+    def lru_dict(self) -> Optional[Dict[bytes, Row]]:
+        return self.data
+
+
+class SqliteStore(_Bindable):
+    """Persistent content-addressed result store over one sqlite file.
+
+    Stored key = sha256(version digest + engine context + short key):
+    canonical genome x chip/engine context x mode x cost-model version,
+    fixed 32 bytes.  The file is opened in WAL mode with a busy timeout,
+    and every write is a single ``INSERT OR IGNORE`` transaction —
+    concurrent writers (threads or processes) serialize on sqlite's file
+    lock and first-write-wins keeps the table consistent without any
+    application-level locking (values per key are immutable).
+
+    ``version`` defaults to ``simulator.costs.COST_MODEL_VERSION``; a
+    bump re-addresses every key, so stale metrics can never be served.
+    The superseded rows stay on disk (still tagged with the version that
+    wrote them) until ``purge_stale()`` deletes them.
+    """
+
+    def __init__(self, path: str, version: str = COST_MODEL_VERSION):
+        super().__init__()
+        self.path = str(path)
+        self.version = str(version)
+        parent = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(parent, exist_ok=True)
+        self._lock = threading.Lock()   # sqlite conns are not thread-safe
+        self._conn = sqlite3.connect(self.path, timeout=30.0,
+                                     check_same_thread=False)
+        with self._lock:
+            self._conn.execute("PRAGMA journal_mode=WAL")
+            self._conn.execute("PRAGMA synchronous=NORMAL")
+            self._conn.execute(
+                "CREATE TABLE IF NOT EXISTS results ("
+                " k BLOB PRIMARY KEY,"
+                " w INTEGER NOT NULL,"
+                " data BLOB NOT NULL,"
+                " version TEXT NOT NULL,"
+                " created REAL NOT NULL)")
+            self._conn.commit()
+
+    # ------------------------------------------------------------ keys/values
+    def _addr(self, key: bytes) -> bytes:
+        h = hashlib.sha256()
+        h.update(self.version.encode())
+        h.update(b"\x00")
+        h.update(self._context or b"")
+        h.update(b"\x00")
+        h.update(key)
+        return h.digest()
+
+    @staticmethod
+    def _encode(row: Row) -> Tuple[int, bytes]:
+        lat, en, tw = (np.ascontiguousarray(a, np.float64) for a in row)
+        return len(lat), lat.tobytes() + en.tobytes() + tw.tobytes()
+
+    @staticmethod
+    def _decode(w: int, blob: bytes) -> Row:
+        flat = np.frombuffer(blob, np.float64)
+        return (flat[:w].copy(), flat[w:2 * w].copy(), flat[2 * w:].copy())
+
+    # ------------------------------------------------------------- interface
+    def get(self, key: bytes) -> Optional[Row]:
+        self.stats.gets += 1
+        with self._lock:
+            cur = self._conn.execute(
+                "SELECT w, data FROM results WHERE k = ?", (self._addr(key),))
+            hit = cur.fetchone()
+        if hit is None:
+            return None
+        self.stats.hits += 1
+        return self._decode(int(hit[0]), hit[1])
+
+    def put(self, key: bytes, row: Row) -> None:
+        w, blob = self._encode(row)
+        with self._lock:
+            self._conn.execute(
+                "INSERT OR IGNORE INTO results (k, w, data, version, created)"
+                " VALUES (?, ?, ?, ?, ?)",
+                (self._addr(key), w, blob, self.version, time.time()))
+            self._conn.commit()
+        self.stats.puts += 1
+
+    def peek(self, key: bytes) -> bool:
+        with self._lock:
+            cur = self._conn.execute(
+                "SELECT 1 FROM results WHERE k = ?", (self._addr(key),))
+            return cur.fetchone() is not None
+
+    def __len__(self) -> int:
+        with self._lock:
+            return int(self._conn.execute(
+                "SELECT COUNT(*) FROM results").fetchone()[0])
+
+    def version_counts(self) -> Dict[str, int]:
+        """Rows per cost-model version in the backing file (stale rows
+        are the ones not matching ``self.version``)."""
+        with self._lock:
+            cur = self._conn.execute(
+                "SELECT version, COUNT(*) FROM results GROUP BY version")
+            return {v: int(n) for v, n in cur.fetchall()}
+
+    def purge_stale(self) -> int:
+        """Delete rows written under any other cost-model version;
+        returns the number reclaimed."""
+        with self._lock:
+            cur = self._conn.execute(
+                "DELETE FROM results WHERE version != ?", (self.version,))
+            self._conn.commit()
+            return cur.rowcount
+
+    def close(self) -> None:
+        with self._lock:
+            self._conn.close()
+
+
+class TieredStore(_Bindable):
+    """LRU front tier over a (typically persistent) back tier.
+
+    ``get``: front first; on a front miss the back is probed and a hit
+    is promoted into the front (so a warm persistent file refills the
+    hot in-process working set at memory speed).  ``put``: write-through
+    to both tiers.  Stats: this instance counts the merged view; the
+    tiers keep their own counters for attribution."""
+
+    def __init__(self, front: ResultStore, back: ResultStore):
+        super().__init__()
+        self.front = front
+        self.back = back
+
+    def bind(self, context: bytes) -> "ResultStore":
+        super().bind(context)
+        self.front.bind(context)
+        self.back.bind(context)
+        return self
+
+    def get(self, key: bytes) -> Optional[Row]:
+        self.stats.gets += 1
+        row = self.front.get(key)
+        if row is None:
+            row = self.back.get(key)
+            if row is not None:
+                self.front.put(key, row)   # promote
+        if row is not None:
+            self.stats.hits += 1
+        return row
+
+    def put(self, key: bytes, row: Row) -> None:
+        self.front.put(key, row)
+        self.back.put(key, row)
+        self.stats.puts += 1
+
+    def peek(self, key: bytes) -> bool:
+        return self.front.peek(key) or self.back.peek(key)
+
+    def __len__(self) -> int:
+        return max(len(self.front), len(self.back))
+
+    def lru_dict(self) -> Optional[Dict[bytes, Row]]:
+        return self.front.lru_dict()
+
+    def close(self) -> None:
+        self.front.close()
+        self.back.close()

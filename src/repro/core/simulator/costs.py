@@ -39,10 +39,17 @@ from ..ir import OpClass, OpType, PRECISION_BYTES
 __all__ = [
     "CACHE_FRAC", "ACT_CACHE_SLOTS", "ACC_BYTES", "DSP_OPS_PER_ELEM",
     "DSP_OPS_TABLE", "SFU_NEED", "TILE_COST_KEYS", "OP_COST_KEYS",
-    "CostModel", "cost_model", "ActivationCache", "noc_transfer_seconds",
-    "noc_transfer_energy_pj", "split_op_fields", "pipeline_bounds",
-    "steady_state_energy",
+    "COST_MODEL_VERSION", "CostModel", "cost_model", "ActivationCache",
+    "noc_transfer_seconds", "noc_transfer_energy_pj", "split_op_fields",
+    "pipeline_bounds", "steady_state_energy",
 ]
+
+# Version tag of the cost formulas below.  The persistent DSE result store
+# (``dse.store``) folds this into every content-addressed key, so bumping
+# it invalidates all previously accumulated metrics at once — REQUIRED
+# whenever an edit in this module (or in the mapping/orchestration
+# semantics it feeds) changes any metric bit.  Format: "<pr>.<rev>".
+COST_MODEL_VERSION = "6.0"
 
 # fraction of per-tile SRAM reserved for the activation cache (§3.3.4)
 CACHE_FRAC = 0.25

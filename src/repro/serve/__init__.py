@@ -1,5 +1,8 @@
 """Serving substrate: prefill/decode steps, KV-cache engine, batched
-request scheduling."""
+request scheduling — and the DSE evaluation service (coalescing async
+front over ``core.dse.engine``, see ``dse_service``)."""
+from .dse_service import DSEClient, DSEService, ServiceStats
 from .step import make_prefill_step, make_decode_step
 
-__all__ = ["make_prefill_step", "make_decode_step"]
+__all__ = ["make_prefill_step", "make_decode_step",
+           "DSEService", "DSEClient", "ServiceStats"]

@@ -1,0 +1,930 @@
+"""DSE-as-a-service: a coalescing async evaluation front over the engine.
+
+MOSAIC's §4 pipeline (stratified sweep → per-seed GA → Pareto merge) and
+taxonomy-scale spaces mean thousands of candidate evaluations per study,
+traditionally re-run by every user and every CI job from scratch.  PR 5's
+fused ``search_population`` kernel already scores an arbitrary candidate
+batch on every workload in one dispatch — so scoring candidates from
+*different* requests in the same dispatch is nearly free.  This module
+turns the per-process ``EvalEngine`` into traffic-serving infrastructure:
+
+``DSEService``
+    An asyncio front over one engine.  ``evaluate`` requests break into
+    per-genome items on a queue; a continuous-batching loop (the same
+    control shape as ``ServeEngine.run``) collects items across requests
+    into micro-batches — up to ``max_batch`` genomes or ``max_wait_ms``
+    of admission window, whichever first — and drives them through
+    ``EvalEngine.evaluate`` on a single-thread dispatch executor.  While
+    a batch simulates, new arrivals keep queueing, so concurrent tenants
+    naturally share fused dispatches.  Identical in-flight candidates
+    are merged onto one future (on top of the engine's store, which
+    already dedups completed ones).  ``search`` requests run a whole GA
+    refinement server-side through the same coalescing queue, streaming
+    cumulative Pareto-front updates as generations complete.  Per
+    request the service reports queue time, batch occupancy, and
+    store-hit attribution; ``ServiceStats`` aggregates the same across
+    the service lifetime.
+
+``DSEClient``
+    A thin client with the ``EvalEngine`` duck-type the search
+    frontends score through (``check_workloads`` / ``evaluate`` /
+    ``areas`` / ``rescore`` / ``reserve_shapes`` / ``stats``), bound
+    either in-process to a ``DSEService`` or over TCP (JSON lines; see
+    ``DSEService.listen``).  Python's JSON floats round-trip float64
+    bitwise, so service-returned metrics are *bitwise* equal to a local
+    ``backend="exact"`` evaluation even across the wire (pinned by
+    tests/test_service.py).  The ``keep`` area-prefilter runs
+    client-side (areas are a cheap, bitwise-pinned pure function of the
+    genome), preserving the engine's semantics that skipped genomes are
+    never memoized.
+
+Running against a shared persistent store
+(``EvalEngine(store=TieredStore(MemoryLRUStore(), SqliteStore(path)))``)
+makes the service a cross-run result cache: a repeated study is
+mostly store hits, and concurrent services sharing one sqlite file
+accumulate results safely (first-write-wins; see ``dse.store``).
+
+``python -m repro.serve.dse_service --smoke`` is the CI smoke: two
+concurrent GA clients against one service must match local exact-backend
+runs bitwise while sharing fused dispatches; a second warm-store run
+must report a >50 % store hit rate.  ``--serve HOST:PORT`` runs a
+standalone TCP server.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import functools
+import hashlib
+import itertools
+import json
+import socket
+import threading
+from typing import Any, Dict, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
+from ..core.dse.encoding import GENOME_LEN
+from ..core.dse.engine import (EngineStats, EvalEngine, canonical_genomes,
+                               genome_areas)
+from ..core.dse.pareto import pareto_mask
+from ..core.simulator.costs import COST_MODEL_VERSION
+from ..core.simulator.orchestrator import SCHEDULE_MODES
+
+__all__ = ["DSEService", "DSEClient", "ServiceStats"]
+
+
+# =============================================================================
+# service-side accounting
+# =============================================================================
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Lifetime counters of one service.  ``batches`` are the coalesced
+    micro-batches the continuous-batching loop formed; ``engine_*`` are
+    the engine-side outcomes of dispatching them (``engine_dispatches``
+    is the number the CI coalescing check compares against the sum of
+    per-client local dispatch counts)."""
+
+    requests: int = 0            # evaluate() calls admitted
+    request_genomes: int = 0     # genomes across those calls
+    store_hits: int = 0          # peek-attributed: present at admission
+    inflight_merged: int = 0     # merged onto an already-queued future
+    batches: int = 0             # micro-batches formed
+    batch_genomes: int = 0       # unique genomes dispatched
+    coalesced_batches: int = 0   # batches mixing >= 2 requests
+    queue_seconds: float = 0.0   # summed admission->dispatch wait
+    engine_hits: int = 0
+    engine_misses: int = 0
+    engine_dispatches: int = 0   # fused miss-batch dispatches
+
+    def occupancy(self, max_batch: int) -> float:
+        return self.batch_genomes / max(self.batches * max_batch, 1)
+
+    def mean_queue_ms(self) -> float:
+        return 1e3 * self.queue_seconds / max(self.batch_genomes, 1)
+
+    def snapshot(self, max_batch: Optional[int] = None) -> Dict[str, float]:
+        d = dataclasses.asdict(self)
+        d["mean_queue_ms"] = self.mean_queue_ms()
+        if max_batch:
+            d["batch_occupancy"] = self.occupancy(max_batch)
+        return d
+
+
+@dataclasses.dataclass
+class _Pending:
+    """One queued genome: resolved by the batch that dispatches it."""
+    rid: int
+    key: bytes
+    genome: np.ndarray           # canonical (GENOME_LEN,) int64 row
+    mode: str
+    future: asyncio.Future       # -> (lat (W,), en (W,), tw (W,))
+    t_enq: float
+
+
+class _SeedPool:
+    """The slice of ``SweepResult`` the GA seeding logic reads, built
+    from wire-serializable pieces (seed genomes in rank order + the
+    bracket's homogeneous-baseline energies) so a ``search`` request
+    doesn't need to ship a whole sweep."""
+
+    def __init__(self, workloads: Sequence[str], genomes: np.ndarray,
+                 bracket: float, e_homo: np.ndarray):
+        self.workloads = list(workloads)
+        self.genomes = np.asarray(genomes, np.int64).reshape(-1, GENOME_LEN)
+        self.bracket = np.full(len(self.genomes), float(bracket))
+        self._baseline = {float(bracket): np.asarray(e_homo, np.float64)}
+
+    def homo_baseline(self) -> Dict[float, np.ndarray]:
+        return self._baseline
+
+    def fitness(self, alpha: float) -> np.ndarray:
+        # seed genomes arrive pre-ranked; a constant keeps argsort stable
+        return np.zeros(len(self.genomes))
+
+
+def _ga_result_json(res) -> Optional[Dict[str, Any]]:
+    if res is None:
+        return None
+    return {"bracket": res.bracket,
+            "best_genome": np.asarray(res.best_genome).tolist(),
+            "best_fitness": res.best_fitness,
+            "best_savings_per_wl": np.asarray(
+                res.best_savings_per_wl).tolist(),
+            "best_metrics": {k: np.asarray(v).tolist()
+                             for k, v in res.best_metrics.items()},
+            "history": list(res.history),
+            "evaluated": res.evaluated}
+
+
+# =============================================================================
+# the service
+# =============================================================================
+
+class DSEService:
+    """Coalescing evaluation service over one ``EvalEngine``.
+
+    ``max_batch`` caps genomes per coalesced micro-batch; ``max_wait_ms``
+    is the admission window after the first arrival.  The dispatch
+    executor is single-threaded, so engine dispatches serialize while
+    the event loop keeps admitting — the continuous-batching shape of
+    ``ServeEngine.run``, with genomes in place of sequences.
+    """
+
+    def __init__(self, engine: EvalEngine, max_batch: int = 1024,
+                 max_wait_ms: float = 10.0):
+        self.engine = engine
+        self.max_batch = max(int(max_batch), 1)
+        self.max_wait = max_wait_ms / 1e3
+        self.stats = ServiceStats()
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._thread: Optional[threading.Thread] = None
+        self._queue: Optional[asyncio.Queue] = None
+        self._batcher_task = None
+        self._server = None
+        self._inflight: Dict[bytes, asyncio.Future] = {}
+        self._req_acct: Dict[int, Dict[str, Any]] = {}
+        self._rid = itertools.count()
+        import concurrent.futures
+        self._executor = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="dse-dispatch")
+        self._searches = concurrent.futures.ThreadPoolExecutor(
+            max_workers=4, thread_name_prefix="dse-search")
+
+    # ------------------------------------------------------------- lifecycle
+    def start(self) -> "DSEService":
+        """Run the service loop on a daemon thread; returns self."""
+        if self._loop is not None:
+            return self
+        self._loop = asyncio.new_event_loop()
+        ready = threading.Event()
+
+        def _run():
+            asyncio.set_event_loop(self._loop)
+            self._queue = asyncio.Queue()
+            self._batcher_task = self._loop.create_task(self._batcher())
+            ready.set()
+            self._loop.run_forever()
+            self._loop.close()
+
+        self._thread = threading.Thread(target=_run, daemon=True,
+                                        name="dse-service")
+        self._thread.start()
+        ready.wait()
+        return self
+
+    def stop(self) -> None:
+        if self._loop is None:
+            return
+
+        async def _shutdown():
+            if self._server is not None:
+                self._server.close()
+                await self._server.wait_closed()
+            self._batcher_task.cancel()
+
+        asyncio.run_coroutine_threadsafe(_shutdown(), self._loop).result()
+        self._loop.call_soon_threadsafe(self._loop.stop)
+        self._thread.join(timeout=10)
+        self._executor.shutdown(wait=False)
+        self._searches.shutdown(wait=False)
+        self._loop = None
+        self._thread = None
+
+    def listen(self, host: str = "127.0.0.1", port: int = 0):
+        """Open the JSON-lines TCP front; returns the bound (host, port)."""
+        async def _start():
+            self._server = await asyncio.start_server(
+                self._handle_conn, host, port)
+            return self._server.sockets[0].getsockname()[:2]
+
+        return asyncio.run_coroutine_threadsafe(_start(), self._loop).result()
+
+    # ------------------------------------------------------------- evaluate
+    async def evaluate(self, genomes: np.ndarray, mode: Optional[str] = None,
+                       canonical: Optional[np.ndarray] = None
+                       ) -> Dict[str, Any]:
+        """Score genomes through the coalescing queue; same output
+        contract as ``EvalEngine.evaluate`` (no ``keep`` — the client
+        applies its area prefilter before submitting), with a service
+        ``meta``: per-request queue time, batch occupancy, store-hit
+        attribution, and in-flight merges."""
+        eng = self.engine
+        mode = eng.mode if mode is None else mode
+        if mode not in SCHEDULE_MODES:
+            raise ValueError(f"mode {mode!r} not in {SCHEDULE_MODES}")
+        genomes = np.asarray(genomes, np.int64).reshape(-1, GENOME_LEN)
+        canon = canonical_genomes(genomes) if canonical is None else \
+            np.asarray(canonical, np.int64).reshape(-1, GENOME_LEN)
+        n = len(genomes)
+        tag = mode.encode() + b":"
+        keys = [tag + eng._key(g) for g in canon]
+        # attribution only (no recency side effects): which of this
+        # request's genomes the store could already serve at admission
+        store_hits = sum(1 for k in keys if eng.store.peek(k))
+        rid = next(self._rid)
+        acct = self._req_acct[rid] = {"queue_s": 0.0, "queued": 0,
+                                      "occ": 0.0, "batches": set()}
+        merged = 0
+        futs: List[asyncio.Future] = []
+        for k, g in zip(keys, canon):
+            fut = self._inflight.get(k)
+            if fut is None:
+                fut = self._loop.create_future()
+                self._inflight[k] = fut
+                self._queue.put_nowait(_Pending(
+                    rid, k, g, mode, fut, self._loop.time()))
+                acct["queued"] += 1
+            else:
+                merged += 1
+            futs.append(fut)
+        st = self.stats
+        st.requests += 1
+        st.request_genomes += n
+        st.store_hits += store_hits
+        st.inflight_merged += merged
+        try:
+            rows = await asyncio.gather(*futs)
+        finally:
+            acct = self._req_acct.pop(rid)
+        W = len(eng.workloads)
+        lat = np.stack([r[0] for r in rows]) if rows else np.zeros((0, W))
+        en = np.stack([r[1] for r in rows]) if rows else np.zeros((0, W))
+        tw = np.stack([r[2] for r in rows]) if rows else np.zeros((0, W))
+        n_batches = max(len(acct["batches"]), 1)
+        meta = {"backend": eng.backend, "mode": mode, "requests": n,
+                "store_hits": store_hits,
+                "hit_rate": store_hits / max(n, 1),
+                "inflight_merged": merged,
+                "queue_ms": 1e3 * acct["queue_s"] / max(acct["queued"], 1),
+                "batch_occupancy": acct["occ"] / n_batches,
+                "batches": len(acct["batches"])}
+        return {"latency": lat, "energy": en, "tops_w": tw,
+                "area": eng.areas(genomes), "meta": meta}
+
+    async def _batcher(self):
+        """The continuous-batching loop: block on the first item, admit
+        more until the batch fills or the window closes, dispatch, and
+        repeat — arrivals during a dispatch queue up and form the next
+        batch, so concurrent tenants coalesce whenever the engine is the
+        bottleneck (and within the window when it is not)."""
+        while True:
+            batch = [await self._queue.get()]
+            deadline = self._loop.time() + self.max_wait
+            while len(batch) < self.max_batch:
+                timeout = deadline - self._loop.time()
+                if timeout <= 0:
+                    break
+                try:
+                    batch.append(await asyncio.wait_for(
+                        self._queue.get(), timeout))
+                except asyncio.TimeoutError:
+                    break
+            await self._dispatch(batch)
+
+    async def _dispatch(self, batch: List[_Pending]):
+        st = self.stats
+        bid = st.batches
+        st.batches += 1
+        st.batch_genomes += len(batch)
+        occ = len(batch) / self.max_batch
+        now = self._loop.time()
+        if len({it.rid for it in batch}) > 1:
+            st.coalesced_batches += 1
+        for it in batch:
+            wait = now - it.t_enq
+            st.queue_seconds += wait
+            acct = self._req_acct.get(it.rid)
+            if acct is not None:
+                acct["queue_s"] += wait
+                if bid not in acct["batches"]:
+                    acct["batches"].add(bid)
+                    acct["occ"] += occ
+        by_mode: Dict[str, List[_Pending]] = {}
+        for it in batch:
+            by_mode.setdefault(it.mode, []).append(it)
+        for mode, items in by_mode.items():
+            canon = np.stack([it.genome for it in items])
+            # canonical genomes are fixpoints of canonical_genomes, so
+            # passing them back as their own canonical forms is exact
+            fn = functools.partial(self.engine.evaluate, canon, None, mode,
+                                   canon)
+            try:
+                res = await self._loop.run_in_executor(self._executor, fn)
+            except Exception as exc:    # noqa: BLE001 - forwarded to callers
+                for it in items:
+                    self._inflight.pop(it.key, None)
+                    if not it.future.done():
+                        it.future.set_exception(exc)
+                continue
+            m = res["meta"]
+            st.engine_hits += m["hits"]
+            st.engine_misses += m["misses"]
+            st.engine_dispatches += m["dispatches"]
+            for r, it in enumerate(items):
+                self._inflight.pop(it.key, None)
+                if not it.future.done():
+                    it.future.set_result((res["latency"][r], res["energy"][r],
+                                          res["tops_w"][r]))
+
+    # --------------------------------------------------------------- search
+    async def search(self, seed_genomes, bracket: float, e_homo,
+                     cfg: Optional[Dict[str, Any]] = None, seed: int = 0,
+                     prefilter: bool = True):
+        """Run one GA refinement server-side, its scoring flowing through
+        the coalescing queue (so concurrent searches and evaluate tenants
+        share fused dispatches).  Async generator of events:
+        ``{"event": "generation", ...}`` after every generation — with
+        the *cumulative* Pareto front over (mean energy, area, mean
+        latency) of all valid candidates seen so far — then
+        ``{"event": "done", "result": <GAResult as JSON>}`` (or
+        ``{"event": "error", ...}``)."""
+        from ..core.dse.ga import GAConfig, run_ga
+        queue: asyncio.Queue = asyncio.Queue()
+        loop = self._loop
+        pool = _SeedPool(self.engine.workloads,
+                         np.zeros((0, GENOME_LEN), np.int64)
+                         if seed_genomes is None else seed_genomes,
+                         bracket, e_homo)
+        front_pts = np.zeros((0, 3))
+        front_genomes = np.zeros((0, GENOME_LEN), np.int64)
+
+        def emit(ev):
+            loop.call_soon_threadsafe(queue.put_nowait, ev)
+
+        def on_generation(gen, pop, fit, metrics):
+            nonlocal front_pts, front_genomes
+            valid = np.isfinite(fit)
+            if valid.any():
+                pts = np.stack([metrics["energy"][valid].mean(axis=1),
+                                metrics["area"][valid],
+                                metrics["latency"][valid].mean(axis=1)],
+                               axis=1)
+                front_pts = np.concatenate([front_pts, pts])
+                front_genomes = np.concatenate([front_genomes,
+                                                pop[valid].astype(np.int64)])
+                mask = pareto_mask(front_pts)
+                front_pts = front_pts[mask]
+                front_genomes = front_genomes[mask]
+            order = np.argsort(front_pts[:, 0])
+            emit({"event": "generation", "gen": int(gen),
+                  "best_fitness": float(np.max(fit)) if len(fit) else
+                  float("-inf"),
+                  "front_size": int(len(front_pts)),
+                  "front": {"points": front_pts[order].tolist(),
+                            "genomes": front_genomes[order].tolist()}})
+
+        def _run_ga():
+            client = DSEClient(service=self)
+            try:
+                res = run_ga(pool, float(bracket), GAConfig(**(cfg or {})),
+                             seed=seed, calib=self.engine.calib,
+                             engine=client, prefilter=prefilter,
+                             on_generation=on_generation)
+                emit({"event": "done", "result": _ga_result_json(res),
+                      "client_meta": {
+                          "requests": client.stats.requests,
+                          "hits": client.stats.hits,
+                          "skips": client.stats.skips}})
+            except Exception as exc:    # noqa: BLE001 - streamed to caller
+                emit({"event": "error", "error": repr(exc)})
+
+        worker = loop.run_in_executor(self._searches, _run_ga)
+        while True:
+            ev = await queue.get()
+            yield ev
+            if ev["event"] in ("done", "error"):
+                break
+        await worker
+
+    # ------------------------------------------------------------ TCP front
+    def _hello(self) -> Dict[str, Any]:
+        eng = self.engine
+        return {"ok": True, "workloads": eng.workloads, "mode": eng.mode,
+                "backend": eng.backend,
+                "aggressive_int4": eng.aggressive_int4,
+                "enable_fusion": eng.enable_fusion,
+                "cost_model_version": COST_MODEL_VERSION,
+                "context": eng.context_key().hex(),
+                "max_batch": self.max_batch,
+                "max_wait_ms": self.max_wait * 1e3}
+
+    async def _handle_conn(self, reader: asyncio.StreamReader,
+                           writer: asyncio.StreamWriter):
+        def send(payload):
+            writer.write(json.dumps(payload, default=float).encode() + b"\n")
+
+        try:
+            while True:
+                line = await reader.readline()
+                if not line:
+                    break
+                try:
+                    req = json.loads(line)
+                    op = req.get("op")
+                    if op == "hello":
+                        send(self._hello())
+                    elif op == "evaluate":
+                        g = np.asarray(req["genomes"], np.int64)
+                        canon = req.get("canonical")
+                        res = await self.evaluate(
+                            g, mode=req.get("mode"),
+                            canonical=None if canon is None
+                            else np.asarray(canon, np.int64))
+                        send({"ok": True, "meta": res["meta"],
+                              **{k: res[k].tolist()
+                                 for k in ("latency", "energy", "tops_w",
+                                           "area")}})
+                    elif op == "rescore":
+                        g = np.asarray(req["genomes"], np.int64)
+                        fn = functools.partial(
+                            self.engine.rescore, g,
+                            oracle=bool(req.get("oracle", False)),
+                            mode=req.get("mode"))
+                        res = await self._loop.run_in_executor(
+                            self._searches, fn)
+                        send({"ok": True, "meta": res["meta"],
+                              **{k: res[k].tolist()
+                                 for k in ("latency", "energy", "tops_w",
+                                           "area")}})
+                    elif op == "search":
+                        sg = req.get("seed_genomes")
+                        agen = self.search(
+                            None if sg is None else np.asarray(sg, np.int64),
+                            float(req["bracket"]),
+                            np.asarray(req["e_homo"], np.float64),
+                            cfg=req.get("cfg"), seed=int(req.get("seed", 0)),
+                            prefilter=bool(req.get("prefilter", True)))
+                        async for ev in agen:
+                            send({"ok": True, **ev})
+                            await writer.drain()
+                        continue
+                    elif op == "reserve_shapes":
+                        self.engine.reserve_shapes(int(req.get("max_batch",
+                                                               64)))
+                        send({"ok": True})
+                    elif op == "stats":
+                        send({"ok": True,
+                              "service": self.stats.snapshot(self.max_batch),
+                              "engine": dataclasses.asdict(self.engine.stats),
+                              "store": self.engine.store.stats.snapshot(),
+                              "store_len": len(self.engine.store)})
+                    elif op == "bye":
+                        send({"ok": True})
+                        break
+                    else:
+                        send({"ok": False, "error": f"unknown op {op!r}"})
+                except Exception as exc:   # noqa: BLE001 - wire error reply
+                    send({"ok": False, "error": repr(exc)})
+                await writer.drain()
+        finally:
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except Exception:   # noqa: BLE001 - peer already gone
+                pass
+
+
+# =============================================================================
+# the client
+# =============================================================================
+
+class DSEClient:
+    """Engine-shaped client for a ``DSEService`` (in-process handle or
+    TCP address).  Search frontends (sweep / GA / Bayes / hillclimb)
+    take it wherever they take an ``EvalEngine``: one interface, local
+    or served.
+
+    The ``keep`` prefilter is applied client-side from locally computed
+    areas (bitwise-pinned pure function of the genome under the shared
+    calibration, which the TCP handshake verifies via the engine context
+    digest), so skipped genomes never travel and are never memoized —
+    the engine's own semantics.  ``stats`` mirrors ``EngineStats``
+    client-side; its hits are the service's store-hit + in-flight-merge
+    attribution (what this client did not cause to be simulated).
+    """
+
+    _sharding = None    # duck-type: the device GA loop probes this
+
+    def __init__(self, service: Optional[DSEService] = None,
+                 address: Optional[tuple] = None,
+                 calib: CalibrationTable = DEFAULT_CALIB,
+                 timeout: float = 600.0):
+        if (service is None) == (address is None):
+            raise ValueError("pass exactly one of service= or address=")
+        self._service = service
+        self._sock = None
+        self._lock = threading.Lock()
+        if service is not None:
+            eng = service.engine
+            self.workloads = list(eng.workloads)
+            self.calib = eng.calib
+            self.backend = eng.backend
+            self.mode = eng.mode
+        else:
+            self._sock = socket.create_connection(address, timeout=timeout)
+            self._io = self._sock.makefile("rwb")
+            hello = self._call({"op": "hello"})
+            self.workloads = list(hello["workloads"])
+            self.backend = hello["backend"]
+            self.mode = hello["mode"]
+            self.calib = calib
+            fidelity = "approx" if self.backend == "scan" else "exact"
+            text = repr((tuple(self.workloads), repr(self.calib),
+                         bool(hello["aggressive_int4"]),
+                         bool(hello["enable_fusion"]), fidelity,
+                         hello["cost_model_version"]))
+            digest = hashlib.sha256(text.encode()).hexdigest()
+            if digest != hello["context"]:
+                raise ValueError(
+                    "server engine context does not match this client's "
+                    "workloads/calibration/cost-model version — refusing "
+                    "to mix incompatible metrics")
+        self.memoize = True
+        self.stats = EngineStats(workloads=len(self.workloads))
+
+    # ---------------------------------------------------------------- wire
+    def _call(self, req: Dict[str, Any]) -> Dict[str, Any]:
+        with self._lock:
+            self._io.write(json.dumps(req, default=float).encode() + b"\n")
+            self._io.flush()
+            line = self._io.readline()
+        if not line:
+            raise ConnectionError("DSE service closed the connection")
+        out = json.loads(line)
+        if not out.get("ok", False):
+            raise RuntimeError(f"DSE service error: {out.get('error')}")
+        return out
+
+    def _remote_metrics(self, out: Dict[str, Any]) -> Dict[str, Any]:
+        return {k: np.asarray(out[k], np.float64)
+                for k in ("latency", "energy", "tops_w", "area")} | \
+            {"meta": out["meta"]}
+
+    def _evaluate_remote(self, genomes: np.ndarray, mode: Optional[str],
+                         canonical: Optional[np.ndarray]) -> Dict[str, Any]:
+        if self._service is not None:
+            fut = asyncio.run_coroutine_threadsafe(
+                self._service.evaluate(genomes, mode, canonical),
+                self._service._loop)
+            return fut.result()
+        req = {"op": "evaluate", "genomes": genomes.tolist(), "mode": mode}
+        if canonical is not None:
+            req["canonical"] = canonical.tolist()
+        return self._remote_metrics(self._call(req))
+
+    # ------------------------------------------------------ engine surface
+    def check_workloads(self, workloads: Sequence[str],
+                        calib: Optional[CalibrationTable] = None
+                        ) -> "DSEClient":
+        if list(workloads) != self.workloads:
+            raise ValueError(
+                f"service workloads {self.workloads} != caller workloads "
+                f"{list(workloads)}")
+        if calib is not None and calib != self.calib:
+            raise ValueError("caller calib differs from the service "
+                             "engine's calib — results would not match")
+        return self
+
+    def evaluate(self, genomes: np.ndarray, keep=None,
+                 mode: Optional[str] = None,
+                 canonical: Optional[np.ndarray] = None) -> Dict[str, Any]:
+        import time
+        t0 = time.perf_counter()
+        genomes = np.asarray(genomes, np.int64).reshape(-1, GENOME_LEN)
+        n, W = len(genomes), len(self.workloads)
+        area = genome_areas(genomes, self.calib)
+        keep_mask = np.ones(n, bool) if keep is None else \
+            np.asarray(keep(area), bool)
+        lat = np.zeros((n, W))
+        en = np.zeros((n, W))
+        tw = np.zeros((n, W))
+        self.stats.requests += n
+        skip = np.flatnonzero(~keep_mask)
+        lat[skip] = np.inf
+        en[skip] = np.inf
+        self.stats.skips += len(skip)
+        sel = np.flatnonzero(keep_mask)
+        meta: Dict[str, Any] = {"backend": self.backend,
+                                "mode": mode or self.mode,
+                                "requests": n, "skips": len(skip)}
+        if len(sel):
+            canon = None if canonical is None else \
+                np.asarray(canonical, np.int64).reshape(-1, GENOME_LEN)[sel]
+            res = self._evaluate_remote(genomes[sel], mode, canon)
+            lat[sel] = res["latency"]
+            en[sel] = res["energy"]
+            tw[sel] = res["tops_w"]
+            served = res["meta"]["store_hits"] + res["meta"]["inflight_merged"]
+            served = min(served, len(sel))
+            self.stats.hits += served
+            self.stats.misses += len(sel) - served
+            meta.update(res["meta"])
+        meta["hits"] = meta.get("store_hits", 0)
+        meta["misses"] = len(sel) - meta["hits"]
+        meta["hit_rate"] = meta["hits"] / max(n, 1)
+        self.stats.eval_seconds += time.perf_counter() - t0
+        return {"latency": lat, "energy": en, "tops_w": tw, "area": area,
+                "meta": meta}
+
+    def areas(self, genomes: np.ndarray) -> np.ndarray:
+        genomes = np.asarray(genomes, np.int64).reshape(-1, GENOME_LEN)
+        return genome_areas(genomes, self.calib)
+
+    def rescore(self, genomes: np.ndarray, oracle: bool = False,
+                mode: Optional[str] = None) -> Dict[str, Any]:
+        genomes = np.asarray(genomes, np.int64).reshape(-1, GENOME_LEN)
+        if self._service is not None:
+            # the engine's exact paths are reentrant; no need to queue
+            return self._service.engine.rescore(genomes, oracle=oracle,
+                                                mode=mode)
+        return self._remote_metrics(self._call(
+            {"op": "rescore", "genomes": genomes.tolist(), "oracle": oracle,
+             "mode": mode}))
+
+    def reserve_shapes(self, max_batch: int = 64) -> None:
+        if self._service is not None:
+            self._service.engine.reserve_shapes(max_batch)
+        else:
+            self._call({"op": "reserve_shapes", "max_batch": max_batch})
+
+    def search(self, seed_genomes, bracket: float, e_homo,
+               cfg: Optional[Dict[str, Any]] = None, seed: int = 0,
+               prefilter: bool = True) -> Iterator[Dict[str, Any]]:
+        """Stream a server-side GA: yields the service's generation /
+        done / error events (see ``DSEService.search``)."""
+        if self._service is not None:
+            agen = self._service.search(seed_genomes, bracket, e_homo,
+                                        cfg=cfg, seed=seed,
+                                        prefilter=prefilter)
+            loop = self._service._loop
+            while True:
+                try:
+                    ev = asyncio.run_coroutine_threadsafe(
+                        agen.__anext__(), loop).result()
+                except StopAsyncIteration:
+                    return
+                yield ev
+                if ev["event"] in ("done", "error"):
+                    return
+        req = {"op": "search", "bracket": bracket,
+               "e_homo": np.asarray(e_homo, np.float64).tolist(),
+               "cfg": cfg, "seed": seed, "prefilter": prefilter}
+        if seed_genomes is not None:
+            req["seed_genomes"] = np.asarray(seed_genomes,
+                                             np.int64).tolist()
+        with self._lock:
+            self._io.write(json.dumps(req, default=float).encode() + b"\n")
+            self._io.flush()
+            while True:
+                line = self._io.readline()
+                if not line:
+                    raise ConnectionError("service closed mid-search")
+                ev = json.loads(line)
+                if not ev.get("ok", False):
+                    raise RuntimeError(f"DSE service error: "
+                                       f"{ev.get('error')}")
+                ev.pop("ok", None)
+                yield ev
+                if ev["event"] in ("done", "error"):
+                    return
+
+    def service_stats(self) -> Dict[str, Any]:
+        if self._service is not None:
+            return {"service":
+                    self._service.stats.snapshot(self._service.max_batch),
+                    "engine": dataclasses.asdict(self._service.engine.stats),
+                    "store": self._service.engine.store.stats.snapshot(),
+                    "store_len": len(self._service.engine.store)}
+        return self._call({"op": "stats"})
+
+    def close(self) -> None:
+        if self._sock is not None:
+            try:
+                self._call({"op": "bye"})
+            except Exception:   # noqa: BLE001 - already closed
+                pass
+            self._io.close()
+            self._sock.close()
+            self._sock = None
+
+
+# =============================================================================
+# CLI: --smoke (the CI service job) and --serve (standalone TCP server)
+# =============================================================================
+
+def _smoke(tcp: bool = True, verbose: bool = True) -> Dict[str, Any]:
+    """Two concurrent GA clients against one coalescing service must
+    (1) match the same GAs run against local exact-backend engines
+    *bitwise*, (2) share fused dispatches (strictly fewer engine
+    dispatches than the two local runs combined, with at least one
+    multi-request batch), and (3) on a second run against the warm
+    persistent store, report a >50 % store hit rate.  Returns the
+    measured payload; raises AssertionError on any violation."""
+    import tempfile
+
+    from ..core.dse.ga import GAConfig, run_ga
+    from ..core.dse.store import MemoryLRUStore, SqliteStore, TieredStore
+    from ..core.dse.sweep import run_sweep
+
+    workloads = ["kan", "resnet50_int8"]
+    bracket = 200.0
+    cfg = GAConfig(population=16, generations=4, seed_top_k=8,
+                   early_stop=10_000)
+    seeds = (0, 1)
+
+    sweep_eng = EvalEngine(workloads, backend="exact")
+    sweep = run_sweep(workloads, samples_per_stratum=4, seed=0,
+                      brackets=(100.0, bracket), engine=sweep_eng)
+
+    # ---- baseline: each client against its own local exact engine --------
+    local, local_dispatches = {}, {}
+    for s in seeds:
+        eng = EvalEngine(workloads, backend="exact")
+        local[s] = run_ga(sweep, bracket, cfg, seed=s, engine=eng)
+        local_dispatches[s] = eng.stats.dispatches
+    rescore = EvalEngine(workloads).rescore(
+        local[seeds[0]].best_genome[None, :])
+
+    # ---- the service run: two concurrent clients, shared store -----------
+    tmp = tempfile.mkdtemp(prefix="dse_store_")
+    store_path = f"{tmp}/results.sqlite"
+
+    def fresh_service():
+        eng = EvalEngine(workloads, backend="exact",
+                         store=TieredStore(MemoryLRUStore(),
+                                           SqliteStore(store_path)))
+        return DSEService(eng, max_batch=256, max_wait_ms=100.0).start()
+
+    service = fresh_service()
+    served: Dict[int, Any] = {}
+    errors: List[BaseException] = []
+
+    def client_run(s):
+        try:
+            served[s] = run_ga(sweep, bracket, cfg, seed=s,
+                               engine=DSEClient(service=service))
+        except BaseException as exc:    # noqa: BLE001 - surfaced below
+            errors.append(exc)
+
+    threads = [threading.Thread(target=client_run, args=(s,)) for s in seeds]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errors:
+        raise errors[0]
+    st = service.stats
+    sum_local = sum(local_dispatches.values())
+
+    # (1) bitwise parity with the local exact runs (and the exact rescore)
+    for s in seeds:
+        assert served[s].best_fitness == local[s].best_fitness, \
+            f"seed {s}: served GA diverged from the local exact engine"
+        assert np.array_equal(served[s].best_genome, local[s].best_genome)
+        for k in ("latency", "energy", "tops_w"):
+            assert np.array_equal(served[s].best_metrics[k],
+                                  local[s].best_metrics[k]), (s, k)
+    assert np.array_equal(
+        served[seeds[0]].best_metrics["latency"], rescore["latency"][0]), \
+        "service metrics diverged from the local exact rescore"
+
+    # (2) cross-tenant coalescing actually happened
+    assert st.coalesced_batches >= 1, "no batch mixed the two clients"
+    assert st.engine_dispatches < sum_local, (
+        f"coalesced dispatches {st.engine_dispatches} not below the "
+        f"per-client sum {sum_local}")
+
+    if tcp:  # a TCP client sees the same bytes the in-process path returns
+        host, port = service.listen()
+        cli = DSEClient(address=(host, port))
+        g = local[seeds[0]].best_genome[None, :]
+        over_wire = cli.evaluate(g)
+        direct = asyncio.run_coroutine_threadsafe(
+            service.evaluate(g), service._loop).result()
+        for k in ("latency", "energy", "tops_w", "area"):
+            assert np.array_equal(over_wire[k], direct[k]), k
+        cli.close()
+    service.stop()
+
+    # (3) a fresh service on the warm persistent store is mostly hits
+    service2 = fresh_service()
+    warm = run_ga(sweep, bracket, cfg, seed=seeds[0],
+                  engine=DSEClient(service=service2))
+    st2 = service2.stats
+    warm_rate = st2.store_hits / max(st2.request_genomes, 1)
+    assert warm.best_fitness == local[seeds[0]].best_fitness
+    assert warm_rate > 0.5, f"warm-store hit rate {warm_rate:.0%} <= 50%"
+    service2.stop()
+
+    payload = {
+        "local_dispatches": local_dispatches,
+        "service_dispatches": st.engine_dispatches,
+        "coalesced_batches": st.coalesced_batches,
+        "batches": st.batches,
+        "batch_occupancy": st.occupancy(256),
+        "mean_queue_ms": st.mean_queue_ms(),
+        "warm_store_hit_rate": warm_rate,
+        "best_fitness": {s: served[s].best_fitness for s in seeds},
+    }
+    if verbose:
+        print(f"service-smoke: dispatches {st.engine_dispatches} < "
+              f"{sum_local} (local sum), {st.coalesced_batches} coalesced "
+              f"batches, warm-store hit rate {warm_rate:.0%}")
+    return payload
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: two concurrent GA clients must match "
+                         "local exact runs bitwise while sharing fused "
+                         "dispatches; exits 1 on violation")
+    ap.add_argument("--no-tcp", action="store_true",
+                    help="skip the TCP round-trip check in --smoke")
+    ap.add_argument("--serve", metavar="HOST:PORT",
+                    help="run a standalone TCP server on the given address")
+    ap.add_argument("--workloads", nargs="*",
+                    default=["kan", "resnet50_int8"])
+    ap.add_argument("--backend", default="exact")
+    ap.add_argument("--store", default=None,
+                    help="sqlite path for a persistent result store")
+    ap.add_argument("--max-batch", type=int, default=1024)
+    ap.add_argument("--max-wait-ms", type=float, default=10.0)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        try:
+            _smoke(tcp=not args.no_tcp)
+        except AssertionError as exc:
+            print(f"service-smoke FAILED: {exc}")
+            return 1
+        return 0
+    if args.serve:
+        from ..core.dse.store import MemoryLRUStore, SqliteStore, TieredStore
+        host, _, port = args.serve.rpartition(":")
+        store = None
+        if args.store:
+            store = TieredStore(MemoryLRUStore(), SqliteStore(args.store))
+        engine = EvalEngine(args.workloads, backend=args.backend,
+                            store=store)
+        service = DSEService(engine, max_batch=args.max_batch,
+                             max_wait_ms=args.max_wait_ms).start()
+        bound = service.listen(host or "127.0.0.1", int(port))
+        print(f"DSE service on {bound[0]}:{bound[1]} "
+              f"(workloads={engine.workloads}, backend={engine.backend})")
+        try:
+            threading.Event().wait()
+        except KeyboardInterrupt:
+            service.stop()
+        return 0
+    ap.print_help()
+    return 2
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,16 +1,21 @@
 """Batched serving engine: continuous-batching request scheduler over the
 prefill/decode steps.
 
-Requests enter a queue; the engine admits up to ``max_batch`` concurrent
-sequences, prefills new admissions, then decodes the live batch until
-completion — the standard continuous-batching control loop, single-host
-here, with the step functions already pjit-shardable for the production
-mesh.
+Requests enter a deque; the engine keeps an array of ``max_batch`` slots
+backed by one batch-wide KV cache.  Whenever slots are free and requests
+are queued it admits a wave — prefills the newcomers and scatters their
+caches into the freed slot rows — then decodes the full slot array one
+token at a time, retiring finished sequences individually so their slots
+are refilled on the next iteration instead of waiting for the whole
+batch to drain.  Decode always runs at the full ``(max_batch, 1)`` shape,
+so it compiles exactly once per engine.  Single-host here, with the step
+functions already pjit-shardable for the production mesh.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +47,7 @@ class ServeEngine:
         self.eos_id = eos_id
         self.prefill = jax.jit(make_prefill_step(cfg, max_len))
         self.decode = jax.jit(make_decode_step(cfg))
-        self.queue: List[Request] = []
+        self.queue: Deque[Request] = collections.deque()
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -50,39 +55,67 @@ class ServeEngine:
     def run(self) -> Dict[int, List[int]]:
         """Serve everything in the queue; returns rid -> generated tokens."""
         results: Dict[int, List[int]] = {}
-        while self.queue:
-            batch = [self.queue.pop(0) for _ in range(
-                min(self.max_batch, len(self.queue)))]
-            self._serve_batch(batch)
-            for r in batch:
-                results[r.rid] = r.generated
-        return results
+        slots: List[Optional[Request]] = [None] * self.max_batch
+        caches = None
+        pos = jnp.zeros((self.max_batch,), jnp.int32)
+        nxt = jnp.zeros((self.max_batch,), jnp.int32)
 
-    def _serve_batch(self, batch: List[Request]) -> None:
-        B = len(batch)
-        s_max = max(len(r.prompt) for r in batch)
-        toks = np.zeros((B, s_max), np.int32)
-        for i, r in enumerate(batch):
-            toks[i, -len(r.prompt):] = r.prompt  # left-pad
-        logits, caches = self.prefill(self.params, jnp.asarray(toks))
-        nxt = greedy_sample(logits)
-        pos = jnp.full((B,), s_max, jnp.int32)
-        live = np.ones(B, bool)
-        for i, r in enumerate(batch):
-            r.generated.append(int(nxt[i]))
-        steps = max(r.max_new_tokens for r in batch) - 1
-        for _ in range(steps):
+        def finished(r: Request, t: int) -> bool:
+            return (self.eos_id is not None and t == self.eos_id) or \
+                len(r.generated) >= r.max_new_tokens
+
+        def retire(i: int) -> None:
+            r = slots[i]
+            r.done = True
+            results[r.rid] = r.generated
+            slots[i] = None
+
+        while self.queue or any(s is not None for s in slots):
+            free = [i for i, s in enumerate(slots) if s is None]
+            if self.queue and free:
+                # ---- admission wave: prefill newcomers into free slots ----
+                wave, idx = [], []
+                for i in free:
+                    if not self.queue:
+                        break
+                    slots[i] = self.queue.popleft()
+                    wave.append(slots[i])
+                    idx.append(i)
+                s_max = max(len(r.prompt) for r in wave)
+                toks = np.zeros((len(wave), s_max), np.int32)
+                for j, r in enumerate(wave):
+                    toks[j, -len(r.prompt):] = r.prompt  # left-pad
+                logits, fresh = self.prefill(self.params, jnp.asarray(toks))
+                first = greedy_sample(logits)
+                if caches is None:
+                    caches = init_cache(self.cfg, self.max_batch, self.max_len)
+                sel = jnp.asarray(idx, jnp.int32)
+                caches = {
+                    # prefix caches batch on axis 0, repeated blocks on axis 1
+                    "prefix": jax.tree.map(lambda g, p: g.at[sel].set(p),
+                                           caches["prefix"], fresh["prefix"]),
+                    "blocks": jax.tree.map(lambda g, p: g.at[:, sel].set(p),
+                                           caches["blocks"], fresh["blocks"]),
+                }
+                nxt = nxt.at[sel].set(first)
+                pos = pos.at[sel].set(s_max)
+                for j, r in enumerate(wave):
+                    r.generated.append(int(first[j]))
+                    if finished(r, r.generated[-1]):
+                        retire(idx[j])
+                continue  # a 1-token request may have freed its slot already
+            # ---- one decode step over the full slot array ----
+            # Free slots carry stale cache/pos state; their logits are
+            # discarded and admission scatters over every leaf row, so the
+            # garbage never reaches a live request.
             logits, caches = self.decode(self.params, nxt[:, None], pos, caches)
             nxt = greedy_sample(logits)
             pos = pos + 1
-            for i, r in enumerate(batch):
-                if live[i]:
-                    t = int(nxt[i])
-                    r.generated.append(t)
-                    if (self.eos_id is not None and t == self.eos_id) or \
-                            len(r.generated) >= r.max_new_tokens:
-                        live[i] = False
-            if not live.any():
-                break
-        for r in batch:
-            r.done = True
+            for i, r in enumerate(slots):
+                if r is None:
+                    continue
+                t = int(nxt[i])
+                r.generated.append(t)
+                if finished(r, t):
+                    retire(i)
+        return results

@@ -1,0 +1,143 @@
+"""DSE evaluation service (PR 6): bitwise parity of service-served
+metrics vs the local engine (in-process and over the TCP front),
+cross-request coalescing / in-flight dedup accounting, the client's
+engine-interface contract (keep-prefilter, rescore, GA duck-typing),
+and streamed search events."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.dse.encoding import random_genomes
+from repro.core.dse.engine import EvalEngine, genome_areas
+from repro.serve.dse_service import DSEClient, DSEService
+
+WLS = ["kan"]
+METRICS = ("latency", "energy", "tops_w", "area")
+
+
+@pytest.fixture(scope="module")
+def service():
+    svc = DSEService(EvalEngine(WLS), max_batch=64, max_wait_ms=20.0)
+    svc.start()
+    yield svc
+    svc.stop()
+
+
+def _genomes(n=10, seed=5):
+    return random_genomes(np.random.default_rng(seed), n)
+
+
+def test_in_process_client_bitwise_parity(service):
+    g = _genomes()
+    local = EvalEngine(WLS).evaluate(g)
+    cl = DSEClient(service=service)
+    res = cl.evaluate(g)
+    for k in METRICS:
+        assert local[k].tobytes() == res[k].tobytes(), k
+    meta = res["meta"]
+    assert meta["requests"] == len(g)
+    for key in ("queue_ms", "batch_occupancy", "store_hits", "hit_rate",
+                "batches", "inflight_merged"):
+        assert key in meta
+    # repeat: everything served from the store, still bitwise identical
+    again = cl.evaluate(g)
+    assert again["meta"]["hit_rate"] == 1.0
+    for k in METRICS:
+        assert res[k].tobytes() == again[k].tobytes(), k
+
+
+def test_tcp_client_bitwise_parity(service):
+    g = _genomes(6, seed=6)
+    host, port = service.listen()
+    cl = DSEClient(address=(host, port))
+    try:
+        res = cl.evaluate(g)
+        local = EvalEngine(WLS).evaluate(g)
+        # JSON floats round-trip float64 exactly (shortest-repr), so the
+        # wire adds no error: the TCP bytes equal the local computation
+        for k in METRICS:
+            assert local[k].tobytes() == res[k].tobytes(), k
+        st = cl.service_stats()
+        assert st["service"]["requests"] >= 1
+    finally:
+        cl.close()
+
+
+def test_concurrent_tenants_share_dispatches(service):
+    g = _genomes(16, seed=7)
+    st = service.stats
+    d0, merged0, hits0 = (st.engine_dispatches, st.inflight_merged,
+                          st.store_hits)
+    barrier = threading.Barrier(2)
+    out, errs = {}, []
+
+    def tenant(i):
+        try:
+            barrier.wait()
+            out[i] = DSEClient(service=service).evaluate(g)
+        except Exception as e:  # pragma: no cover - surfaced below
+            errs.append(e)
+
+    threads = [threading.Thread(target=tenant, args=(i,)) for i in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    for k in METRICS:
+        assert out[0][k].tobytes() == out[1][k].tobytes(), k
+    # 16 unique genomes fit one engine chunk: exactly one fused dispatch
+    # serves BOTH tenants — the duplicate request rides the in-flight
+    # futures or the store, never the simulator
+    assert st.engine_dispatches - d0 <= 1
+    assert (st.inflight_merged - merged0) + (st.store_hits - hits0) >= len(g)
+
+
+def test_client_keep_prefilter_matches_local(service):
+    g = _genomes(12, seed=8)
+    med = float(np.median(genome_areas(g)))
+
+    def keep(areas):
+        return areas <= med
+
+    local = EvalEngine(WLS).evaluate(g, keep=keep)
+    res = DSEClient(service=service).evaluate(g, keep=keep)
+    for k in METRICS:
+        assert local[k].tobytes() == res[k].tobytes(), k
+    skipped = ~keep(genome_areas(g))
+    assert np.all(np.isinf(res["latency"][skipped]))
+    assert res["meta"]["requests"] == int((~skipped).sum())
+
+
+def test_client_rescore_matches_local(service):
+    g = _genomes(4, seed=9)
+    local = EvalEngine(WLS).rescore(g)
+    res = DSEClient(service=service).rescore(g)
+    for k in ("latency", "energy", "tops_w"):
+        assert local[k].tobytes() == res[k].tobytes(), k
+
+
+def test_search_streams_generations(service):
+    seeds = _genomes(8, seed=10)
+    bracket = 200.0
+    # a synthetic homogeneous baseline is enough to drive Eq. 8
+    e_homo = np.full(len(WLS), 1e12)
+    events = list(DSEClient(service=service).search(
+        seeds, bracket, e_homo,
+        cfg={"population": 8, "generations": 2, "seed_top_k": 4,
+             "early_stop": 10_000}, seed=0))
+    kinds = [e["event"] for e in events]
+    assert kinds[-1] == "done" and kinds[:-1] == ["generation"] * 3
+    for ev in events[:-1]:
+        assert ev["front_size"] == len(ev["front"]["points"])
+        assert all(len(p) == 3 for p in ev["front"]["points"])
+    res = events[-1]["result"]
+    assert res is None or "best_fitness" in res
+
+
+def test_client_requires_exactly_one_transport(service):
+    with pytest.raises(ValueError):
+        DSEClient()
+    with pytest.raises(ValueError):
+        DSEClient(service=service, address=("127.0.0.1", 1))
