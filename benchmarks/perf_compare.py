@@ -42,24 +42,39 @@ def _load(filename: str):
         return json.load(f)
 
 
+def _rank(data: dict, pr: int, name: str) -> tuple:
+    """Merge precedence of one trajectory file: the run timestamp it
+    records (``generated_unix``, stamped by ``perf_micro``'s writers —
+    newer run wins), then PR number, then filename.  A total order over
+    the candidate files, so two files carrying the same benchmark with
+    equal (or missing) timestamps still merge deterministically — the
+    higher-numbered PR wins — instead of depending on the directory
+    listing order ``os.listdir`` happens to return."""
+    ts = data.get("generated_unix")
+    ts = float(ts) if isinstance(ts, (int, float)) else float("-inf")
+    return (ts, pr, name)
+
+
 def merged_trajectory(smoke: bool):
     """Merge every ``BENCH_PR<N>[_smoke].json`` in the repo root, newest
-    entry winning per benchmark key.  Returns None when no file matches."""
+    entry winning per benchmark key (see ``_rank`` for what "newest"
+    means and how ties break).  Returns None when no file matches."""
     suffix = "_smoke" if smoke else ""
     pat = re.compile(rf"^BENCH_PR(\d+){suffix}\.json$")
     hits = []
     for name in os.listdir(REPO_ROOT):
         m = pat.match(name)
         if m:
-            hits.append((int(m.group(1)), name))
+            data = _load(name) or {}
+            hits.append((_rank(data, int(m.group(1)), name), name, data))
     if not hits:
         return None
+    hits.sort(key=lambda h: h[0])  # ascending rank: newest overwrites
     merged: dict = {"benchmarks": {}}
-    for _, name in sorted(hits):  # ascending PR number: newest overwrites
-        data = _load(name) or {}
+    for _, name, data in hits:
         merged.update({k: v for k, v in data.items() if k != "benchmarks"})
         merged["benchmarks"].update(data.get("benchmarks", {}))
-    merged["files"] = [name for _, name in sorted(hits)]
+    merged["files"] = [name for _, name, _ in hits]
     return merged
 
 

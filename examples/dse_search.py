@@ -2,6 +2,13 @@
 12-knob space -> per-area-budget GA refinement -> Pareto front.
 
   PYTHONPATH=src python examples/dse_search.py [--samples 24] [--budget 200]
+
+``--pipeline`` runs the §4 multi-seed study instead: per-seed stratified
+sweeps feeding fused (device-memo, single-dispatch) island-GA
+refinements across every area bracket, merged into one cumulative
+Pareto front on device:
+
+  PYTHONPATH=src python examples/dse_search.py --pipeline --seeds 0 1
 """
 import argparse
 import warnings
@@ -13,6 +20,45 @@ from repro.core.dse.engine import EvalEngine
 from repro.core.dse.ga import GAConfig, run_ga
 from repro.core.dse.pareto import pareto_front
 from repro.core.dse.sweep import run_sweep
+
+
+def run_pipeline_demo(args):
+    from repro.core.dse.pipeline import run_pipeline
+
+    def stage(e):
+        if e["stage"] == "sweep":
+            print(f"   seed {e['seed']}: swept {e['configs']} configs "
+                  f"({e['seconds']:.1f}s)")
+        elif e["stage"] == "refine":
+            print(f"   seed {e['seed']} @ {e['bracket']:5.0f} mm^2: "
+                  f"fitness {e['best_fitness']:+.3f} "
+                  f"({e['generations']} gens, {e['seconds']:.1f}s, "
+                  f"front {len(e['front']['points'])})"
+                  if not e.get("skipped") else
+                  f"   seed {e['seed']} @ {e['bracket']:5.0f} mm^2: skipped "
+                  f"(no homogeneous baseline)")
+        elif e["stage"] == "seed_done":
+            print(f"   seed {e['seed']}: drained {e['drained']} "
+                  f"device-scored rows to the store")
+
+    print(f"pipeline: seeds {args.seeds}, "
+          f"{args.samples}/stratum sweeps, population {args.population}")
+    res = run_pipeline(args.workloads, seeds=tuple(args.seeds),
+                       samples_per_stratum=args.samples,
+                       cfg=GAConfig(population=args.population,
+                                    generations=8, early_stop=4),
+                       on_stage=stage)
+    print(f"\ncumulative Pareto front: {len(res.front_points)} points "
+          f"({res.evaluated} genomes evaluated)")
+    for pt, g in list(zip(res.front_points, res.front_genomes))[:8]:
+        chip = decode(np.asarray(g))
+        print(f"   E={pt[0]*1e-6:9.1f}uJ  A={pt[1]:6.1f}mm2  "
+              f"L={pt[2]*1e3:8.2f}ms  ({len(chip.tiles)} tile types)")
+    for b in res.brackets:
+        best = res.best(b)
+        if best is not None:
+            print(f"   best @ {b:5.0f} mm^2: fitness "
+                  f"{best.best_fitness:+.3f}")
 
 
 def main():
@@ -27,7 +73,18 @@ def main():
                     help="search on the exact fused-mapper backend: the "
                          "sweep AND the GA score with bitwise-rescore-grade "
                          "metrics (no approximate/rescore gap)")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="run the §4 multi-seed fused pipeline (implies "
+                         "the exact backend) and print the cumulative "
+                         "cross-seed Pareto front")
+    ap.add_argument("--seeds", type=int, nargs="*", default=[0, 1],
+                    help="pipeline sweep seeds (with --pipeline)")
+    ap.add_argument("--population", type=int, default=64,
+                    help="pipeline GA population (with --pipeline)")
     args = ap.parse_args()
+    if args.pipeline:
+        run_pipeline_demo(args)
+        return
 
     # one cache-aware engine end to end: the GA re-scores sweep genomes
     # (its seed population) and its own elites for free

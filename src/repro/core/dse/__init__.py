@@ -35,16 +35,27 @@ engine:
                   documented simplifications the engine inherits: the
                   FIFO-eviction-free activation-cache model, and Eq. 3
                   split execution without the per-slice ragged remainder.
+* ``device_memo``— the device-resident genome memo: a fixed-size
+                  open-addressing hash of canonical-genome keys in device
+                  memory, probed and filled *inside* the jitted
+                  generation step; host store sync only at seed
+                  boundaries.
+* ``pipeline``  — ``run_pipeline``, the fused §4 study: per-seed
+                  stratified sweep → fused island-GA refinement per
+                  bracket (one dispatch each, threading the device memo)
+                  → device Pareto merge over (energy, area, latency).
 """
 from .encoding import Genome, decode, random_genomes, GENOME_LEN
 from .batch_eval import batch_evaluate, prepare_workload, prepare_configs
 from .engine import EvalEngine, EngineStats, genomes_to_configs, genome_areas
 from .pareto import pareto_front
 from .objective import iso_area_savings, fitness
+from .pipeline import PipelineResult, run_pipeline
 
 __all__ = [
     "Genome", "decode", "random_genomes", "GENOME_LEN",
     "batch_evaluate", "prepare_workload", "prepare_configs",
     "EvalEngine", "EngineStats", "genomes_to_configs", "genome_areas",
     "pareto_front", "iso_area_savings", "fitness",
+    "PipelineResult", "run_pipeline",
 ]

@@ -97,7 +97,7 @@ from ..workloads import build
 from .batch_eval import (_CHIP_KEYS, _TILE_KEYS, batch_evaluate,
                          prepare_configs, prepare_workload)
 from .encoding import (FIELDS_PER_TILE, GENOME_LEN, _TILE_FIELDS, decode)
-from .store import MemoryLRUStore, ResultStore
+from .store import MemoryLRUStore, ResultStore, TieredStore
 
 __all__ = ["EvalEngine", "EngineStats", "genomes_to_configs",
            "genome_areas", "canonical_genomes", "prepared_workload",
@@ -418,7 +418,7 @@ class EvalEngine:
                  batch: int = 1024, memoize: bool = True,
                  vectorized: bool = True, shard: bool = False,
                  aggressive_int4: bool = False, enable_fusion: bool = True,
-                 memo_max: int = 131_072, backend: str = "scan",
+                 memo_max: Optional[int] = None, backend: str = "scan",
                  exact_mapper: str = "batched", mode: str = "latency",
                  memo_limit: Optional[int] = None,
                  store: Optional[ResultStore] = None):
@@ -457,11 +457,12 @@ class EvalEngine:
         # name, accepted as an alias.  >= batch so entries stored in one
         # call can't evict each other.
         if memo_limit is not None:
-            if memo_max != 131_072:
+            if memo_max is not None:
                 raise ValueError("pass memo_max or its legacy alias "
                                  "memo_limit, not both")
             memo_max = memo_limit
-        self.memo_max = max(memo_max, batch)
+        explicit_cap = memo_max is not None
+        self.memo_max = max(memo_max if explicit_cap else 131_072, batch)
         # Caching policy lives behind the pluggable ResultStore interface
         # (dse.store): the default is the historical in-process LRU; pass
         # a TieredStore(MemoryLRUStore(), SqliteStore(path)) to accumulate
@@ -469,14 +470,37 @@ class EvalEngine:
         # bound to this engine's content context (workloads x calib x
         # flags x backend fidelity x cost-model version), so persistent
         # entries can never be served across incompatible engines.
-        self.store: ResultStore = \
-            store if store is not None else MemoryLRUStore(self.memo_max)
+        #
+        # An *explicit* memo_max combined with a caller-supplied store is
+        # applied to the store's in-memory LRU tier (re-capped eagerly);
+        # a store with no LRU tier to cap makes the combination an error
+        # rather than a silent no-op.
+        if store is None:
+            self.store: ResultStore = MemoryLRUStore(self.memo_max)
+        else:
+            self.store = store
+            if explicit_cap:
+                lru = store if isinstance(store, MemoryLRUStore) else (
+                    store.front if isinstance(store, TieredStore)
+                    and isinstance(store.front, MemoryLRUStore) else None)
+                if lru is None:
+                    raise ValueError(
+                        "memo_max cannot cap a store without an in-memory "
+                        "LRU tier — size the store yourself and drop "
+                        "memo_max, or wrap it in a TieredStore with a "
+                        "MemoryLRUStore front")
+                lru.resize(self.memo_max)
         self.store.bind(self.context_key())
         self._sharding = None
         if shard:
             self._sharding = self._make_sharding()
         self._shapes: set = set()   # batch sizes this engine has emitted
         self._shape_lock = threading.Lock()
+        # export_memo bulk views keyed on the LRU tier's mutation stamp
+        # (see _memo_stamp): a seed-boundary preload over an unchanged
+        # store costs O(1) host work instead of a full dict walk
+        self._export_cache: Dict[str, Tuple[tuple, Tuple[np.ndarray,
+                                                         np.ndarray]]] = {}
 
     def context_key(self) -> bytes:
         """Digest of everything a memoized metric row depends on besides
@@ -903,6 +927,87 @@ class EvalEngine:
                          "requests": len(genomes), "hits": 0,
                          "misses": len(genomes), "skips": 0,
                          "hit_rate": 0.0}}
+
+    # --------------------------------------------------- device-memo sync
+    def export_memo(self, mode: Optional[str] = None
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Bulk view of the store's in-memory tier for one schedule mode:
+        ``(canon (N, GENOME_LEN) int64, rows (N, 3, W) float64)`` in LRU
+        order — what ``dse.device_memo.memo_from_store`` preloads into
+        the device-resident table at a seed boundary.
+
+        Only the enumerable LRU tier exports (a persistent sqlite back
+        tier is content-addressed — its keys are digests, not genomes —
+        so its entries surface here only after promotion into the
+        front); an engine whose store has no in-memory tier exports
+        empty.  No stats or recency side effects.
+
+        Bulk views are cached per mode against the tier's mutation
+        stamp (accepted puts + evictions), so back-to-back exports over
+        an unchanged store — a pipeline replaying against a warm
+        persistent store — skip the dict walk.  Callers must treat the
+        returned arrays as read-only.
+        """
+        mode = self.mode if mode is None else mode
+        if mode not in SCHEDULE_MODES:
+            raise ValueError(f"mode {mode!r} not in {SCHEDULE_MODES}")
+        stamp = self._memo_stamp()
+        cached = self._export_cache.get(mode)
+        if stamp is not None and cached is not None and cached[0] == stamp:
+            return cached[1]
+        tag = mode.encode() + b":"
+        W = len(self.workloads)
+        d = self.store.lru_dict()
+        genomes: List[np.ndarray] = []
+        rows: List[np.ndarray] = []
+        for k, row in (list(d.items()) if d else ()):
+            if not k.startswith(tag):
+                continue
+            genomes.append(np.frombuffer(k[len(tag):], np.int64))
+            rows.append(np.stack([np.asarray(a, np.float64) for a in row]))
+        if not genomes:
+            out = (np.zeros((0, GENOME_LEN), np.int64),
+                   np.zeros((0, 3, W), np.float64))
+        else:
+            out = (np.asarray(genomes, np.int64),
+                   np.asarray(rows, np.float64))
+        if stamp is not None:
+            self._export_cache[mode] = (stamp, out)
+        return out
+
+    def _memo_stamp(self) -> Optional[tuple]:
+        """Mutation stamp of the store's enumerable LRU tier: changes
+        exactly when the tier's *membership* changes (accepted puts and
+        evictions; recency reorders don't count — export order is not
+        load-bearing, every consumer is order-independent).  None when
+        the tier keeps no stats, which disables the export cache."""
+        front = getattr(self.store, "front", self.store)
+        stats = getattr(front, "stats", None)
+        if stats is None:
+            return None
+        return (id(front), stats.puts, stats.evictions)
+
+    def import_memo(self, canon: np.ndarray, rows: np.ndarray,
+                    mode: Optional[str] = None) -> int:
+        """Offer drained device-memo entries to the host store
+        (put-if-absent; a persistent tier makes them durable).  ``canon``:
+        (N, GENOME_LEN) canonical genomes; ``rows``: (N, 3, W) metric
+        rows, bitwise the values ``evaluate`` would have stored.  Returns
+        the number of rows offered."""
+        mode = self.mode if mode is None else mode
+        if mode not in SCHEDULE_MODES:
+            raise ValueError(f"mode {mode!r} not in {SCHEDULE_MODES}")
+        tag = mode.encode() + b":"
+        canon = np.asarray(canon, np.int64).reshape(-1, GENOME_LEN)
+        rows = np.asarray(rows, np.float64)
+        if rows.shape[:1] != (len(canon),) or rows.ndim != 3 \
+                or rows.shape[1] != 3:
+            raise ValueError(f"rows shape {rows.shape} does not match "
+                             f"{len(canon)} genomes x (3, W)")
+        for g, r in zip(canon, rows):
+            self.store.put(tag + self._key(g),
+                           (r[0].copy(), r[1].copy(), r[2].copy()))
+        return len(canon)
 
     def reserve_shapes(self, max_batch: int = 64) -> None:
         """Pre-register the search-loop batch buckets in the emitted-shape

@@ -109,15 +109,35 @@ def run_ga(sweep: SweepResult, bracket: float,
     after every scored population — ``gen`` 0 for the seed population,
     then 1..N — with the raw genomes, their Eq. 8 fitness, and the
     metric arrays.  The evaluation service streams Pareto-front updates
-    from it; it must not mutate its arguments."""
-    if loop not in ("device", "host"):
-        raise ValueError(f"loop {loop!r} not in ('device', 'host')")
+    from it; it must not mutate its arguments.
+
+    ``loop="fused"`` runs the whole refinement as ONE jitted dispatch
+    against the device-resident memo (``ga_device.run_ga_fused``,
+    single island): seeded runs are genome-for-genome equal to
+    ``loop="device"`` (pinned by tests/test_pipeline.py) without the
+    per-generation host round trip; the engine store syncs only at the
+    call boundary.  Requires a local exact engine; ``on_generation``
+    can't fire from inside one dispatch, so it is rejected — use
+    ``loop="device"`` for per-generation streaming, or the §4 pipeline's
+    per-stage hook."""
+    if loop not in ("device", "host", "fused"):
+        raise ValueError(f"loop {loop!r} not in ('device', 'host', 'fused')")
     if loop == "device":
         from .ga_device import run_ga_device
         return run_ga_device(sweep, bracket, cfg, seed=seed, calib=calib,
                              verbose=verbose, engine=engine,
                              prefilter=prefilter,
                              on_generation=on_generation)
+    if loop == "fused":
+        if on_generation is not None:
+            raise ValueError(
+                "loop='fused' runs the whole refinement as one dispatch — "
+                "per-generation hooks can't fire; use loop='device' or "
+                "run_pipeline(on_stage=...)")
+        from .ga_device import run_ga_fused
+        fused = run_ga_fused(sweep, bracket, cfg, seed=seed, calib=calib,
+                             verbose=verbose, engine=engine, islands=1)
+        return None if fused is None else fused.result
     engine = (engine.check_workloads(sweep.workloads, calib)
               if engine is not None else EvalEngine(sweep.workloads, calib))
     rng = np.random.default_rng(seed + int(bracket))
@@ -130,8 +150,12 @@ def run_ga(sweep: SweepResult, bracket: float,
     # ---- seed population: top-k sweep individuals in this bracket ----------
     fit_sweep = sweep.fitness(cfg.alpha)
     in_b = np.nonzero((sweep.bracket == bracket) & np.isfinite(fit_sweep))[0]
+    # seed_top_k may exceed the population: keep the fittest `population`
+    # (the fill loop below never truncated an already-oversized seed set,
+    # so generation 0 silently ran over-populated on the host loop and
+    # broke the fused kernel's fixed shapes)
     order = in_b[np.argsort(-fit_sweep[in_b])][:cfg.seed_top_k]
-    pop = sweep.genomes[order].copy()
+    pop = sweep.genomes[order].copy()[:cfg.population]
     while len(pop) < cfg.population:
         fill = random_genomes(rng, cfg.population - len(pop),
                               family="hetero_bls" if rng.random() < 0.5 else None)

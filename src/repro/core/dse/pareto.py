@@ -6,16 +6,30 @@ from typing import Sequence
 
 import numpy as np
 
-__all__ = ["pareto_front", "pareto_mask"]
+__all__ = ["pareto_front", "pareto_mask", "pareto_mask_device"]
 
 
 def pareto_mask(points: np.ndarray) -> np.ndarray:
     """Boolean mask of non-dominated rows.  ``points``: (N, D), lower is
     better on every column.  O(N^2) but N is the finalist set, not the
-    sweep."""
+    sweep.
+
+    Bitwise-identical rows are mutually non-dominating, so without a
+    dedupe every copy would survive — and cumulative fronts (the
+    service's streamed Pareto updates, the pipeline's cross-seed merge)
+    would grow with each repeated candidate.  Only the first copy of a
+    duplicate row is kept.
+    """
     pts = np.asarray(points, dtype=np.float64)
     n = len(pts)
     mask = np.ones(n, dtype=bool)
+    if n == 0:
+        return mask
+    # keep-first dedupe before the dominance loop
+    _, first = np.unique(pts, axis=0, return_index=True)
+    keep_first = np.zeros(n, dtype=bool)
+    keep_first[first] = True
+    mask &= keep_first
     for i in range(n):
         if not mask[i]:
             continue
@@ -23,6 +37,27 @@ def pareto_mask(points: np.ndarray) -> np.ndarray:
         if np.any(dominates & mask):
             mask[i] = False
     return mask
+
+
+def pareto_mask_device(points) -> "jnp.ndarray":
+    """``pareto_mask`` as a vectorized jnp kernel — the pipeline's
+    device-side front merge.  Same semantics: keep-first dedupe of
+    bitwise-identical rows, then dominance (a row is dropped iff some
+    row is <= on every column and < on at least one).  O(N^2) memory,
+    fine for finalist-set sizes; traceable under jit."""
+    import jax.numpy as jnp   # deferred: keep the numpy path jax-free
+
+    pts = jnp.asarray(points, jnp.float64)
+    n = pts.shape[0]
+    if n == 0:
+        return jnp.ones((0,), bool)
+    eq = jnp.all(pts[:, None, :] == pts[None, :, :], axis=2)      # [i, j]
+    earlier = jnp.arange(n)[None, :] < jnp.arange(n)[:, None]     # j < i
+    dup = jnp.any(eq & earlier, axis=1)
+    le = jnp.all(pts[None, :, :] <= pts[:, None, :], axis=2)      # j <= i
+    lt = jnp.any(pts[None, :, :] < pts[:, None, :], axis=2)       # j < i somewhere
+    dominated = jnp.any(le & lt, axis=1)
+    return ~dup & ~dominated
 
 
 def pareto_front(points: np.ndarray) -> np.ndarray:

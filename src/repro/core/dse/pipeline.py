@@ -1,0 +1,224 @@
+"""The fused §4 multi-seed pipeline: sweep seeding → per-seed GA
+refinement → Pareto merge, with device-resident memo state between
+stages.
+
+MOSAIC's Stage-1+2 study (paper §4.5) is per seed: a stratified random
+sweep seeds one GA refinement per area bracket, and the per-bracket
+winners across seeds merge into one energy/area/latency Pareto front.
+``run_pipeline`` runs that whole study with the host involved only at
+stage boundaries:
+
+* Stage 1 per seed is ``sweep.run_sweep`` on a shared exact engine —
+  scored batches land in the engine's host store, so repeated genomes
+  across seeds (and across pipeline runs sharing a persistent store)
+  are free.
+* At each seed boundary the store's in-memory tier is loaded into a
+  device-resident memo table (``device_memo.memo_from_store``) ONCE;
+  every Stage-2 refinement of that seed then runs as one fused
+  dispatch per bracket (``ga_device.run_ga_fused`` with
+  ``store_sync=False``), threading the memo table bracket-to-bracket
+  so later brackets hit earlier brackets' evaluations without a host
+  round trip.  After the last bracket the memo drains back to the
+  store (``device_memo.drain_to_store``) — the device→host half of
+  the boundary sync.
+* The Pareto merge is the device kernel ``pareto.pareto_mask_device``
+  over (mean energy, area, mean latency) of every valid refined
+  candidate — the same objective columns the evaluation service
+  streams — keeping genomes aligned with surviving points.
+
+Scale-out: with ``islands=None`` each refinement becomes an
+island-model GA over the local device mesh (one island per device,
+ring migration via collective permute — ``launch.mesh
+.island_sharding``); on a single device it falls back to one panmictic
+island, whose seeded genome stream is bitwise that of
+``run_ga(loop="device")`` (pinned by tests/test_pipeline.py).
+
+``on_stage`` streams progress: called after every completed stage with
+an event dict carrying the stage name, seed/bracket, wall seconds, and
+the *cumulative* Pareto front so far — the evaluation service's
+pipeline endpoint forwards these to clients as they happen.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
+from .device_memo import drain_to_store, memo_from_store
+from .encoding import GENOME_LEN
+from .engine import EvalEngine
+from .ga import GAConfig, GAResult
+from .ga_device import run_ga_fused
+from .objective import AREA_BRACKETS
+from .pareto import pareto_mask_device
+from .sweep import SweepResult, run_sweep
+
+__all__ = ["PipelineResult", "run_pipeline"]
+
+
+@dataclasses.dataclass
+class PipelineResult:
+    """Everything the §4 study produces, merged across seeds."""
+
+    workloads: List[str]
+    seeds: List[int]
+    brackets: List[float]
+    sweeps: Dict[int, SweepResult]
+    # {seed: {bracket: GAResult}} — brackets without a homogeneous
+    # baseline in that seed's sweep are absent (run_ga contract)
+    results: Dict[int, Dict[float, GAResult]]
+    front_points: np.ndarray     # (F, 3) mean energy pJ, area mm^2, mean lat s
+    front_genomes: np.ndarray    # (F, GENOME_LEN) aligned with front_points
+    evaluated: int               # genome evaluations across all GA stages
+    stage_seconds: Dict[str, float]   # {"sweep": ..., "refine": ..., "merge": ...}
+
+    def best(self, bracket: float) -> Optional[GAResult]:
+        """Across seeds, the highest-fitness refinement at one bracket."""
+        cands = [r[bracket] for r in self.results.values() if bracket in r]
+        if not cands:
+            return None
+        return max(cands, key=lambda r: r.best_fitness)
+
+
+def _valid_rows(metrics: Dict[str, np.ndarray]) -> np.ndarray:
+    lat, en = metrics["latency"], metrics["energy"]
+    ok = np.isfinite(lat).all(axis=1) & (lat > 0).all(axis=1)
+    return ok & np.isfinite(en).all(axis=1)
+
+
+def _merge_front(front_pts: np.ndarray, front_genomes: np.ndarray,
+                 pop: np.ndarray, metrics: Dict[str, np.ndarray]
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """Fold one refined population into the cumulative front (device
+    dominance kernel; keep-first dedupe favours the incumbent front)."""
+    valid = _valid_rows(metrics)
+    if not valid.any():
+        return front_pts, front_genomes
+    pts = np.stack([metrics["energy"][valid].mean(axis=1),
+                    metrics["area"][valid],
+                    metrics["latency"][valid].mean(axis=1)], axis=1)
+    front_pts = np.concatenate([front_pts, pts])
+    front_genomes = np.concatenate(
+        [front_genomes, np.asarray(pop, np.int64)[valid]])
+    mask = np.asarray(pareto_mask_device(front_pts))
+    return front_pts[mask], front_genomes[mask]
+
+
+def run_pipeline(workloads: Sequence[str], seeds: Sequence[int] = (0, 1, 2),
+                 brackets: Sequence[float] = AREA_BRACKETS,
+                 samples_per_stratum: int = 64,
+                 cfg: Optional[GAConfig] = None,
+                 calib: CalibrationTable = DEFAULT_CALIB,
+                 engine: Optional[EvalEngine] = None,
+                 islands: Optional[int] = None, migrate_every: int = 5,
+                 migrate_k: int = 2, memo_capacity: int = 1 << 15,
+                 verbose: bool = False,
+                 on_stage: Optional[Callable[[Dict[str, Any]], None]] = None
+                 ) -> PipelineResult:
+    """Run the full multi-seed pipeline (see module docstring).
+
+    ``engine`` must be a local exact engine when given (the fused
+    refinement stages the search scan itself); by default one is built
+    and shared across every stage, so its store accumulates the whole
+    study.  ``cfg`` applies to every refinement; ``islands=None``
+    scales each refinement over the local device mesh when the
+    population divides evenly (single panmictic island otherwise).
+
+    ``on_stage(event)`` fires after each stage with
+
+    * ``{"stage": "sweep", "seed": s, "configs": n, "seconds": dt}``
+    * ``{"stage": "refine", "seed": s, "bracket": b, "seconds": dt,
+      "best_fitness": f, "generations": g, "front": {"points": (F, 3)
+      array, "genomes": (F, GENOME_LEN) array}}`` — the cumulative
+      front after merging this stage (ordered by mean energy)
+    * ``{"stage": "seed_done", "seed": s, "drained": n}`` after the
+      seed's memo drains back to the store
+
+    and must not mutate its arguments.
+    """
+    cfg = cfg or GAConfig()
+    engine = (engine.check_workloads(workloads, calib)
+              if engine is not None
+              else EvalEngine(workloads, calib, backend="exact"))
+    if not isinstance(engine, EvalEngine):
+        raise ValueError("run_pipeline needs a local EvalEngine — the fused "
+                         "refinement cannot run over a remote client")
+    if engine.backend != "exact":
+        raise ValueError("run_pipeline requires backend='exact'; got "
+                         f"{engine.backend!r}")
+
+    front_pts = np.zeros((0, 3))
+    front_genomes = np.zeros((0, GENOME_LEN), np.int64)
+    sweeps: Dict[int, SweepResult] = {}
+    results: Dict[int, Dict[float, GAResult]] = {}
+    evaluated = 0
+    secs = {"sweep": 0.0, "refine": 0.0, "merge": 0.0}
+
+    def emit(ev: Dict[str, Any]) -> None:
+        if on_stage is not None:
+            on_stage(ev)
+
+    for s in seeds:
+        t0 = time.perf_counter()
+        swp = run_sweep(workloads, samples_per_stratum, seed=s, calib=calib,
+                        brackets=brackets, verbose=verbose, engine=engine)
+        dt = time.perf_counter() - t0
+        secs["sweep"] += dt
+        sweeps[s] = swp
+        emit({"stage": "sweep", "seed": s, "configs": len(swp.genomes),
+              "seconds": dt})
+
+        # seed boundary, host -> device: ONE memo load per seed; the
+        # per-bracket refinements below thread the table forward with
+        # store_sync=False so no host sync happens between brackets
+        memo = memo_from_store(engine, memo_capacity)
+        results[s] = {}
+        for b in brackets:
+            t0 = time.perf_counter()
+            fused = run_ga_fused(swp, b, cfg, seed=s, calib=calib,
+                                 verbose=verbose, engine=engine,
+                                 islands=islands,
+                                 migrate_every=migrate_every,
+                                 migrate_k=migrate_k, memo=memo,
+                                 store_sync=False)
+            dt = time.perf_counter() - t0
+            secs["refine"] += dt
+            if fused is None:
+                emit({"stage": "refine", "seed": s, "bracket": b,
+                      "seconds": dt, "skipped": "no homogeneous baseline"})
+                continue
+            memo = fused.memo
+            results[s][b] = fused.result
+            evaluated += fused.result.evaluated
+
+            t0 = time.perf_counter()
+            front_pts, front_genomes = _merge_front(
+                front_pts, front_genomes, fused.population,
+                fused.pop_metrics)
+            order = np.argsort(front_pts[:, 0])
+            front_pts = front_pts[order]
+            front_genomes = front_genomes[order]
+            secs["merge"] += time.perf_counter() - t0
+            emit({"stage": "refine", "seed": s, "bracket": b, "seconds": dt,
+                  "best_fitness": fused.result.best_fitness,
+                  "generations": fused.generations_run,
+                  "front": {"points": front_pts.copy(),
+                            "genomes": front_genomes.copy()}})
+            if verbose:
+                print(f"[pipeline seed {s}] bracket {b:.0f}mm2: "
+                      f"best={fused.result.best_fitness:+.4f}, "
+                      f"front size {len(front_pts)}")
+
+        # seed boundary, device -> host: drain the memo once
+        drained = drain_to_store(memo, engine)
+        emit({"stage": "seed_done", "seed": s, "drained": drained})
+
+    return PipelineResult(
+        workloads=list(workloads), seeds=list(seeds),
+        brackets=[float(b) for b in brackets], sweeps=sweeps,
+        results=results, front_points=front_pts,
+        front_genomes=front_genomes, evaluated=evaluated,
+        stage_seconds=secs)

@@ -160,6 +160,17 @@ class MemoryLRUStore(_Bindable):
     def peek(self, key: bytes) -> bool:
         return key in self.data
 
+    def resize(self, max_entries: int) -> None:
+        """Re-cap the LRU, eagerly evicting least-recently-touched
+        entries when the new cap is smaller.  The engine applies an
+        explicit ``memo_max`` to a caller-supplied store through this
+        (previously ``memo_max`` was silently ignored with ``store=``)."""
+        with self._lock:
+            self.max_entries = max(int(max_entries), 1)
+            while len(self.data) > self.max_entries:
+                self.data.pop(next(iter(self.data)))
+                self.stats.evictions += 1
+
     def __len__(self) -> int:
         return len(self.data)
 

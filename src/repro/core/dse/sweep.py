@@ -26,7 +26,7 @@ from .encoding import FAMILIES, decode, random_genomes
 from .engine import EvalEngine
 from .objective import ALPHA, AREA_BRACKETS, area_bracket
 
-__all__ = ["SweepResult", "run_sweep", "evaluate_genomes",
+__all__ = ["SweepResult", "run_sweep", "run_sweeps", "evaluate_genomes",
            "evaluate_genomes_reference"]
 
 
@@ -177,3 +177,24 @@ def run_sweep(workloads: Sequence[str], samples_per_stratum: int = 64,
                        family=family, bracket=bracket, area=m["area"],
                        latency=m["latency"], energy=m["energy"],
                        tops_w=m["tops_w"])
+
+
+def run_sweeps(workloads: Sequence[str], seeds: Sequence[int] = (0, 1, 2),
+               samples_per_stratum: int = 64,
+               calib: CalibrationTable = DEFAULT_CALIB,
+               brackets: Sequence[float] = AREA_BRACKETS,
+               verbose: bool = False,
+               engine: Optional[EvalEngine] = None,
+               exact: bool = False) -> Dict[int, SweepResult]:
+    """The paper's multi-seed Stage 1: one stratified sweep per seed,
+    sharing one engine (and hence one memo/store — repeated genomes
+    across seeds are free).  Returns ``{seed: SweepResult}`` in seed
+    order; ``dse.pipeline.run_pipeline`` is the fused Stage-1+2+merge
+    frontend over this."""
+    engine = (engine.check_workloads(workloads, calib)
+              if engine is not None
+              else EvalEngine(workloads, calib,
+                              backend="exact" if exact else "scan"))
+    return {s: run_sweep(workloads, samples_per_stratum, seed=s, calib=calib,
+                         brackets=brackets, verbose=verbose, engine=engine)
+            for s in seeds}

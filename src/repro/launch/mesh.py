@@ -17,7 +17,8 @@ from __future__ import annotations
 import jax
 
 __all__ = ["make_production_mesh", "make_mesh_for_devices",
-           "mesh_axis_kwargs", "candidate_sharding", "population_sharding"]
+           "mesh_axis_kwargs", "candidate_sharding", "population_sharding",
+           "island_sharding", "default_islands"]
 
 
 def mesh_axis_kwargs(n_axes: int) -> dict:
@@ -58,6 +59,36 @@ def population_sharding():
     must be a mesh-size multiple or the device loop falls back to a
     single-device placement (it checks before placing)."""
     return candidate_sharding()
+
+
+def island_sharding(n_islands: int):
+    """Sharding for the island-model GA (``core.dse.ga_device`` fused
+    loop): the population is carried flat as (P, GENOME_LEN) but is
+    logically (islands, P/islands, GENOME_LEN), and sharding the leading
+    axis places one contiguous block of islands per device.  Inside the
+    jitted refinement loop the ring migration is a ``jnp.roll`` over the
+    island axis — XLA lowers a roll of a sharded leading axis to a
+    collective permute around the device ring, so migrants move
+    device-to-device without a host hop.  Returns ``None`` on a single
+    device or when ``n_islands`` doesn't divide over the mesh (the
+    caller falls back to single-device placement — same numbers, no
+    collectives)."""
+    devs = jax.devices()
+    if len(devs) <= 1 or int(n_islands) % len(devs) != 0:
+        return None
+    mesh = jax.make_mesh((len(devs),), ("islands",), **mesh_axis_kwargs(1))
+    return jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec("islands"))
+
+
+def default_islands(population: int) -> int:
+    """Island count the fused GA defaults to: one island per local device
+    when the population splits evenly, else a single panmictic island
+    (which preserves the host-memo loop's exact genome stream)."""
+    ndev = len(jax.devices())
+    if ndev > 1 and population % ndev == 0 and population // ndev >= 2:
+        return ndev
+    return 1
 
 
 def make_production_mesh(*, multi_pod: bool = False):

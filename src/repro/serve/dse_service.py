@@ -44,9 +44,16 @@ makes the service a cross-run result cache: a repeated study is
 mostly store hits, and concurrent services sharing one sqlite file
 accumulate results safely (first-write-wins; see ``dse.store``).
 
+``search`` streams one GA; the ``pipeline`` op streams the whole fused
+§4 study (``dse.pipeline.run_pipeline``: stratified sweeps → island-GA
+refinements against the device-resident memo → device Pareto merge) as
+per-stage events, since its refinements never surface per-genome
+requests to coalesce.
+
 ``python -m repro.serve.dse_service --smoke`` is the CI smoke: two
 concurrent GA clients against one service must match local exact-backend
-runs bitwise while sharing fused dispatches; a second warm-store run
+runs bitwise while sharing fused dispatches; the served pipeline must
+match a local ``run_pipeline`` bitwise; a second warm-store run
 must report a >50 % store hit rate.  ``--serve HOST:PORT`` runs a
 standalone TCP server.
 """
@@ -439,6 +446,78 @@ class DSEService:
                 break
         await worker
 
+    # ------------------------------------------------------------- pipeline
+    async def pipeline(self, seeds: Sequence[int] = (0, 1, 2),
+                       brackets: Optional[Sequence[float]] = None,
+                       samples_per_stratum: int = 64,
+                       cfg: Optional[Dict[str, Any]] = None,
+                       islands: Optional[int] = None,
+                       migrate_every: int = 5, migrate_k: int = 2):
+        """Run the fused §4 multi-seed pipeline (``dse.pipeline
+        .run_pipeline``) server-side over the service engine, streaming
+        per-stage events as stages complete: the ``run_pipeline``
+        ``on_stage`` payloads (sweep / refine / seed_done, with the
+        cumulative Pareto front JSON-ified) followed by ``{"event":
+        "done", "result": ...}`` carrying the merged front, per-seed
+        per-bracket GA results, and stage wall-times.
+
+        Unlike ``search`` — whose per-generation scoring flows through
+        the coalescing queue — the pipeline's refinements run against
+        the device-resident memo and never surface per-genome requests,
+        so the whole run executes on the dispatch executor: stages
+        serialize with coalesced evaluate batches (the engine is shared
+        state), and concurrent tenants resume between runs.  Requires
+        the service engine to be a local ``backend="exact"`` one.
+        """
+        from ..core.dse.ga import GAConfig
+        from ..core.dse.objective import AREA_BRACKETS
+        from ..core.dse.pipeline import run_pipeline
+        queue: asyncio.Queue = asyncio.Queue()
+        loop = self._loop
+        brackets = tuple(AREA_BRACKETS if brackets is None else brackets)
+
+        def emit(ev):
+            loop.call_soon_threadsafe(queue.put_nowait, ev)
+
+        def on_stage(ev):
+            out = dict(ev)
+            out["event"] = "stage"
+            front = out.get("front")
+            if front is not None:
+                out["front"] = {"points": front["points"].tolist(),
+                                "genomes": front["genomes"].tolist()}
+            emit(out)
+
+        def _run():
+            try:
+                res = run_pipeline(
+                    self.engine.workloads, seeds=tuple(seeds),
+                    brackets=brackets,
+                    samples_per_stratum=samples_per_stratum,
+                    cfg=GAConfig(**(cfg or {})), engine=self.engine,
+                    islands=islands, migrate_every=migrate_every,
+                    migrate_k=migrate_k, on_stage=on_stage)
+                emit({"event": "done", "result": {
+                    "workloads": res.workloads, "seeds": res.seeds,
+                    "brackets": res.brackets,
+                    "front": {"points": res.front_points.tolist(),
+                              "genomes": res.front_genomes.tolist()},
+                    "results": {str(s): {str(b): _ga_result_json(r)
+                                         for b, r in by_b.items()}
+                                for s, by_b in res.results.items()},
+                    "evaluated": res.evaluated,
+                    "stage_seconds": res.stage_seconds}})
+            except Exception as exc:    # noqa: BLE001 - streamed to caller
+                emit({"event": "error", "error": repr(exc)})
+
+        worker = loop.run_in_executor(self._executor, _run)
+        while True:
+            ev = await queue.get()
+            yield ev
+            if ev["event"] in ("done", "error"):
+                break
+        await worker
+
     # ------------------------------------------------------------ TCP front
     def _hello(self) -> Dict[str, Any]:
         eng = self.engine
@@ -497,6 +576,20 @@ class DSEService:
                             np.asarray(req["e_homo"], np.float64),
                             cfg=req.get("cfg"), seed=int(req.get("seed", 0)),
                             prefilter=bool(req.get("prefilter", True)))
+                        async for ev in agen:
+                            send({"ok": True, **ev})
+                            await writer.drain()
+                        continue
+                    elif op == "pipeline":
+                        agen = self.pipeline(
+                            seeds=tuple(req.get("seeds", (0, 1, 2))),
+                            brackets=req.get("brackets"),
+                            samples_per_stratum=int(
+                                req.get("samples_per_stratum", 64)),
+                            cfg=req.get("cfg"),
+                            islands=req.get("islands"),
+                            migrate_every=int(req.get("migrate_every", 5)),
+                            migrate_k=int(req.get("migrate_k", 2)))
                         async for ev in agen:
                             send({"ok": True, **ev})
                             await writer.drain()
@@ -731,6 +824,53 @@ class DSEClient:
                 if ev["event"] in ("done", "error"):
                     return
 
+    def pipeline(self, seeds: Sequence[int] = (0, 1, 2),
+                 brackets: Optional[Sequence[float]] = None,
+                 samples_per_stratum: int = 64,
+                 cfg: Optional[Dict[str, Any]] = None,
+                 islands: Optional[int] = None, migrate_every: int = 5,
+                 migrate_k: int = 2) -> Iterator[Dict[str, Any]]:
+        """Stream the server-side fused §4 pipeline: yields the
+        service's stage / done / error events (see
+        ``DSEService.pipeline``)."""
+        if self._service is not None:
+            agen = self._service.pipeline(
+                seeds=seeds, brackets=brackets,
+                samples_per_stratum=samples_per_stratum, cfg=cfg,
+                islands=islands, migrate_every=migrate_every,
+                migrate_k=migrate_k)
+            loop = self._service._loop
+            while True:
+                try:
+                    ev = asyncio.run_coroutine_threadsafe(
+                        agen.__anext__(), loop).result()
+                except StopAsyncIteration:
+                    return
+                yield ev
+                if ev["event"] in ("done", "error"):
+                    return
+        req = {"op": "pipeline", "seeds": list(seeds),
+               "samples_per_stratum": samples_per_stratum, "cfg": cfg,
+               "islands": islands, "migrate_every": migrate_every,
+               "migrate_k": migrate_k}
+        if brackets is not None:
+            req["brackets"] = [float(b) for b in brackets]
+        with self._lock:
+            self._io.write(json.dumps(req, default=float).encode() + b"\n")
+            self._io.flush()
+            while True:
+                line = self._io.readline()
+                if not line:
+                    raise ConnectionError("service closed mid-pipeline")
+                ev = json.loads(line)
+                if not ev.get("ok", False):
+                    raise RuntimeError(f"DSE service error: "
+                                       f"{ev.get('error')}")
+                ev.pop("ok", None)
+                yield ev
+                if ev["event"] in ("done", "error"):
+                    return
+
     def service_stats(self) -> Dict[str, Any]:
         if self._service is not None:
             return {"service":
@@ -847,6 +987,29 @@ def _smoke(tcp: bool = True, verbose: bool = True) -> Dict[str, Any]:
         for k in ("latency", "energy", "tops_w", "area"):
             assert np.array_equal(over_wire[k], direct[k]), k
         cli.close()
+
+    # (2b) the server-side fused pipeline streams stages and matches a
+    # local run_pipeline bitwise (deterministic end to end)
+    from ..core.dse.pipeline import run_pipeline
+    pipe_kw = dict(seeds=(0,), brackets=(100.0, bracket),
+                   samples_per_stratum=4,
+                   cfg=dict(population=16, generations=3, seed_top_k=8,
+                            early_stop=10_000))
+    events = list(DSEClient(service=service).pipeline(**pipe_kw))
+    assert events[-1]["event"] == "done", events[-1]
+    stages = [e["stage"] for e in events if e["event"] == "stage"]
+    assert "sweep" in stages and "refine" in stages and \
+        "seed_done" in stages, stages
+    served_pipe = events[-1]["result"]
+    local_pipe = run_pipeline(
+        workloads, engine=EvalEngine(workloads, backend="exact"),
+        **{**pipe_kw, "cfg": GAConfig(**pipe_kw["cfg"])})
+    assert served_pipe["front"]["points"] == \
+        local_pipe.front_points.tolist(), \
+        "served pipeline front diverged from the local run"
+    for b in (100.0, bracket):
+        assert served_pipe["results"]["0"][str(b)]["best_fitness"] == \
+            local_pipe.results[0][b].best_fitness, b
     service.stop()
 
     # (3) a fresh service on the warm persistent store is mostly hits

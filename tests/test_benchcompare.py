@@ -1,0 +1,90 @@
+"""``benchmarks/perf_compare.py`` trajectory merge: newest entry per
+benchmark with a deterministic tie-break — two files carrying the same
+benchmark at equal (or missing) ``generated_unix`` timestamps must merge
+identically under every directory listing order ``os.listdir`` could
+return (the merge used to be listing-order independent only by accident
+of the PR-number sort; the rank makes the total order explicit)."""
+import importlib.util
+import itertools
+import json
+import pathlib
+
+import pytest
+
+_PC_PATH = (pathlib.Path(__file__).parent.parent / "benchmarks"
+            / "perf_compare.py")
+_spec = importlib.util.spec_from_file_location("perf_compare", _PC_PATH)
+perf_compare = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(perf_compare)
+
+
+def _write(root, name, pr, benchmarks, ts=None):
+    data = {"pr": pr, "smoke": False, "benchmarks": benchmarks}
+    if ts is not None:
+        data["generated_unix"] = ts
+    (root / name).write_text(json.dumps(data))
+
+
+def _merge_under_listing_orders(monkeypatch, tmp_path):
+    """Run merged_trajectory once per permutation of the listing order,
+    returning the set of distinct results (json-canonicalized)."""
+    names = sorted(p.name for p in tmp_path.iterdir())
+    monkeypatch.setattr(perf_compare, "REPO_ROOT", str(tmp_path))
+    outs = []
+    for perm in itertools.permutations(names):
+        monkeypatch.setattr(perf_compare.os, "listdir", lambda _p, _o=perm: list(_o))
+        outs.append(perf_compare.merged_trajectory(smoke=False))
+    uniq = {json.dumps(o, sort_keys=True) for o in outs}
+    return outs, uniq
+
+
+def test_equal_timestamps_tiebreak_deterministic(monkeypatch, tmp_path):
+    # same benchmark, SAME timestamp in two files: higher PR number wins,
+    # identically under all 3! = 6 listing orders
+    _write(tmp_path, "BENCH_PR1.json", 1,
+           {"b": {"speedup": 1.0}, "only_old": {"speedup": 9.0}}, ts=100.0)
+    _write(tmp_path, "BENCH_PR2.json", 2, {"b": {"speedup": 2.0}}, ts=100.0)
+    _write(tmp_path, "BENCH_PR3.json", 3, {"b": {"speedup": 3.0}}, ts=100.0)
+    outs, uniq = _merge_under_listing_orders(monkeypatch, tmp_path)
+    assert len(uniq) == 1
+    merged = outs[0]
+    assert merged["benchmarks"]["b"]["speedup"] == 3.0
+    # benchmarks only an older PR carries survive the merge
+    assert merged["benchmarks"]["only_old"]["speedup"] == 9.0
+    assert merged["files"] == [
+        "BENCH_PR1.json", "BENCH_PR2.json", "BENCH_PR3.json"]
+
+
+def test_missing_timestamps_fall_back_to_pr_order(monkeypatch, tmp_path):
+    # committed pre-PR-7 files carry no generated_unix at all
+    _write(tmp_path, "BENCH_PR5.json", 5, {"b": {"speedup": 5.0}})
+    _write(tmp_path, "BENCH_PR6.json", 6, {"b": {"speedup": 6.0}})
+    outs, uniq = _merge_under_listing_orders(monkeypatch, tmp_path)
+    assert len(uniq) == 1
+    assert outs[0]["benchmarks"]["b"]["speedup"] == 6.0
+
+
+def test_newer_run_outranks_higher_pr_number(monkeypatch, tmp_path):
+    # a RE-RUN of an old PR's benchmark (newer timestamp) beats a
+    # higher-numbered PR's stale entry: "newest" means the run, not the file
+    _write(tmp_path, "BENCH_PR1.json", 1, {"b": {"speedup": 1.5}}, ts=200.0)
+    _write(tmp_path, "BENCH_PR2.json", 2, {"b": {"speedup": 2.0}}, ts=100.0)
+    outs, uniq = _merge_under_listing_orders(monkeypatch, tmp_path)
+    assert len(uniq) == 1
+    assert outs[0]["benchmarks"]["b"]["speedup"] == 1.5
+    # timestamped files outrank timestamp-less ones regardless of PR number
+    _write(tmp_path, "BENCH_PR9.json", 9, {"b": {"speedup": 9.0}})
+    outs, uniq = _merge_under_listing_orders(monkeypatch, tmp_path)
+    assert len(uniq) == 1
+    assert outs[0]["benchmarks"]["b"]["speedup"] == 1.5
+
+
+def test_smoke_and_full_do_not_mix(monkeypatch, tmp_path):
+    _write(tmp_path, "BENCH_PR7.json", 7, {"b": {"speedup": 3.0}}, ts=100.0)
+    _write(tmp_path, "BENCH_PR7_smoke.json", 7, {"b": {"speedup": 0.5}},
+           ts=999.0)
+    monkeypatch.setattr(perf_compare, "REPO_ROOT", str(tmp_path))
+    full = perf_compare.merged_trajectory(smoke=False)
+    smoke = perf_compare.merged_trajectory(smoke=True)
+    assert full["benchmarks"]["b"]["speedup"] == 3.0
+    assert smoke["benchmarks"]["b"]["speedup"] == 0.5

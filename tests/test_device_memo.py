@@ -1,0 +1,132 @@
+"""Device-resident memo table (PR 7): insert/lookup round trip,
+put-if-absent + first-copy-wins duplicate semantics, graceful drop at
+full load factor without corrupting live entries, and the seed-boundary
+host sync (``engine.export_memo`` -> ``memo_from_store``,
+``memo_insert`` -> ``drain_to_store``) round-tripping rows bitwise."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.dse.device_memo import (PROBES, drain_to_store, memo_fill,
+                                        memo_from_store, memo_init,
+                                        memo_insert, memo_lookup)
+from repro.core.dse.encoding import GENOME_LEN, random_genomes
+from repro.core.dse.engine import EvalEngine, canonical_genomes
+
+W = 2  # workload-row width for the synthetic tables
+
+
+def _keys(n: int, seed: int = 0) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    g = rng.integers(0, 100, size=(n, GENOME_LEN)).astype(np.int32)
+    g[:, 0] = np.arange(n)  # force distinct rows
+    return jnp.asarray(g)
+
+
+def _vals(n: int, seed: int = 1) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, 3, W)))
+
+
+def _bitwise(a, b) -> bool:
+    return np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+
+def test_insert_lookup_roundtrip():
+    keys, vals = _keys(32), _vals(32)
+    memo = memo_insert(memo_init(128, W), keys, vals)
+    assert memo_fill(memo) == 32
+    hit, out = memo_lookup(memo, keys)
+    assert bool(jnp.all(hit))
+    assert _bitwise(out, vals)
+    # unknown keys miss
+    miss, _ = memo_lookup(memo, _keys(8, seed=99) + 1000)
+    assert not bool(jnp.any(miss))
+
+
+def test_put_if_absent_keeps_first_rows():
+    keys = _keys(16)
+    memo = memo_insert(memo_init(128, W), keys, _vals(16, seed=1))
+    # re-offering the same keys with different values writes nothing
+    memo2 = memo_insert(memo, keys, _vals(16, seed=2))
+    _, out = memo_lookup(memo2, keys)
+    assert _bitwise(out, _vals(16, seed=1))
+    assert memo_fill(memo2) == 16
+
+
+def test_in_batch_duplicates_first_copy_wins():
+    keys = np.array(_keys(8))
+    vals = np.array(_vals(8, seed=3))
+    keys[5] = keys[2]          # rows 2 and 5 share a key...
+    vals[5] += 1.0             # ...with different rows
+    memo = memo_insert(memo_init(64, W), jnp.asarray(keys),
+                       jnp.asarray(vals))
+    assert memo_fill(memo) == 7
+    _, out = memo_lookup(memo, jnp.asarray(keys[2:3]))
+    assert _bitwise(out[0], vals[2])   # lowest row index won
+
+
+def test_update_mask_gates_inserts():
+    keys, vals = _keys(16), _vals(16)
+    upd = jnp.arange(16) < 10
+    memo = memo_insert(memo_init(128, W), keys, vals, update=upd)
+    hit, _ = memo_lookup(memo, keys)
+    assert bool(jnp.all(hit[:10])) and not bool(jnp.any(hit[10:]))
+
+
+def test_full_load_factor_drops_without_corruption():
+    """Offering far more keys than capacity fills the table and drops the
+    overflow — no eviction, no corruption: every previously inserted key
+    keeps returning its exact row, and every reported hit is bitwise the
+    row that was inserted for that key."""
+    cap = 8   # probe window covers the whole table (min(PROBES, cap))
+    assert cap <= PROBES
+    first_k, first_v = _keys(cap, seed=0), _vals(cap, seed=0)
+    memo = memo_insert(memo_init(cap, W), first_k, first_v)
+    assert memo_fill(memo) == cap          # full
+    # a saturating second wave of distinct keys
+    second_k = _keys(64, seed=7) + 1000
+    memo2 = memo_insert(memo, second_k, _vals(64, seed=7))
+    assert memo_fill(memo2) == cap         # nothing evicted, all dropped
+    hit, out = memo_lookup(memo2, first_k)
+    assert bool(jnp.all(hit))
+    assert _bitwise(out, first_v)          # live entries untouched
+    hit2, _ = memo_lookup(memo2, second_k)
+    assert not bool(jnp.any(hit2))         # dropped, not half-written
+    # determinism: the same saturating insert replays to the same table
+    memo3 = memo_insert(memo, second_k, _vals(64, seed=7))
+    for a, b in zip(memo2, memo3):
+        assert _bitwise(a, b)
+
+
+def test_engine_sync_roundtrip():
+    """memo_from_store preloads exactly what the engine scored, bitwise;
+    drained entries round-trip into a second engine's store and serve
+    its evaluations without recomputation."""
+    rng = np.random.default_rng(5)
+    genomes = random_genomes(rng, 8)
+    eng = EvalEngine(["kan"], backend="exact")
+    m = eng.evaluate(genomes)
+
+    memo = memo_from_store(eng, 64)
+    canon = jnp.asarray(canonical_genomes(genomes), jnp.int32)
+    hit, vals = memo_lookup(memo, canon)
+    assert bool(jnp.all(hit))
+    out = np.asarray(vals, np.float64)
+    assert _bitwise(out[:, 0], m["latency"])
+    assert _bitwise(out[:, 1], m["energy"])
+    assert _bitwise(out[:, 2], m["tops_w"])
+    # preloaded entries are not fresh: nothing drains back
+    assert drain_to_store(memo, eng) == 0
+
+    # fresh inserts DO drain — into a cold engine whose store then
+    # serves the same genomes as pure hits, bitwise
+    eng2 = EvalEngine(["kan"], backend="exact")
+    memo2 = memo_insert(memo_init(64, 1), canon, vals)
+    assert drain_to_store(memo2, eng2) == memo_fill(memo2)
+    m2 = eng2.evaluate(genomes)
+    assert m2["meta"]["hits"] == len(genomes)
+    assert m2["meta"]["misses"] == 0
+    for k in ("latency", "energy", "tops_w"):
+        assert _bitwise(m2[k], m[k])

@@ -82,3 +82,33 @@ def test_sweep_and_ga_smoke():
     assert ga is not None
     assert np.isfinite(ga.best_fitness)
     assert ga.evaluated >= 24
+
+
+def test_pareto_duplicate_rows_keep_first():
+    """Bitwise-identical rows are mutually non-dominating, so without a
+    dedupe every copy survived — cumulative fronts (streamed service
+    updates, the pipeline's cross-seed merge) grew with each repeated
+    candidate.  Only the FIRST copy may survive."""
+    pts = np.array([[1.0, 2.0], [1.0, 2.0], [3.0, 1.0],
+                    [1.0, 2.0], [3.0, 1.0]])
+    mask = pareto_mask(pts)
+    assert mask.tolist() == [True, False, True, False, False]
+    # idempotence: feeding a front back in keeps exactly that front
+    assert pareto_mask(pts[mask]).all()
+    # dominated duplicates stay dominated
+    pts2 = np.array([[0.5, 0.5], [9.0, 9.0], [9.0, 9.0]])
+    assert pareto_mask(pts2).tolist() == [True, False, False]
+    # front ordering survives the dedupe
+    assert pareto_front(pts).tolist() == [0, 2]
+
+
+def test_pareto_mask_device_matches_host(rng):
+    from repro.core.dse.pareto import pareto_mask_device
+
+    pts = rng.random((48, 3))
+    dup = np.concatenate([pts, pts[::3], pts[:5]])   # inject duplicates
+    host = pareto_mask(dup)
+    dev = np.asarray(pareto_mask_device(dup))
+    assert np.array_equal(host, dev)
+    assert np.array_equal(pareto_mask(np.zeros((0, 3))),
+                          np.asarray(pareto_mask_device(np.zeros((0, 3)))))

@@ -11,8 +11,8 @@ import pytest
 
 from repro.core.dse.batch_eval import (batch_evaluate, prepare_configs,
                                        prepare_workload)
-from repro.core.dse.encoding import (FIELDS_PER_TILE, _TILE_FIELDS, decode,
-                                     random_genomes)
+from repro.core.dse.encoding import (FIELDS_PER_TILE, GENOME_LEN,
+                                     _TILE_FIELDS, decode, random_genomes)
 from repro.core.dse.engine import (EvalEngine, canonical_genomes,
                                    genome_areas, genomes_to_configs)
 from repro.core.dse.sweep import evaluate_genomes_reference
@@ -319,3 +319,75 @@ print("OK")
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, timeout=240, env=env)
     assert "OK" in out.stdout, out.stderr[-2000:]
+
+
+def test_memo_max_applies_to_caller_supplied_store():
+    """An explicit ``memo_max`` used to be silently ignored whenever the
+    caller passed ``store=`` — the cap must re-cap the store's in-memory
+    LRU tier, or raise when there is no LRU tier to cap."""
+    from repro.core.dse.store import (MemoryLRUStore, SqliteStore,
+                                      TieredStore)
+
+    st = MemoryLRUStore(max_entries=1000)
+    eng = EvalEngine(["kan"], memo_max=8, batch=4, store=st)
+    assert st.max_entries == 8 and eng.memo_max == 8
+    g = random_genomes(np.random.default_rng(3), 12)
+    eng.evaluate(g)
+    assert len(st) <= 8
+
+    # the resize evicts eagerly when the store already holds more
+    big = MemoryLRUStore(max_entries=1000)
+    warm = EvalEngine(["kan"], batch=4, store=big)   # no cap: untouched
+    warm.evaluate(g)
+    assert big.max_entries == 1000 and len(big) > 8
+    EvalEngine(["kan"], memo_max=8, batch=4, store=big)
+    assert big.max_entries == 8 and len(big) <= 8
+
+    # tiered: the cap lands on the LRU front
+    tiered = TieredStore(MemoryLRUStore(max_entries=500),
+                         SqliteStore(":memory:"))
+    EvalEngine(["kan"], memo_max=16, batch=4, store=tiered)
+    assert tiered.front.max_entries == 16
+
+    # no LRU tier to cap -> error, not a silent no-op
+    with pytest.raises(ValueError, match="memo_max"):
+        EvalEngine(["kan"], memo_max=8, batch=4,
+                   store=SqliteStore(":memory:"))
+    # the default cap is NOT "explicit": plain stores pass through
+    assert EvalEngine(["kan"], store=MemoryLRUStore(max_entries=777)
+                      ).store.max_entries == 777
+
+
+def test_export_import_memo_roundtrip():
+    """The seed-boundary sync surface: ``export_memo`` returns exactly
+    the store's rows for one mode (canonical genomes + float64 rows),
+    and ``import_memo`` makes a cold engine serve them as pure hits,
+    bitwise."""
+    g = random_genomes(np.random.default_rng(4), 6)
+    eng = EvalEngine(["kan"], backend="exact")
+    m = eng.evaluate(g)
+    canon, rows = eng.export_memo()
+    assert canon.shape[1:] == (GENOME_LEN,) and rows.shape[1:] == (3, 1)
+    assert len(canon) == len(np.unique(canonical_genomes(g), axis=0))
+    # rows match the evaluation bitwise (set comparison via sorting)
+    key = np.lexsort(canon.T)
+    want = {canonical_genomes(g)[i].tobytes():
+            np.stack([m["latency"][i], m["energy"][i],
+                      m["tops_w"][i]]).tobytes() for i in range(len(g))}
+    got = {canon[i].tobytes(): rows[i].tobytes() for i in range(len(canon))}
+    assert got == want
+    # back-to-back exports over an unchanged store return the cached view
+    c2, r2 = eng.export_memo()
+    assert c2 is canon and r2 is rows
+
+    cold = EvalEngine(["kan"], backend="exact")
+    assert cold.import_memo(canon, rows) == len(canon)
+    served = cold.evaluate(g)
+    assert served["meta"]["hits"] == len(g)
+    for k in ("latency", "energy", "tops_w"):
+        assert np.array_equal(served[k], m[k]), k
+    # shape and mode guards
+    with pytest.raises(ValueError, match="mode"):
+        eng.export_memo(mode="bogus")
+    with pytest.raises(ValueError, match="shape"):
+        eng.import_memo(canon, rows[:, :2])
