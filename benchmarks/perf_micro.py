@@ -39,7 +39,13 @@
   bracket sequence — bitwise-identical genome streams asserted, so the
   measured win is pure host-round-trip elimination (PR 7 targets >= 3x
   at population 4096; ``--pipeline`` runs just this one and writes
-  ``BENCH_PR7.json``).
+  ``BENCH_PR7.json``);
+* the checkpointed §4 pipeline (per-stage durable records + memo
+  drains, ``run_pipeline(checkpoint=...)``) vs the same study without,
+  plus the resume-replay path over a completed checkpoint directory —
+  informational (no floor): the overhead is stage-boundary I/O, the
+  replay speedup is what a crash-resume saves (PR 8; writes
+  ``BENCH_PR8.json``).
 
 Besides the per-run ``results/bench/perf_micro.json`` payload, ``run``
 writes the machine-readable cross-PR trajectory files ``BENCH_PR5.json``
@@ -652,6 +658,89 @@ def run_pipeline_speedup(population: int = 4096, generations: int = 6,
     }
 
 
+def run_checkpoint_overhead(population: int = 256, generations: int = 4,
+                            brackets=(100.0, 200.0), workloads=("kan",),
+                            seeds=(0, 1), samples_per_stratum: int = 8,
+                            repeats: int = 2) -> dict:
+    """What durability costs: ``run_pipeline`` with per-stage checkpoints
+    (atomic npz records + memo drain per stage, PR 8) vs the same study
+    without, plus the resume-replay path (rerunning a *completed*
+    checkpoint directory: every stage served from its record, no
+    simulation).  Informational — no smoke floor: the overhead is pure
+    stage-boundary I/O and should stay in the low single-digit percents,
+    while the replay speedup shows what a crash-resume actually saves.
+
+    Both sides get a fresh in-memory exact engine per run (the
+    checkpointed side is NOT given the directory-backed sqlite store, so
+    the measured delta is the checkpoint protocol itself, not a
+    store-backend swap).  Bitwise parity between the plain and
+    checkpointed studies is asserted untimed before timing starts."""
+    import shutil
+    import tempfile
+
+    from repro.core.dse.pipeline import run_pipeline
+
+    workloads = list(workloads)
+    cfg = GAConfig(population=population, generations=generations,
+                   seed_top_k=min(64, population), early_stop=10_000)
+    kw = dict(seeds=tuple(seeds), brackets=tuple(brackets),
+              samples_per_stratum=samples_per_stratum, cfg=cfg)
+
+    def fresh():
+        return EvalEngine(workloads, backend="exact")
+
+    def run_plain():
+        return run_pipeline(workloads, engine=fresh(), **kw)
+
+    def run_ckpt(cdir):
+        return run_pipeline(workloads, engine=fresh(), checkpoint=cdir, **kw)
+
+    # untimed warm (compiles the study's kernels) + the parity invariant
+    ref = run_plain()
+    warm_dir = tempfile.mkdtemp(prefix="bench_ckpt_")
+    try:
+        ck = run_ckpt(warm_dir)
+        parity = (ref.front_points.tobytes() == ck.front_points.tobytes()
+                  and ref.front_genomes.tobytes() == ck.front_genomes.tobytes()
+                  and ref.evaluated == ck.evaluated)
+        assert parity, "checkpointed pipeline diverged from the plain run"
+    finally:
+        shutil.rmtree(warm_dir, ignore_errors=True)
+
+    t_plain, t_ckpt, t_replay = [], [], []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        run_plain()
+        t_plain.append(time.perf_counter() - t0)
+        cdir = tempfile.mkdtemp(prefix="bench_ckpt_")
+        try:
+            t0 = time.perf_counter()
+            run_ckpt(cdir)
+            t_ckpt.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            run_ckpt(cdir)       # completed dir: pure record replay
+            t_replay.append(time.perf_counter() - t0)
+        finally:
+            shutil.rmtree(cdir, ignore_errors=True)
+
+    med_plain = median_s(t_plain)
+    med_ckpt = median_s(t_ckpt)
+    med_replay = median_s(t_replay)
+    return {
+        "population": population,
+        "generations": generations,
+        "seeds": list(seeds),
+        "brackets": list(brackets),
+        "workloads": workloads,
+        "plain_median_s": med_plain,
+        "checkpointed_median_s": med_ckpt,
+        "replay_median_s": med_replay,
+        "overhead_frac": med_ckpt / max(med_plain, 1e-12) - 1.0,
+        "replay_speedup": med_plain / max(med_replay, 1e-12),
+        "bitwise_parity": True,          # asserted above
+    }
+
+
 def _bench_entry(median: float, baseline_median: float, **extra) -> dict:
     """One trajectory-file benchmark record: median seconds + speedup."""
     return {"median_s": median, "baseline_median_s": baseline_median,
@@ -787,6 +876,38 @@ def write_bench_pr7(payload: dict, smoke: bool) -> str:
         "BENCH_PR7_smoke.json" if smoke else "BENCH_PR7.json", bench)
 
 
+def write_bench_pr8(payload: dict, smoke: bool) -> str:
+    """Distill the checkpoint-overhead benchmark into the PR-8
+    trajectory file ``BENCH_PR8.json`` at the repo root (``perf_compare``
+    keeps merging the earlier ``BENCH_PR*.json`` files for the
+    benchmarks this one doesn't carry).  Smoke runs write the gitignored
+    ``BENCH_PR8_smoke.json`` instead."""
+    cp = payload["checkpoint"]
+    bench = {
+        "pr": 8,
+        "smoke": smoke,
+        "generated_unix": time.time(),
+        "benchmarks": {
+            # baseline = the same study without checkpoints; speedup
+            # below 1.0 IS the durability overhead (informational — the
+            # replay_speedup field records what a crash-resume saves)
+            "run_checkpoint_overhead": _bench_entry(
+                cp["checkpointed_median_s"], cp["plain_median_s"],
+                population=cp["population"],
+                generations=cp["generations"],
+                seeds=cp["seeds"],
+                brackets=cp["brackets"],
+                workloads=cp["workloads"],
+                overhead_frac=cp["overhead_frac"],
+                replay_median_s=cp["replay_median_s"],
+                replay_speedup=cp["replay_speedup"],
+                bitwise_parity=cp["bitwise_parity"]),
+        },
+    }
+    return save_repo_json(
+        "BENCH_PR8_smoke.json" if smoke else "BENCH_PR8.json", bench)
+
+
 def run(smoke: bool = False) -> dict:
     """Full microbenchmark suite; ``smoke=True`` runs small-population
     exact-path + exact-GA checks (the non-blocking CI perf-smoke job:
@@ -811,10 +932,14 @@ def run(smoke: bool = False) -> dict:
             # shrinks with P, so the smoke floor is the fail-soft 1.5x
             "pipeline": run_pipeline_speedup(
                 population=256, generations=4, repeats=2),
+            # informational: per-stage durability cost + replay win
+            "checkpoint": run_checkpoint_overhead(
+                population=128, generations=3, repeats=2),
         }
         write_bench_pr5(payload, smoke=True)
         write_bench_pr6(payload, smoke=True)
         write_bench_pr7(payload, smoke=True)
+        write_bench_pr8(payload, smoke=True)
         save_json("perf_micro_smoke", payload)
         return payload
 
@@ -852,11 +977,13 @@ def run(smoke: bool = False) -> dict:
         "exact_path_throughput": run_throughput_exact(),
         "service_coalescing": run_service_coalescing(),
         "pipeline": run_pipeline_speedup(),
+        "checkpoint": run_checkpoint_overhead(),
     }
     save_json("perf_micro", payload)
     write_bench_pr5(payload, smoke=False)
     write_bench_pr6(payload, smoke=False)
     write_bench_pr7(payload, smoke=False)
+    write_bench_pr8(payload, smoke=False)
     return payload
 
 
@@ -905,6 +1032,14 @@ def _csv_rows(p: dict, smoke: bool = False) -> list:
             f"pop={pp['population']} "
             f"parity={'ok' if pp['bitwise_parity'] else 'BROKEN'} "
             f"target_3x={'met' if pp['meets_target'] else 'MISSED'}"))
+    if "checkpoint" in p:
+        cp = p["checkpoint"]
+        rows.append(csv_row(
+            "perf_checkpoint_overhead", cp["checkpointed_median_s"],
+            f"vs_plain_pipeline={100 * cp['overhead_frac']:+.1f}% "
+            f"replay={cp['replay_speedup']:.1f}x_faster "
+            f"pop={cp['population']} "
+            f"parity={'ok' if cp['bitwise_parity'] else 'BROKEN'}"))
     if smoke:
         return rows
     ga = p["ga_engine"]

@@ -9,6 +9,12 @@ refinements across every area bracket, merged into one cumulative
 Pareto front on device:
 
   PYTHONPATH=src python examples/dse_search.py --pipeline --seeds 0 1
+
+``--checkpoint DIR`` (with ``--pipeline``) makes every completed stage
+durable in DIR: kill the run at any point — SIGKILL included — and
+rerunning the same command resumes where it left off, bitwise equal to
+an uninterrupted run.  The directory also hosts the study's persistent
+result store (``results.sqlite``).
 """
 import argparse
 import warnings
@@ -40,14 +46,17 @@ def run_pipeline_demo(args):
         elif e["stage"] == "seed_done":
             print(f"   seed {e['seed']}: drained {e['drained']} "
                   f"device-scored rows to the store")
+        if e.get("resumed"):
+            print("      ^ resumed from checkpoint (not recomputed)")
 
     print(f"pipeline: seeds {args.seeds}, "
-          f"{args.samples}/stratum sweeps, population {args.population}")
+          f"{args.samples}/stratum sweeps, population {args.population}"
+          + (f", checkpoint {args.checkpoint}" if args.checkpoint else ""))
     res = run_pipeline(args.workloads, seeds=tuple(args.seeds),
                        samples_per_stratum=args.samples,
                        cfg=GAConfig(population=args.population,
                                     generations=8, early_stop=4),
-                       on_stage=stage)
+                       checkpoint=args.checkpoint, on_stage=stage)
     print(f"\ncumulative Pareto front: {len(res.front_points)} points "
           f"({res.evaluated} genomes evaluated)")
     for pt, g in list(zip(res.front_points, res.front_genomes))[:8]:
@@ -81,6 +90,10 @@ def main():
                     help="pipeline sweep seeds (with --pipeline)")
     ap.add_argument("--population", type=int, default=64,
                     help="pipeline GA population (with --pipeline)")
+    ap.add_argument("--checkpoint", default=None, metavar="DIR",
+                    help="with --pipeline: durable per-stage checkpoints "
+                         "in DIR — an interrupted run (even kill -9) "
+                         "resumes bitwise-identically on rerun")
     args = ap.parse_args()
     if args.pipeline:
         run_pipeline_demo(args)

@@ -97,7 +97,8 @@ def run_bayes(workloads: Sequence[str], objective_fn,
     search-time numbers."""
     engine = (engine.check_workloads(workloads, calib)
               if engine is not None
-              else EvalEngine(workloads, calib, backend="exact"))
+              else EvalEngine(workloads, calib, backend="exact",
+                              nonfinite="skip"))
     rng = np.random.default_rng(seed)
     genomes = random_genomes(rng, cfg.init_samples)
     metrics = engine.evaluate(genomes)

@@ -61,7 +61,8 @@ from .encoding import GENOME_LEN
 
 __all__ = ["DeviceMemo", "PROBES", "memo_init", "memo_lookup",
            "memo_insert", "memo_fill", "memo_to_arrays",
-           "memo_from_store", "drain_to_store"]
+           "memo_from_store", "drain_to_store", "fresh_entries",
+           "clear_fresh"]
 
 # linear-probe window: an insert tries this many consecutive slots before
 # dropping; a lookup probes the same window.  Bounds worst-case work per
@@ -236,6 +237,24 @@ def memo_from_store(engine, capacity: int,
     return memo._replace(fresh=jnp.zeros_like(memo.fresh))
 
 
+def fresh_entries(memo: DeviceMemo) -> Tuple[np.ndarray, np.ndarray]:
+    """Host copies of the entries inserted since the last host sync:
+    (N, GENOME_LEN) int64 canonical genomes + (N, 3, W) float64 rows.
+    The checkpointing pipeline records these per-stage deltas durably
+    (and imports them itself) instead of calling ``drain_to_store``."""
+    new = np.asarray(memo.fresh) & np.asarray(memo.used)
+    keys = np.asarray(memo.keys)[new].astype(np.int64)
+    vals = np.asarray(memo.vals, np.float64)[new]
+    return keys, vals
+
+
+def clear_fresh(memo: DeviceMemo) -> DeviceMemo:
+    """Mark the table synced: the next ``fresh_entries``/
+    ``drain_to_store`` exports only what the device computes after this
+    point.  Call after persisting/importing ``fresh_entries``."""
+    return memo._replace(fresh=jnp.zeros_like(memo.fresh))
+
+
 def drain_to_store(memo: DeviceMemo, engine,
                    mode: Optional[str] = None) -> int:
     """Write every entry inserted since the last host sync into the
@@ -243,7 +262,5 @@ def drain_to_store(memo: DeviceMemo, engine,
     seed-boundary sync).  A delta: preloaded entries came *from* the
     store, so only ``fresh`` slots export — a replay whose every probe
     hit drains zero rows.  Returns the number of rows offered."""
-    new = np.asarray(memo.fresh) & np.asarray(memo.used)
-    keys = np.asarray(memo.keys)[new].astype(np.int64)
-    vals = np.asarray(memo.vals, np.float64)[new]
+    keys, vals = fresh_entries(memo)
     return engine.import_memo(keys, vals, mode)

@@ -99,11 +99,34 @@ from .batch_eval import (_CHIP_KEYS, _TILE_KEYS, batch_evaluate,
 from .encoding import (FIELDS_PER_TILE, GENOME_LEN, _TILE_FIELDS, decode)
 from .store import MemoryLRUStore, ResultStore, TieredStore
 
-__all__ = ["EvalEngine", "EngineStats", "genomes_to_configs",
-           "genome_areas", "canonical_genomes", "prepared_workload",
-           "BACKENDS", "SCHEDULE_MODES"]
+__all__ = ["EvalEngine", "EngineStats", "NonFiniteMetricsError",
+           "genomes_to_configs", "genome_areas", "canonical_genomes",
+           "prepared_workload", "BACKENDS", "SCHEDULE_MODES"]
 
 BACKENDS = ("scan", "exact", "batched", "oracle")
+
+
+class NonFiniteMetricsError(RuntimeError):
+    """A freshly simulated metric row contained NaN (or a non-finite
+    TOPS/W) — raised *before* the row can enter any memo, store, or
+    Pareto front, naming the offending canonical genome.  ``retryable``
+    because the poisoned batch was never memoized: a retry re-simulates
+    it cleanly when the corruption was transient (the chaos suite's
+    injected-NaN case)."""
+
+    retryable = True
+
+    def __init__(self, canon: np.ndarray, mode: str,
+                 row: Tuple[np.ndarray, np.ndarray, np.ndarray]):
+        self.canon = np.asarray(canon, np.int64).copy()
+        self.mode = str(mode)
+        self.row = tuple(np.asarray(a, np.float64).copy() for a in row)
+        super().__init__(
+            f"non-finite metrics for canonical genome "
+            f"{self.canon.tolist()} (mode={self.mode}): lat="
+            f"{self.row[0].tolist()} en={self.row[1].tolist()} "
+            f"tops_w={self.row[2].tolist()}; pass nonfinite='skip' to "
+            f"score such rows -inf instead")
 
 # metric keys each §3.2 schedule mode scores on: latency-critical
 # deployment uses the one-batch makespan; serving (throughput) uses the
@@ -421,9 +444,13 @@ class EvalEngine:
                  memo_max: Optional[int] = None, backend: str = "scan",
                  exact_mapper: str = "batched", mode: str = "latency",
                  memo_limit: Optional[int] = None,
-                 store: Optional[ResultStore] = None):
+                 store: Optional[ResultStore] = None,
+                 nonfinite: str = "raise"):
         if backend not in BACKENDS:
             raise ValueError(f"backend {backend!r} not in {BACKENDS}")
+        if nonfinite not in ("raise", "skip"):
+            raise ValueError(f"nonfinite {nonfinite!r} not in "
+                             f"('raise', 'skip')")
         if exact_mapper not in ("batched", "python"):
             raise ValueError(f"exact_mapper {exact_mapper!r} not in "
                              f"('batched', 'python')")
@@ -443,6 +470,7 @@ class EvalEngine:
         self.aggressive_int4 = aggressive_int4
         self.enable_fusion = enable_fusion
         self.backend = backend
+        self.nonfinite = nonfinite
         self.stats = EngineStats(workloads=len(self.workloads))
         # genome key -> (lat (W,), en (W,), tw (W,)); areas are always
         # recomputed from the (cheap, bitwise-reproducible) config stack.
@@ -875,6 +903,7 @@ class EvalEngine:
                 self.stats.misses += 1
 
         # simulate misses in _bucket-padded batches (bounded jit shapes)
+        nonfinite = 0
         for s in range(0, len(miss_idx), self.batch):
             chunk = miss_idx[s:s + self.batch]
             pad = self._pad_size(len(chunk))
@@ -883,6 +912,21 @@ class EvalEngine:
                                      len(chunk), genomes[np.asarray(sel)],
                                      mode=mode)
             for r, i in enumerate(chunk):
+                # Guard fresh rows before they can reach the memo/store/
+                # Pareto front.  Unmappable candidates legitimately score
+                # (inf, inf, 0); NaN anywhere — or a non-finite TOPS/W —
+                # is cost-model corruption and must not be cached.
+                if (np.isnan(l[r]).any() or np.isnan(e[r]).any()
+                        or np.isnan(t[r]).any() or np.isinf(t[r]).any()):
+                    nonfinite += 1
+                    if self.nonfinite == "raise":
+                        raise NonFiniteMetricsError(
+                            canon[i], mode, (l[r], e[r], t[r]))
+                    # skip: score like an area-filtered candidate (-inf
+                    # fitness downstream), never memoize the bad row
+                    lat[i], en[i] = np.inf, np.inf
+                    tw[i] = 0.0
+                    continue
                 lat[i], en[i], tw[i] = l[r], e[r], t[r]
                 if self.memoize:
                     self.store.put(
@@ -898,6 +942,7 @@ class EvalEngine:
                 "hits": self.stats.hits - pre.hits,
                 "misses": self.stats.misses - pre.misses,
                 "skips": self.stats.skips - pre.skips,
+                "nonfinite": nonfinite,
                 "dispatches": self.stats.dispatches - pre.dispatches}
         meta["hit_rate"] = meta["hits"] / max(n, 1)
         return {"latency": lat, "energy": en, "tops_w": tw, "area": area,

@@ -251,7 +251,8 @@ def run_ga_device(sweep, bracket: float, cfg=None, seed: int = 0,
     cfg = cfg or GAConfig()
     engine = (engine.check_workloads(sweep.workloads, calib)
               if engine is not None
-              else EvalEngine(sweep.workloads, calib, backend="exact"))
+              else EvalEngine(sweep.workloads, calib, backend="exact",
+                              nonfinite="skip"))
     rng = np.random.default_rng(seed + int(bracket))
     base = sweep.homo_baseline()
     if bracket not in base:
@@ -652,10 +653,17 @@ def _refine_kernel(calib: CalibrationTable,
             power = e * 1e-12 / jnp.maximum(l, 1e-30)
             t = a / jnp.maximum(power, 1e-30)
             # unmappable rows: inf latency/energy, zero TOPS/W (the
-            # engine's exact-path masking, elementwise identical)
-            lat = jnp.where(ok, l, jnp.inf)
-            en = jnp.where(ok, e, jnp.inf)
-            tw = jnp.where(ok, t, 0.0)
+            # engine's exact-path masking, elementwise identical).  A
+            # NaN cell (cost-model corruption) is masked the same way —
+            # the device memo must never cache a non-finite row, and the
+            # host engine would have scored it skip/-inf too.  No NaN
+            # ever arises from a healthy cost model, so the extra mask
+            # is bitwise inert on clean runs.
+            okk = ok & ~(jnp.isnan(l) | jnp.isnan(e)
+                         | jnp.isnan(t) | jnp.isinf(t))
+            lat = jnp.where(okk, l, jnp.inf)
+            en = jnp.where(okk, e, jnp.inf)
+            tw = jnp.where(okk, t, 0.0)
             # hit rows take their memo values — numerically a no-op
             # (metrics are bitwise reproducible) but keeps the two cond
             # branches the same function of the memo state
@@ -777,7 +785,8 @@ def run_ga_fused(sweep, bracket: float, cfg=None, seed: int = 0,
     from ..compiler.batched_mapper import _search_xs_cached
     cfg = cfg or GAConfig()
     if engine is None:
-        engine = EvalEngine(sweep.workloads, calib, backend="exact")
+        engine = EvalEngine(sweep.workloads, calib, backend="exact",
+                            nonfinite="skip")
     elif not isinstance(engine, EvalEngine):
         raise ValueError("run_ga_fused needs a local EvalEngine — the "
                          "fused loop stages configs and the search scan "

@@ -47,9 +47,11 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
-from .device_memo import drain_to_store, memo_from_store
+from .checkpoint import PipelineCheckpoint, run_digest
+from .device_memo import (clear_fresh, drain_to_store, fresh_entries,
+                          memo_from_store)
 from .encoding import GENOME_LEN
-from .engine import EvalEngine
+from .engine import EvalEngine, canonical_genomes
 from .ga import GAConfig, GAResult
 from .ga_device import run_ga_fused
 from .objective import AREA_BRACKETS
@@ -81,6 +83,63 @@ class PipelineResult:
         if not cands:
             return None
         return max(cands, key=lambda r: r.best_fitness)
+
+
+def _sweep_arrays(swp: SweepResult) -> Dict[str, np.ndarray]:
+    return {"genomes": swp.genomes, "family": swp.family,
+            "bracket": swp.bracket, "area": swp.area,
+            "latency": swp.latency, "energy": swp.energy,
+            "tops_w": swp.tops_w}
+
+
+def _sweep_from_record(seed: int, workloads: Sequence[str],
+                       rec: Dict[str, np.ndarray]) -> SweepResult:
+    return SweepResult(seed=seed, workloads=list(workloads),
+                       genomes=rec["genomes"], family=rec["family"],
+                       bracket=rec["bracket"], area=rec["area"],
+                       latency=rec["latency"], energy=rec["energy"],
+                       tops_w=rec["tops_w"])
+
+
+def _import_sweep(engine: EvalEngine, swp: SweepResult) -> None:
+    """Replay a resumed sweep's metric rows into the engine store —
+    bitwise the rows ``run_sweep`` stored when it computed them — so
+    the remaining stages' memo preloads and store probes hit exactly as
+    the uninterrupted run's would."""
+    rows = np.stack([swp.latency, swp.energy, swp.tops_w], axis=1)
+    engine.import_memo(canonical_genomes(swp.genomes), rows)
+
+
+def _refine_arrays(fused, front_pts: np.ndarray, front_genomes: np.ndarray,
+                   dcanon: np.ndarray, drows: np.ndarray
+                   ) -> Dict[str, np.ndarray]:
+    r = fused.result
+    return {"best_genome": r.best_genome,
+            "best_fitness": np.float64(r.best_fitness),
+            "best_savings": r.best_savings_per_wl,
+            "best_lat": r.best_metrics["latency"],
+            "best_en": r.best_metrics["energy"],
+            "best_tw": r.best_metrics["tops_w"],
+            "best_area": np.float64(r.best_metrics["area"]),
+            "history": np.asarray(r.history, np.float64),
+            "evaluated": np.int64(r.evaluated),
+            "generations": np.int64(fused.generations_run),
+            "front_points": front_pts, "front_genomes": front_genomes,
+            "delta_canon": dcanon, "delta_rows": drows}
+
+
+def _result_from_record(bracket: float, rec: Dict[str, np.ndarray]
+                        ) -> GAResult:
+    return GAResult(
+        bracket=float(bracket), best_genome=rec["best_genome"],
+        best_fitness=float(rec["best_fitness"]),
+        best_savings_per_wl=rec["best_savings"],
+        best_metrics={"latency": rec["best_lat"],
+                      "energy": rec["best_en"],
+                      "tops_w": rec["best_tw"],
+                      "area": np.float64(rec["best_area"])},
+        history=[float(x) for x in rec["history"]],
+        evaluated=int(rec["evaluated"]))
 
 
 def _valid_rows(metrics: Dict[str, np.ndarray]) -> np.ndarray:
@@ -116,7 +175,8 @@ def run_pipeline(workloads: Sequence[str], seeds: Sequence[int] = (0, 1, 2),
                  islands: Optional[int] = None, migrate_every: int = 5,
                  migrate_k: int = 2, memo_capacity: int = 1 << 15,
                  verbose: bool = False,
-                 on_stage: Optional[Callable[[Dict[str, Any]], None]] = None
+                 on_stage: Optional[Callable[[Dict[str, Any]], None]] = None,
+                 checkpoint: Optional[str] = None
                  ) -> PipelineResult:
     """Run the full multi-seed pipeline (see module docstring).
 
@@ -127,6 +187,19 @@ def run_pipeline(workloads: Sequence[str], seeds: Sequence[int] = (0, 1, 2),
     scales each refinement over the local device mesh when the
     population divides evenly (single panmictic island otherwise).
 
+    ``checkpoint=<dir>`` makes every completed stage durable
+    (``dse.checkpoint.PipelineCheckpoint``: atomic per-stage records +
+    a run digest) and resumes from it: rerunning after a crash replays
+    completed stages from their records — emitting their events with
+    ``"resumed": True`` and re-importing their store rows so the
+    remaining stages hit a warm store — and the finished study is
+    **bitwise equal** to an uninterrupted run (pinned by
+    tests/test_checkpoint.py).  When no ``engine`` is passed, the
+    default engine's store persists in the same directory
+    (``results.sqlite``).  In checkpointed runs the memo drains to the
+    host store after every *bracket* (the recorded delta) rather than
+    once per seed, so a kill mid-seed loses at most one refinement.
+
     ``on_stage(event)`` fires after each stage with
 
     * ``{"stage": "sweep", "seed": s, "configs": n, "seconds": dt}``
@@ -135,20 +208,30 @@ def run_pipeline(workloads: Sequence[str], seeds: Sequence[int] = (0, 1, 2),
       array, "genomes": (F, GENOME_LEN) array}}`` — the cumulative
       front after merging this stage (ordered by mean energy)
     * ``{"stage": "seed_done", "seed": s, "drained": n}`` after the
-      seed's memo drains back to the store
+      seed's memo drains back to the store (in checkpointed runs ``n``
+      counts the seed's per-bracket deltas, resumed ones included)
 
-    and must not mutate its arguments.
+    and must not mutate its arguments.  A checkpointed stage's record
+    is durable *before* its event fires, so an ``on_stage`` callback
+    that raises (or a kill while it runs) never loses the stage.
     """
     cfg = cfg or GAConfig()
-    engine = (engine.check_workloads(workloads, calib)
-              if engine is not None
-              else EvalEngine(workloads, calib, backend="exact"))
+    ck = PipelineCheckpoint(checkpoint) if checkpoint is not None else None
+    if engine is None:
+        engine = EvalEngine(workloads, calib, backend="exact",
+                            nonfinite="skip",
+                            store=ck.open_store() if ck is not None else None)
+    else:
+        engine.check_workloads(workloads, calib)
     if not isinstance(engine, EvalEngine):
         raise ValueError("run_pipeline needs a local EvalEngine — the fused "
                          "refinement cannot run over a remote client")
     if engine.backend != "exact":
         raise ValueError("run_pipeline requires backend='exact'; got "
                          f"{engine.backend!r}")
+    if ck is not None:
+        ck.open(run_digest(engine, seeds, brackets, samples_per_stratum,
+                           cfg, islands, migrate_every, migrate_k))
 
     front_pts = np.zeros((0, 3))
     front_genomes = np.zeros((0, GENOME_LEN), np.int64)
@@ -162,21 +245,68 @@ def run_pipeline(workloads: Sequence[str], seeds: Sequence[int] = (0, 1, 2),
             on_stage(ev)
 
     for s in seeds:
-        t0 = time.perf_counter()
-        swp = run_sweep(workloads, samples_per_stratum, seed=s, calib=calib,
-                        brackets=brackets, verbose=verbose, engine=engine)
-        dt = time.perf_counter() - t0
-        secs["sweep"] += dt
-        sweeps[s] = swp
-        emit({"stage": "sweep", "seed": s, "configs": len(swp.genomes),
-              "seconds": dt})
+        skey = f"sweep:{s}"
+        if ck is not None and ck.has(skey):
+            rec = ck.load(skey)
+            swp = _sweep_from_record(s, workloads, rec)
+            dt = float(rec["seconds"])
+            secs["sweep"] += dt
+            sweeps[s] = swp
+            _import_sweep(engine, swp)
+            emit({"stage": "sweep", "seed": s, "configs": len(swp.genomes),
+                  "seconds": dt, "resumed": True})
+        else:
+            t0 = time.perf_counter()
+            swp = run_sweep(workloads, samples_per_stratum, seed=s,
+                            calib=calib, brackets=brackets, verbose=verbose,
+                            engine=engine)
+            dt = time.perf_counter() - t0
+            secs["sweep"] += dt
+            sweeps[s] = swp
+            if ck is not None:
+                ck.record(skey, seconds=np.float64(dt), **_sweep_arrays(swp))
+            emit({"stage": "sweep", "seed": s, "configs": len(swp.genomes),
+                  "seconds": dt})
 
-        # seed boundary, host -> device: ONE memo load per seed; the
-        # per-bracket refinements below thread the table forward with
-        # store_sync=False so no host sync happens between brackets
-        memo = memo_from_store(engine, memo_capacity)
+        # seed boundary, host -> device: ONE memo load per seed, created
+        # lazily before the first refinement that actually *runs* — so
+        # on a resume every replayed stage has re-imported its rows into
+        # the store by the time the preload walks it.  The per-bracket
+        # refinements thread the table forward with store_sync=False: no
+        # host sync between brackets (checkpointed runs additionally
+        # drain each bracket's delta into the host store when recording).
+        memo = None
         results[s] = {}
+        drained = 0
         for b in brackets:
+            rkey = f"refine:{s}:{float(b):g}"
+            if ck is not None and ck.has(rkey):
+                rec = ck.load(rkey)
+                dt = float(rec["seconds"])
+                secs["refine"] += dt
+                if "skipped" in rec:
+                    emit({"stage": "refine", "seed": s, "bracket": b,
+                          "seconds": dt,
+                          "skipped": "no homogeneous baseline",
+                          "resumed": True})
+                    continue
+                res = _result_from_record(b, rec)
+                results[s][b] = res
+                evaluated += res.evaluated
+                front_pts = rec["front_points"]
+                front_genomes = rec["front_genomes"]
+                engine.import_memo(rec["delta_canon"], rec["delta_rows"])
+                drained += len(rec["delta_canon"])
+                emit({"stage": "refine", "seed": s, "bracket": b,
+                      "seconds": dt, "best_fitness": res.best_fitness,
+                      "generations": int(rec["generations"]),
+                      "front": {"points": front_pts.copy(),
+                                "genomes": front_genomes.copy()},
+                      "resumed": True})
+                continue
+
+            if memo is None:
+                memo = memo_from_store(engine, memo_capacity)
             t0 = time.perf_counter()
             fused = run_ga_fused(swp, b, cfg, seed=s, calib=calib,
                                  verbose=verbose, engine=engine,
@@ -187,6 +317,9 @@ def run_pipeline(workloads: Sequence[str], seeds: Sequence[int] = (0, 1, 2),
             dt = time.perf_counter() - t0
             secs["refine"] += dt
             if fused is None:
+                if ck is not None:
+                    ck.record(rkey, skipped=np.int64(1),
+                              seconds=np.float64(dt))
                 emit({"stage": "refine", "seed": s, "bracket": b,
                       "seconds": dt, "skipped": "no homogeneous baseline"})
                 continue
@@ -202,6 +335,17 @@ def run_pipeline(workloads: Sequence[str], seeds: Sequence[int] = (0, 1, 2),
             front_pts = front_pts[order]
             front_genomes = front_genomes[order]
             secs["merge"] += time.perf_counter() - t0
+            if ck is not None:
+                # drain this bracket's delta now (instead of once per
+                # seed): the recorded stage then carries its own rows —
+                # the unit a resume re-imports
+                dcanon, drows = fresh_entries(memo)
+                engine.import_memo(dcanon, drows)
+                memo = clear_fresh(memo)
+                drained += len(dcanon)
+                ck.record(rkey, seconds=np.float64(dt),
+                          **_refine_arrays(fused, front_pts, front_genomes,
+                                           dcanon, drows))
             emit({"stage": "refine", "seed": s, "bracket": b, "seconds": dt,
                   "best_fitness": fused.result.best_fitness,
                   "generations": fused.generations_run,
@@ -212,9 +356,25 @@ def run_pipeline(workloads: Sequence[str], seeds: Sequence[int] = (0, 1, 2),
                       f"best={fused.result.best_fitness:+.4f}, "
                       f"front size {len(front_pts)}")
 
-        # seed boundary, device -> host: drain the memo once
-        drained = drain_to_store(memo, engine)
-        emit({"stage": "seed_done", "seed": s, "drained": drained})
+        # seed boundary, device -> host: drain the memo once (already
+        # drained per bracket in checkpointed runs — only leftovers,
+        # normally zero, export here)
+        dkey = f"seed_done:{s}"
+        if ck is not None and ck.has(dkey):
+            rec = ck.load(dkey)
+            emit({"stage": "seed_done", "seed": s,
+                  "drained": int(rec["drained"]), "resumed": True})
+        else:
+            if ck is None:
+                drained = drain_to_store(memo, engine) \
+                    if memo is not None else 0
+            elif memo is not None:
+                dcanon, drows = fresh_entries(memo)
+                engine.import_memo(dcanon, drows)
+                drained += len(dcanon)
+            if ck is not None:
+                ck.record(dkey, drained=np.int64(drained))
+            emit({"stage": "seed_done", "seed": s, "drained": drained})
 
     return PipelineResult(
         workloads=list(workloads), seeds=list(seeds),

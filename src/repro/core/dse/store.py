@@ -45,6 +45,7 @@ import os
 import sqlite3
 import threading
 import time
+import warnings
 from typing import Dict, Optional, Tuple
 
 import numpy as np
@@ -66,13 +67,15 @@ class StoreStats:
     hits: int = 0
     puts: int = 0
     evictions: int = 0
+    errors: int = 0     # tier/backing failures survived (degraded ops)
 
     def hit_rate(self) -> float:
         return self.hits / max(self.gets, 1)
 
     def snapshot(self) -> Dict[str, float]:
         return {"gets": self.gets, "hits": self.hits, "puts": self.puts,
-                "evictions": self.evictions, "hit_rate": self.hit_rate()}
+                "evictions": self.evictions, "errors": self.errors,
+                "hit_rate": self.hit_rate()}
 
 
 class ResultStore:
@@ -193,28 +196,77 @@ class SqliteStore(_Bindable):
     bump re-addresses every key, so stale metrics can never be served.
     The superseded rows stay on disk (still tagged with the version that
     wrote them) until ``purge_stale()`` deletes them.
+
+    Busy/locked errors (another writer holding the file lock past the
+    30 s sqlite busy timeout, NFS hiccups, an injected fault under the
+    chaos suite) are retried with bounded exponential backoff
+    (``lock_retries`` attempts) instead of raising straight through
+    ``EvalEngine.evaluate()``; only after the retry budget is exhausted
+    does the error propagate.  ``close()`` runs a WAL checkpoint first
+    so short-lived processes don't leave ``-wal``/``-shm`` files behind.
     """
 
-    def __init__(self, path: str, version: str = COST_MODEL_VERSION):
+    LOCK_BACKOFF_S = 0.02   # first retry sleep; doubles, capped at 0.5 s
+
+    def __init__(self, path: str, version: str = COST_MODEL_VERSION,
+                 lock_retries: int = 6, fault_injector=None):
         super().__init__()
         self.path = str(path)
         self.version = str(version)
+        self.lock_retries = max(int(lock_retries), 1)
+        self._faults = None   # armed after setup so schedules count ops only
         parent = os.path.dirname(os.path.abspath(self.path))
         os.makedirs(parent, exist_ok=True)
         self._lock = threading.Lock()   # sqlite conns are not thread-safe
+        self._closed = False
         self._conn = sqlite3.connect(self.path, timeout=30.0,
                                      check_same_thread=False)
         with self._lock:
-            self._conn.execute("PRAGMA journal_mode=WAL")
-            self._conn.execute("PRAGMA synchronous=NORMAL")
-            self._conn.execute(
+            self._execute("PRAGMA journal_mode=WAL")
+            self._execute("PRAGMA synchronous=NORMAL")
+            self._execute(
                 "CREATE TABLE IF NOT EXISTS results ("
                 " k BLOB PRIMARY KEY,"
                 " w INTEGER NOT NULL,"
                 " data BLOB NOT NULL,"
                 " version TEXT NOT NULL,"
                 " created REAL NOT NULL)")
-            self._conn.commit()
+            self._commit()
+        self._faults = fault_injector
+
+    # --------------------------------------------------------- lock retries
+    @staticmethod
+    def _is_lock_error(exc: sqlite3.OperationalError) -> bool:
+        msg = str(exc).lower()
+        return "locked" in msg or "busy" in msg
+
+    def _retry(self, fn):
+        """Run ``fn`` under the bounded-backoff locked/busy retry loop.
+        Call with ``self._lock`` held."""
+        delay = self.LOCK_BACKOFF_S
+        for attempt in range(self.lock_retries):
+            if self._faults is not None \
+                    and self._faults.should_fire("sqlite_lock"):
+                err: sqlite3.OperationalError = sqlite3.OperationalError(
+                    "database is locked")
+            else:
+                try:
+                    return fn()
+                except sqlite3.OperationalError as exc:
+                    if not self._is_lock_error(exc):
+                        raise
+                    err = exc
+            if attempt == self.lock_retries - 1:
+                raise err
+            time.sleep(delay)
+            delay = min(delay * 2, 0.5)
+        raise AssertionError("unreachable")
+
+    def _execute(self, sql: str, params: Tuple = ()):
+        return self._retry(lambda: self._conn.execute(sql, params))
+
+    def _commit(self) -> None:
+        self._retry(self._conn.commit)
 
     # ------------------------------------------------------------ keys/values
     def _addr(self, key: bytes) -> bytes:
@@ -240,7 +292,7 @@ class SqliteStore(_Bindable):
     def get(self, key: bytes) -> Optional[Row]:
         self.stats.gets += 1
         with self._lock:
-            cur = self._conn.execute(
+            cur = self._execute(
                 "SELECT w, data FROM results WHERE k = ?", (self._addr(key),))
             hit = cur.fetchone()
         if hit is None:
@@ -251,29 +303,29 @@ class SqliteStore(_Bindable):
     def put(self, key: bytes, row: Row) -> None:
         w, blob = self._encode(row)
         with self._lock:
-            self._conn.execute(
+            self._execute(
                 "INSERT OR IGNORE INTO results (k, w, data, version, created)"
                 " VALUES (?, ?, ?, ?, ?)",
                 (self._addr(key), w, blob, self.version, time.time()))
-            self._conn.commit()
+            self._commit()
         self.stats.puts += 1
 
     def peek(self, key: bytes) -> bool:
         with self._lock:
-            cur = self._conn.execute(
+            cur = self._execute(
                 "SELECT 1 FROM results WHERE k = ?", (self._addr(key),))
             return cur.fetchone() is not None
 
     def __len__(self) -> int:
         with self._lock:
-            return int(self._conn.execute(
+            return int(self._execute(
                 "SELECT COUNT(*) FROM results").fetchone()[0])
 
     def version_counts(self) -> Dict[str, int]:
         """Rows per cost-model version in the backing file (stale rows
         are the ones not matching ``self.version``)."""
         with self._lock:
-            cur = self._conn.execute(
+            cur = self._execute(
                 "SELECT version, COUNT(*) FROM results GROUP BY version")
             return {v: int(n) for v, n in cur.fetchall()}
 
@@ -281,13 +333,22 @@ class SqliteStore(_Bindable):
         """Delete rows written under any other cost-model version;
         returns the number reclaimed."""
         with self._lock:
-            cur = self._conn.execute(
+            cur = self._execute(
                 "DELETE FROM results WHERE version != ?", (self.version,))
-            self._conn.commit()
+            self._commit()
             return cur.rowcount
 
     def close(self) -> None:
+        """Idempotent; checkpoints + truncates the WAL first so a
+        short-lived process leaves just the .sqlite file behind."""
         with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            try:
+                self._conn.execute("PRAGMA wal_checkpoint(TRUNCATE)")
+            except sqlite3.Error:
+                pass   # best effort — another writer may hold the lock
             self._conn.close()
 
 
@@ -298,12 +359,22 @@ class TieredStore(_Bindable):
     is promoted into the front (so a warm persistent file refills the
     hot in-process working set at memory speed).  ``put``: write-through
     to both tiers.  Stats: this instance counts the merged view; the
-    tiers keep their own counters for attribution."""
+    tiers keep their own counters for attribution.
+
+    Degradation: the back tier is *optional for correctness* (it only
+    adds persistence), so a back-tier error — disk full, a locked sqlite
+    file past its retry budget, an injected chaos fault — never fails
+    the evaluation: the op completes against the LRU front alone, the
+    failure is counted in ``stats.errors``, and a ``RuntimeWarning`` is
+    emitted once per instance.  Reads degrade to front-only hits, writes
+    to front-only inserts; the run loses persistence for those rows,
+    not results."""
 
     def __init__(self, front: ResultStore, back: ResultStore):
         super().__init__()
         self.front = front
         self.back = back
+        self._warned_back = False
 
     def bind(self, context: bytes) -> "ResultStore":
         super().bind(context)
@@ -311,11 +382,24 @@ class TieredStore(_Bindable):
         self.back.bind(context)
         return self
 
+    def _back_error(self, op: str, exc: Exception) -> None:
+        self.stats.errors += 1
+        if not self._warned_back:
+            self._warned_back = True
+            warnings.warn(
+                f"TieredStore back tier failed on {op} ({exc!r}); "
+                "continuing LRU-only (counted in stats.errors)",
+                RuntimeWarning, stacklevel=3)
+
     def get(self, key: bytes) -> Optional[Row]:
         self.stats.gets += 1
         row = self.front.get(key)
         if row is None:
-            row = self.back.get(key)
+            try:
+                row = self.back.get(key)
+            except Exception as exc:      # degrade: serve front-only
+                self._back_error("get", exc)
+                row = None
             if row is not None:
                 self.front.put(key, row)   # promote
         if row is not None:
@@ -324,18 +408,35 @@ class TieredStore(_Bindable):
 
     def put(self, key: bytes, row: Row) -> None:
         self.front.put(key, row)
-        self.back.put(key, row)
+        try:
+            self.back.put(key, row)
+        except Exception as exc:          # degrade: lose persistence only
+            self._back_error("put", exc)
         self.stats.puts += 1
 
     def peek(self, key: bytes) -> bool:
-        return self.front.peek(key) or self.back.peek(key)
+        if self.front.peek(key):
+            return True
+        try:
+            return self.back.peek(key)
+        except Exception as exc:
+            self._back_error("peek", exc)
+            return False
 
     def __len__(self) -> int:
-        return max(len(self.front), len(self.back))
+        try:
+            n_back = len(self.back)
+        except Exception as exc:
+            self._back_error("len", exc)
+            n_back = 0
+        return max(len(self.front), n_back)
 
     def lru_dict(self) -> Optional[Dict[bytes, Row]]:
         return self.front.lru_dict()
 
     def close(self) -> None:
         self.front.close()
-        self.back.close()
+        try:
+            self.back.close()
+        except Exception as exc:
+            self._back_error("close", exc)

@@ -38,6 +38,17 @@ turns the per-process ``EvalEngine`` into traffic-serving infrastructure:
     genome), preserving the engine's semantics that skipped genomes are
     never memoized.
 
+The service degrades, it does not die: admission is bounded (a full
+queue rejects with a *retryable* ``OverloadedError`` instead of growing
+without limit), ``evaluate`` takes a per-request ``deadline_s`` (the
+wait is bounded; the shared work keeps running), the batcher loop
+survives any per-batch failure, and ``stop()`` drains gracefully, fails
+whatever remains with ``ConnectionError`` (nothing hangs forever), and
+is idempotent.  ``health``/``ping`` report liveness and queue pressure.
+The client reconnects and retries single-reply calls with exponential
+backoff + jitter under idempotent request ids — safe because
+evaluation is content-addressed.
+
 Running against a shared persistent store
 (``EvalEngine(store=TieredStore(MemoryLRUStore(), SqliteStore(path)))``)
 makes the service a cross-run result cache: a repeated study is
@@ -65,8 +76,11 @@ import functools
 import hashlib
 import itertools
 import json
+import random
 import socket
 import threading
+import time
+import warnings
 from typing import Any, Dict, Iterator, List, Optional, Sequence
 
 import numpy as np
@@ -79,7 +93,26 @@ from ..core.dse.pareto import pareto_mask
 from ..core.simulator.costs import COST_MODEL_VERSION
 from ..core.simulator.orchestrator import SCHEDULE_MODES
 
-__all__ = ["DSEService", "DSEClient", "ServiceStats"]
+__all__ = ["DSEService", "DSEClient", "ServiceStats", "OverloadedError",
+           "DeadlineExceededError"]
+
+
+class OverloadedError(RuntimeError):
+    """The admission queue is full: the request was rejected before any
+    of its genomes enqueued (no side effects).  Retryable — back off and
+    resubmit; ``DSEClient`` does so automatically."""
+
+    retryable = True
+
+
+class DeadlineExceededError(TimeoutError):
+    """``deadline_s`` elapsed before every requested row resolved.  The
+    underlying evaluations keep running (their futures are shared with
+    other tenants and the store memoizes their results), so a retry of
+    the same request is cheap — but NOT automatic: the deadline is the
+    caller's own budget."""
+
+    retryable = False
 
 
 # =============================================================================
@@ -181,19 +214,26 @@ class DSEService:
     """
 
     def __init__(self, engine: EvalEngine, max_batch: int = 1024,
-                 max_wait_ms: float = 10.0):
+                 max_wait_ms: float = 10.0, max_queue: int = 100_000,
+                 fault_injector=None):
         self.engine = engine
         self.max_batch = max(int(max_batch), 1)
         self.max_wait = max_wait_ms / 1e3
+        self.max_queue = max(int(max_queue), 0)   # 0 = unbounded
         self.stats = ServiceStats()
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._thread: Optional[threading.Thread] = None
         self._queue: Optional[asyncio.Queue] = None
         self._batcher_task = None
         self._server = None
+        self._conns: set = set()           # open TCP writers, aborted on stop
         self._inflight: Dict[bytes, asyncio.Future] = {}
         self._req_acct: Dict[int, Dict[str, Any]] = {}
         self._rid = itertools.count()
+        self._faults = fault_injector    # dse.faults.FaultInjector or None
+        self._stop_lock = threading.Lock()
+        self._stopping = False
+        self._t_start = time.monotonic()
         import concurrent.futures
         self._executor = concurrent.futures.ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="dse-dispatch")
@@ -220,25 +260,86 @@ class DSEService:
                                         name="dse-service")
         self._thread.start()
         ready.wait()
+        self._t_start = time.monotonic()
         return self
 
-    def stop(self) -> None:
-        if self._loop is None:
-            return
+    def stop(self, drain: bool = True, timeout: float = 30.0) -> None:
+        """Shut the service down.  Idempotent (concurrent/repeat calls
+        are no-ops) and graceful by default: stops admitting (new
+        ``evaluate`` calls raise ``ConnectionError``, the TCP listener
+        closes), drains the queued + in-flight work for up to
+        ``timeout`` seconds, then fails whatever is still pending with
+        ``ConnectionError`` — callers get an exception promptly, never a
+        future that hangs forever.  ``drain=False`` skips the wait and
+        fails pending work immediately.  Loud on leaks: warns if the
+        service thread refuses to exit."""
+        with self._stop_lock:
+            if self._loop is None or self._stopping:
+                return
+            self._stopping = True
+        loop, thread = self._loop, self._thread
 
         async def _shutdown():
             if self._server is not None:
                 self._server.close()
                 await self._server.wait_closed()
+                self._server = None
+            if drain:
+                deadline = loop.time() + timeout
+                while ((self._queue.qsize() or self._inflight)
+                       and loop.time() < deadline):
+                    await asyncio.sleep(0.01)
             self._batcher_task.cancel()
+            # whatever survived the drain window fails fast, not forever
+            leftover = list(self._inflight.values())
+            self._inflight.clear()
+            for fut in leftover:
+                if not fut.done():
+                    fut.set_exception(ConnectionError(
+                        "DSE service stopped before this request "
+                        "completed"))
+            # abort surviving TCP peers: once the loop stops, their
+            # handler coroutines freeze mid-readline and the sockets
+            # would stay half-open in this process — the peer then
+            # blocks out its full socket timeout instead of seeing a
+            # prompt reset
+            for w in list(self._conns):
+                try:
+                    w.transport.abort()
+                except Exception:   # noqa: BLE001 - already closed
+                    pass
+            self._conns.clear()
 
-        asyncio.run_coroutine_threadsafe(_shutdown(), self._loop).result()
-        self._loop.call_soon_threadsafe(self._loop.stop)
-        self._thread.join(timeout=10)
+        asyncio.run_coroutine_threadsafe(_shutdown(), loop).result()
+        loop.call_soon_threadsafe(loop.stop)
+        thread.join(timeout=10)
+        if thread.is_alive():
+            warnings.warn(
+                "dse-service thread did not exit within 10 s of stop() — "
+                "a dispatch is wedged; the daemon thread leaks until "
+                "process exit", RuntimeWarning, stacklevel=2)
         self._executor.shutdown(wait=False)
         self._searches.shutdown(wait=False)
         self._loop = None
         self._thread = None
+
+    close = stop   # the two names must behave identically
+
+    def health(self) -> Dict[str, Any]:
+        """Cheap liveness/pressure snapshot (also the ``health``/``ping``
+        wire op): status, queue depth vs. bound, in-flight count,
+        uptime.  Safe from any thread."""
+        if self._loop is None:
+            status = "stopped"
+        elif self._stopping:
+            status = "stopping"
+        else:
+            status = "ok"
+        return {"status": status,
+                "queue_depth": self._queue.qsize() if self._queue else 0,
+                "max_queue": self.max_queue,
+                "inflight": len(self._inflight),
+                "uptime_s": time.monotonic() - self._t_start}
 
     def listen(self, host: str = "127.0.0.1", port: int = 0):
         """Open the JSON-lines TCP front; returns the bound (host, port)."""
@@ -251,18 +352,35 @@ class DSEService:
 
     # ------------------------------------------------------------- evaluate
     async def evaluate(self, genomes: np.ndarray, mode: Optional[str] = None,
-                       canonical: Optional[np.ndarray] = None
+                       canonical: Optional[np.ndarray] = None,
+                       deadline_s: Optional[float] = None
                        ) -> Dict[str, Any]:
         """Score genomes through the coalescing queue; same output
         contract as ``EvalEngine.evaluate`` (no ``keep`` — the client
         applies its area prefilter before submitting), with a service
         ``meta``: per-request queue time, batch occupancy, store-hit
-        attribution, and in-flight merges."""
+        attribution, and in-flight merges.
+
+        Admission is bounded: when the queue already holds ``max_queue``
+        items the request is rejected with ``OverloadedError`` (a
+        retryable error, raised before anything enqueues) instead of
+        growing the backlog without limit.  ``deadline_s`` bounds the
+        *wait*, not the work: if the rows are not all resolved within
+        the budget, ``DeadlineExceededError`` raises while the shared
+        in-flight futures keep running for other tenants (a retry after
+        they finish is a store hit)."""
         eng = self.engine
         mode = eng.mode if mode is None else mode
         if mode not in SCHEDULE_MODES:
             raise ValueError(f"mode {mode!r} not in {SCHEDULE_MODES}")
+        if self._stopping or self._loop is None:
+            raise ConnectionError("DSE service is stopping")
         genomes = np.asarray(genomes, np.int64).reshape(-1, GENOME_LEN)
+        if self.max_queue and \
+                self._queue.qsize() + len(genomes) > self.max_queue:
+            raise OverloadedError(
+                f"admission queue holds {self._queue.qsize()} genomes "
+                f"(bound {self.max_queue}); retry after backoff")
         canon = canonical_genomes(genomes) if canonical is None else \
             np.asarray(canonical, np.int64).reshape(-1, GENOME_LEN)
         n = len(genomes)
@@ -293,7 +411,16 @@ class DSEService:
         st.store_hits += store_hits
         st.inflight_merged += merged
         try:
-            rows = await asyncio.gather(*futs)
+            if deadline_s is not None and futs:
+                done, pending = await asyncio.wait(set(futs),
+                                                   timeout=deadline_s)
+                if pending:
+                    raise DeadlineExceededError(
+                        f"{len(pending)} of {len(set(futs))} rows still "
+                        f"pending after the {deadline_s} s deadline")
+                rows = [f.result() for f in futs]
+            else:
+                rows = await asyncio.gather(*futs)
         finally:
             acct = self._req_acct.pop(rid)
         W = len(eng.workloads)
@@ -316,7 +443,13 @@ class DSEService:
         more until the batch fills or the window closes, dispatch, and
         repeat — arrivals during a dispatch queue up and form the next
         batch, so concurrent tenants coalesce whenever the engine is the
-        bottleneck (and within the window when it is not)."""
+        bottleneck (and within the window when it is not).
+
+        The loop survives any per-batch failure: ``_dispatch`` already
+        forwards engine exceptions to the batch's callers, and anything
+        that still escapes (an accounting bug, an injected fault) fails
+        that batch's futures and the loop keeps serving the next batch —
+        one tenant's poison never kills the service."""
         while True:
             batch = [await self._queue.get()]
             deadline = self._loop.time() + self.max_wait
@@ -329,7 +462,15 @@ class DSEService:
                         self._queue.get(), timeout))
                 except asyncio.TimeoutError:
                     break
-            await self._dispatch(batch)
+            try:
+                await self._dispatch(batch)
+            except asyncio.CancelledError:
+                raise
+            except Exception as exc:    # noqa: BLE001 - fail batch, live on
+                for it in batch:
+                    self._inflight.pop(it.key, None)
+                    if not it.future.done():
+                        it.future.set_exception(exc)
 
     async def _dispatch(self, batch: List[_Pending]):
         st = self.stats
@@ -535,23 +676,34 @@ class DSEService:
         def send(payload):
             writer.write(json.dumps(payload, default=float).encode() + b"\n")
 
+        self._conns.add(writer)
         try:
             while True:
                 line = await reader.readline()
                 if not line:
                     break
+                if self._faults is not None and \
+                        self._faults.should_fire("tcp_drop"):
+                    # chaos: drop the peer abruptly (RST, no goodbye) —
+                    # the client must reconnect and retry, not hang
+                    writer.transport.abort()
+                    return
                 try:
                     req = json.loads(line)
                     op = req.get("op")
                     if op == "hello":
                         send(self._hello())
+                    elif op in ("health", "ping"):
+                        send({"ok": True, **self.health()})
                     elif op == "evaluate":
                         g = np.asarray(req["genomes"], np.int64)
                         canon = req.get("canonical")
+                        dl = req.get("deadline_s")
                         res = await self.evaluate(
                             g, mode=req.get("mode"),
                             canonical=None if canon is None
-                            else np.asarray(canon, np.int64))
+                            else np.asarray(canon, np.int64),
+                            deadline_s=None if dl is None else float(dl))
                         send({"ok": True, "meta": res["meta"],
                               **{k: res[k].tolist()
                                  for k in ("latency", "energy", "tops_w",
@@ -610,9 +762,13 @@ class DSEService:
                     else:
                         send({"ok": False, "error": f"unknown op {op!r}"})
                 except Exception as exc:   # noqa: BLE001 - wire error reply
-                    send({"ok": False, "error": repr(exc)})
+                    send({"ok": False, "error": repr(exc),
+                          "error_kind": type(exc).__name__,
+                          "retryable": bool(getattr(exc, "retryable",
+                                                    False))})
                 await writer.drain()
         finally:
+            self._conns.discard(writer)
             writer.close()
             try:
                 await writer.wait_closed()
@@ -637,6 +793,20 @@ class DSEClient:
     the engine's own semantics.  ``stats`` mirrors ``EngineStats``
     client-side; its hits are the service's store-hit + in-flight-merge
     attribution (what this client did not cause to be simulated).
+
+    Fault tolerance: a dropped connection fails fast (EOF →
+    ``ConnectionError``, never a silent hang until the socket timeout)
+    and single-reply calls transparently reconnect and retry with
+    exponential backoff + jitter, up to ``retries`` times.  The retries
+    are safe to repeat: every request carries an idempotent request id,
+    evaluation is content-addressed (a re-sent request is a store hit or
+    an in-flight merge, never a second simulation), and the reconnect
+    handshake re-verifies the engine context digest — a *different*
+    server at the same address is rejected, not silently adopted.
+    Retryable server errors (``OverloadedError`` backpressure) back off
+    and retry on the live connection.  Streaming ops (``search`` /
+    ``pipeline``) fail fast on EOF and are not auto-retried: their
+    events already flowed to the caller.
     """
 
     _sharding = None    # duck-type: the device GA loop probes this
@@ -644,12 +814,21 @@ class DSEClient:
     def __init__(self, service: Optional[DSEService] = None,
                  address: Optional[tuple] = None,
                  calib: CalibrationTable = DEFAULT_CALIB,
-                 timeout: float = 600.0):
+                 timeout: float = 600.0, retries: int = 4,
+                 backoff_s: float = 0.1, backoff_max_s: float = 2.0):
         if (service is None) == (address is None):
             raise ValueError("pass exactly one of service= or address=")
         self._service = service
+        self._address = address
+        self._timeout = timeout
+        self.retries = max(int(retries), 0)
+        self.backoff_s = float(backoff_s)
+        self.backoff_max_s = float(backoff_max_s)
         self._sock = None
+        self._io = None
+        self._context: Optional[str] = None   # pinned on first connect
         self._lock = threading.Lock()
+        self._req_ids = itertools.count()
         if service is not None:
             eng = service.engine
             self.workloads = list(eng.workloads)
@@ -657,39 +836,99 @@ class DSEClient:
             self.backend = eng.backend
             self.mode = eng.mode
         else:
-            self._sock = socket.create_connection(address, timeout=timeout)
-            self._io = self._sock.makefile("rwb")
-            hello = self._call({"op": "hello"})
-            self.workloads = list(hello["workloads"])
-            self.backend = hello["backend"]
-            self.mode = hello["mode"]
             self.calib = calib
-            fidelity = "approx" if self.backend == "scan" else "exact"
-            text = repr((tuple(self.workloads), repr(self.calib),
-                         bool(hello["aggressive_int4"]),
-                         bool(hello["enable_fusion"]), fidelity,
-                         hello["cost_model_version"]))
-            digest = hashlib.sha256(text.encode()).hexdigest()
-            if digest != hello["context"]:
-                raise ValueError(
-                    "server engine context does not match this client's "
-                    "workloads/calibration/cost-model version — refusing "
-                    "to mix incompatible metrics")
+            with self._lock:
+                self._connect()
         self.memoize = True
         self.stats = EngineStats(workloads=len(self.workloads))
 
     # ---------------------------------------------------------------- wire
-    def _call(self, req: Dict[str, Any]) -> Dict[str, Any]:
-        with self._lock:
-            self._io.write(json.dumps(req, default=float).encode() + b"\n")
-            self._io.flush()
-            line = self._io.readline()
+    def _connect(self) -> None:
+        """(Re)establish the TCP session: connect, hello, verify the
+        engine context digest.  Caller holds ``self._lock``."""
+        self._sock = socket.create_connection(self._address,
+                                              timeout=self._timeout)
+        self._io = self._sock.makefile("rwb")
+        hello = self._call_once({"op": "hello"})
+        if not hello.get("ok", False):
+            raise ConnectionError(
+                f"DSE service hello failed: {hello.get('error')}")
+        self.workloads = list(hello["workloads"])
+        self.backend = hello["backend"]
+        self.mode = hello["mode"]
+        fidelity = "approx" if self.backend == "scan" else "exact"
+        text = repr((tuple(self.workloads), repr(self.calib),
+                     bool(hello["aggressive_int4"]),
+                     bool(hello["enable_fusion"]), fidelity,
+                     hello["cost_model_version"]))
+        digest = hashlib.sha256(text.encode()).hexdigest()
+        if digest != hello["context"]:
+            self._drop()
+            raise ValueError(
+                "server engine context does not match this client's "
+                "workloads/calibration/cost-model version — refusing "
+                "to mix incompatible metrics")
+        if self._context is None:
+            self._context = hello["context"]
+        elif self._context != hello["context"]:
+            self._drop()
+            raise ValueError(
+                "server at this address changed engine context between "
+                "reconnects — refusing to mix incompatible metrics")
+
+    def _drop(self) -> None:
+        """Tear the dead session down so the next call reconnects.
+        Caller holds ``self._lock``."""
+        for closer in (self._io, self._sock):
+            if closer is not None:
+                try:
+                    closer.close()
+                except Exception:   # noqa: BLE001 - already dead
+                    pass
+        self._sock = None
+        self._io = None
+
+    def _call_once(self, req: Dict[str, Any]) -> Dict[str, Any]:
+        """One request/reply exchange on the live session; raises
+        ``ConnectionError`` on EOF.  Caller holds ``self._lock``."""
+        self._io.write(json.dumps(req, default=float).encode() + b"\n")
+        self._io.flush()
+        line = self._io.readline()
         if not line:
             raise ConnectionError("DSE service closed the connection")
-        out = json.loads(line)
-        if not out.get("ok", False):
-            raise RuntimeError(f"DSE service error: {out.get('error')}")
-        return out
+        return json.loads(line)
+
+    def _call(self, req: Dict[str, Any]) -> Dict[str, Any]:
+        """Single-reply exchange with reconnect-and-retry.  The request
+        id assigned here is reused verbatim on every retry, so a resend
+        after an ambiguous failure (sent, connection died before the
+        reply) is idempotent end to end — evaluation is
+        content-addressed, so the server answers from its store."""
+        req.setdefault("rid", f"c{id(self) & 0xffffff:x}-"
+                              f"{next(self._req_ids)}")
+        delay = self.backoff_s
+        last: Optional[BaseException] = None
+        for attempt in range(self.retries + 1):
+            if attempt:
+                time.sleep(delay + random.uniform(0.0, delay / 2))
+                delay = min(delay * 2, self.backoff_max_s)
+            try:
+                with self._lock:
+                    if self._sock is None:
+                        self._connect()
+                    out = self._call_once(req)
+            except (ConnectionError, OSError) as exc:
+                with self._lock:
+                    self._drop()
+                last = exc
+                continue
+            if out.get("ok", False):
+                return out
+            err = RuntimeError(f"DSE service error: {out.get('error')}")
+            if not out.get("retryable", False):
+                raise err
+            last = err
+        raise last
 
     def _remote_metrics(self, out: Dict[str, Any]) -> Dict[str, Any]:
         return {k: np.asarray(out[k], np.float64)
@@ -699,10 +938,21 @@ class DSEClient:
     def _evaluate_remote(self, genomes: np.ndarray, mode: Optional[str],
                          canonical: Optional[np.ndarray]) -> Dict[str, Any]:
         if self._service is not None:
-            fut = asyncio.run_coroutine_threadsafe(
-                self._service.evaluate(genomes, mode, canonical),
-                self._service._loop)
-            return fut.result()
+            delay = self.backoff_s
+            for attempt in range(self.retries + 1):
+                if attempt:
+                    time.sleep(delay + random.uniform(0.0, delay / 2))
+                    delay = min(delay * 2, self.backoff_max_s)
+                fut = asyncio.run_coroutine_threadsafe(
+                    self._service.evaluate(genomes, mode, canonical),
+                    self._service._loop)
+                try:
+                    return fut.result()
+                except Exception as exc:    # noqa: BLE001 - maybe retryable
+                    if not getattr(exc, "retryable", False) or \
+                            attempt >= self.retries:
+                        raise
+            raise AssertionError("unreachable")
         req = {"op": "evaluate", "genomes": genomes.tolist(), "mode": mode}
         if canonical is not None:
             req["canonical"] = canonical.tolist()
@@ -809,11 +1059,14 @@ class DSEClient:
             req["seed_genomes"] = np.asarray(seed_genomes,
                                              np.int64).tolist()
         with self._lock:
+            if self._sock is None:
+                self._connect()
             self._io.write(json.dumps(req, default=float).encode() + b"\n")
             self._io.flush()
             while True:
                 line = self._io.readline()
                 if not line:
+                    self._drop()
                     raise ConnectionError("service closed mid-search")
                 ev = json.loads(line)
                 if not ev.get("ok", False):
@@ -856,11 +1109,14 @@ class DSEClient:
         if brackets is not None:
             req["brackets"] = [float(b) for b in brackets]
         with self._lock:
+            if self._sock is None:
+                self._connect()
             self._io.write(json.dumps(req, default=float).encode() + b"\n")
             self._io.flush()
             while True:
                 line = self._io.readline()
                 if not line:
+                    self._drop()
                     raise ConnectionError("service closed mid-pipeline")
                 ev = json.loads(line)
                 if not ev.get("ok", False):
@@ -880,15 +1136,23 @@ class DSEClient:
                     "store_len": len(self._service.engine.store)}
         return self._call({"op": "stats"})
 
+    def health(self) -> Dict[str, Any]:
+        """The service's liveness/pressure snapshot (see
+        ``DSEService.health``)."""
+        if self._service is not None:
+            return self._service.health()
+        out = self._call({"op": "health"})
+        out.pop("ok", None)
+        return out
+
     def close(self) -> None:
-        if self._sock is not None:
-            try:
-                self._call({"op": "bye"})
-            except Exception:   # noqa: BLE001 - already closed
-                pass
-            self._io.close()
-            self._sock.close()
-            self._sock = None
+        with self._lock:
+            if self._sock is not None:
+                try:
+                    self._call_once({"op": "bye"})
+                except Exception:   # noqa: BLE001 - already closed
+                    pass
+            self._drop()
 
 
 # =============================================================================

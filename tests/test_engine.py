@@ -391,3 +391,69 @@ def test_export_import_memo_roundtrip():
         eng.export_memo(mode="bogus")
     with pytest.raises(ValueError, match="shape"):
         eng.import_memo(canon, rows[:, :2])
+
+
+# =============================================================================
+# non-finite guard (PR 8)
+# =============================================================================
+
+def _poison_simulate(eng, cell=(0, 0)):
+    """Make the engine's next simulation return one NaN latency cell."""
+    inner = eng._simulate
+    state = {"armed": True}
+
+    def wrapped(cfgs, n, genomes=None, mode=None):
+        lat, en, tw = inner(cfgs, n, genomes=genomes, mode=mode)
+        if state["armed"]:
+            state["armed"] = False
+            lat = np.array(lat, np.float64, copy=True)
+            lat[cell] = np.nan
+        return lat, en, tw
+
+    eng._simulate = wrapped
+    return state
+
+
+def test_nonfinite_default_raises_naming_the_genome():
+    from repro.core.dse.engine import NonFiniteMetricsError
+    g = random_genomes(np.random.default_rng(11), 5)
+    eng = EvalEngine(["kan"], backend="exact")
+    _poison_simulate(eng)
+    with pytest.raises(NonFiniteMetricsError) as ei:
+        eng.evaluate(g)
+    err = ei.value
+    assert err.retryable                     # transient by contract
+    assert err.canon.shape == (GENOME_LEN,)  # the culprit, canonical
+    assert str(err.canon.tolist()) in str(err)
+    # the poisoned batch never reached the memo: a retry is bitwise clean
+    clean = EvalEngine(["kan"], backend="exact").evaluate(g)
+    retried = eng.evaluate(g)
+    for k in ("latency", "energy", "tops_w"):
+        assert clean[k].tobytes() == retried[k].tobytes(), k
+
+
+def test_nonfinite_skip_scores_minus_inf_and_never_memoizes():
+    g = random_genomes(np.random.default_rng(11), 5)
+    eng = EvalEngine(["kan"], backend="exact", nonfinite="skip")
+    _poison_simulate(eng)
+    res = eng.evaluate(g)
+    assert res["meta"]["nonfinite"] == 1
+    bad = np.isinf(res["latency"]).all(axis=1) & \
+        np.isinf(res["energy"]).all(axis=1) & (res["tops_w"] == 0).all(axis=1)
+    assert bad.sum() == 1                    # exactly the poisoned row
+    # the skipped row was not memoized: re-evaluating recomputes it —
+    # now un-poisoned — and the whole batch matches a clean engine
+    again = eng.evaluate(g)
+    assert again["meta"]["nonfinite"] == 0
+    clean = EvalEngine(["kan"], backend="exact").evaluate(g)
+    for k in ("latency", "energy", "tops_w"):
+        assert clean[k].tobytes() == again[k].tobytes(), k
+
+
+def test_nonfinite_ctor_validation():
+    with pytest.raises(ValueError, match="nonfinite"):
+        EvalEngine(["kan"], nonfinite="bogus")
+    # legitimate unmappable rows (inf, inf, 0) are NOT corruption: the
+    # skip path leaves genuinely-infinite sentinel rows alone
+    eng = EvalEngine(["kan"], backend="exact", nonfinite="raise")
+    assert eng.nonfinite == "raise"

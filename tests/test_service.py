@@ -141,3 +141,104 @@ def test_client_requires_exactly_one_transport(service):
         DSEClient()
     with pytest.raises(ValueError):
         DSEClient(service=service, address=("127.0.0.1", 1))
+
+
+# =============================================================================
+# resilience (PR 8): stop/health/backpressure/deadline/fail-fast
+# =============================================================================
+
+def test_stop_is_idempotent_and_close_is_an_alias():
+    svc = DSEService(EvalEngine(WLS)).start()
+    assert svc.health()["status"] == "ok"
+    svc.stop()
+    svc.stop()                  # second stop: silent no-op
+    svc.close()                 # alias, also a no-op now
+    assert svc.health()["status"] == "stopped"
+    assert svc._loop is None and svc._thread is None
+
+
+def test_health_in_process_and_over_the_wire(service):
+    h = service.health()
+    assert h["status"] == "ok" and h["uptime_s"] >= 0
+    assert {"queue_depth", "max_queue", "inflight"} <= set(h)
+    host, port = service.listen()
+    cl = DSEClient(address=(host, port))
+    try:
+        hw = cl.health()
+        assert hw["status"] == "ok"
+    finally:
+        cl.close()
+
+
+def test_overload_rejects_with_retryable_error():
+    from repro.serve.dse_service import OverloadedError
+    svc = DSEService(EvalEngine(WLS), max_queue=1).start()
+    try:
+        with pytest.raises(OverloadedError) as ei:
+            # 4 genomes > a 1-slot queue: rejected at admission, and the
+            # client's retries see the same overload each time
+            DSEClient(service=svc, retries=1,
+                      backoff_s=0.01).evaluate(_genomes(4, seed=11))
+        assert getattr(ei.value, "retryable", False)
+        assert svc._queue.qsize() == 0        # nothing half-enqueued
+    finally:
+        svc.stop()
+
+
+def test_deadline_bounds_the_wait_not_the_work():
+    import asyncio
+
+    from repro.serve.dse_service import DeadlineExceededError
+    svc = DSEService(EvalEngine(WLS), max_wait_ms=1.0).start()
+    g = _genomes(6, seed=12)
+    try:
+        with pytest.raises(DeadlineExceededError):
+            asyncio.run_coroutine_threadsafe(
+                svc.evaluate(g, deadline_s=1e-9), svc._loop).result()
+        # the shared futures kept running: an unbounded follow-up gets
+        # the full (bitwise-correct) answer
+        out = asyncio.run_coroutine_threadsafe(
+            svc.evaluate(g), svc._loop).result()
+        local = EvalEngine(WLS).evaluate(g)
+        for k in METRICS:
+            assert local[k].tobytes() == out[k].tobytes(), k
+    finally:
+        svc.stop()
+
+
+def test_dead_server_fails_fast_not_600s():
+    import time
+    svc = DSEService(EvalEngine(WLS)).start()
+    host, port = svc.listen()
+    cl = DSEClient(address=(host, port), retries=2, backoff_s=0.01)
+    cl.evaluate(_genomes(3, seed=13))
+    svc.stop()
+    t0 = time.time()
+    with pytest.raises((ConnectionError, OSError)):
+        cl.evaluate(_genomes(3, seed=13))
+    # EOF/refused surfaces through the bounded retry loop in seconds —
+    # never a silent hang until the 600 s socket timeout
+    assert time.time() - t0 < 30
+    cl.close()
+
+
+def test_stop_fails_undrained_futures_loudly():
+    import time
+    svc = DSEService(EvalEngine(WLS)).start()
+    # park a future the batcher will never resolve (bypass the queue)
+    fut = None
+
+    def plant():
+        nonlocal fut
+        f = svc._loop.create_future()
+        svc._inflight[b"orphan"] = f
+        fut = f
+
+    svc._loop.call_soon_threadsafe(plant)
+    deadline = time.time() + 10
+    while fut is None and time.time() < deadline:
+        time.sleep(0.01)
+    assert fut is not None
+    svc.stop(drain=False)
+    # nothing hangs forever: stop() failed the orphan with a clear error
+    assert isinstance(fut.exception(), ConnectionError)

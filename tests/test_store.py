@@ -150,6 +150,77 @@ def test_tiered_layering_and_promotion(tmp_path):
     st.close()
 
 
+def test_sqlite_close_is_idempotent_and_checkpoints_wal(tmp_path):
+    import os
+    path = str(tmp_path / "r.sqlite")
+    st = SqliteStore(path).bind(b"ctx")
+    for i in range(8):
+        st.put(f"k{i}".encode(), _row(i))
+    assert os.path.exists(path + "-wal")      # WAL mode is active
+    st.close()
+    st.close()                                # second close: no-op
+    # close() checkpointed + truncated the WAL: nothing left to replay,
+    # so a plain file copy of the .sqlite is a complete snapshot
+    assert os.path.getsize(path + "-wal") == 0 \
+        if os.path.exists(path + "-wal") else True
+    st2 = SqliteStore(path).bind(b"ctx")
+    assert len(st2) == 8
+    assert _bitwise(st2.get(b"k3"), _row(3))
+    st2.close()
+
+
+def test_sqlite_retries_locked_database(tmp_path):
+    from repro.core.dse.faults import FaultInjector
+    inj = FaultInjector(seed=0, at={"sqlite_lock": (0,)})
+    st = SqliteStore(str(tmp_path / "r.sqlite"),
+                     fault_injector=inj).bind(b"ctx")
+    st.put(b"k", _row(1))                     # first attempt "locked"
+    assert _bitwise(st.get(b"k"), _row(1))
+    assert inj.fired()["sqlite_lock"] == 1
+    st.close()
+
+
+class _DeadBack:
+    """A back tier whose every data op fails — a full-disk / corrupted
+    sqlite stand-in for the degradation test."""
+
+    def __init__(self):
+        from repro.core.dse.store import StoreStats
+        self.stats = StoreStats()
+
+    def bind(self, context):
+        return self
+
+    def get(self, key):
+        raise OSError("disk on fire")
+
+    def put(self, key, row):
+        raise OSError("disk on fire")
+
+    def peek(self, key):
+        raise OSError("disk on fire")
+
+    def __len__(self):
+        raise OSError("disk on fire")
+
+    def close(self):
+        raise OSError("disk on fire")
+
+
+def test_tiered_survives_back_tier_failure_lru_only():
+    st = TieredStore(MemoryLRUStore(), _DeadBack()).bind(b"ctx")
+    rows = {bytes([i]): _row(i) for i in range(3)}
+    with pytest.warns(RuntimeWarning, match="LRU-only"):
+        for k, r in rows.items():
+            st.put(k, r)                      # warned once, not thrice
+    for k, r in rows.items():                 # served from the LRU front
+        assert _bitwise(st.get(k), r)
+    assert st.peek(b"\x00")
+    assert len(st) == 3                       # front count still works
+    assert st.stats.errors >= 3
+    st.close()                                # dead back close absorbed
+
+
 def test_engine_store_served_results_bitwise(tmp_path):
     path = str(tmp_path / "r.sqlite")
     rng = np.random.default_rng(3)
