@@ -12,6 +12,7 @@ import argparse
 
 import numpy as np
 
+from repro.core.dse.api import EngineConfig
 from repro.core.dse.encoding import decode
 from repro.core.dse.engine import EvalEngine
 from repro.core.dse.ga import GAConfig, run_ga
@@ -37,7 +38,8 @@ def run(samples_per_stratum: int = 40, ga_cfg: GAConfig = None,
     wls = workload_names()
     # one engine across the sweep and every bracket's GA: each GA's seed
     # population (top-k sweep individuals) is already memoized
-    engine = EvalEngine(wls, backend="exact" if exact else "scan")
+    engine = EvalEngine(wls, config=EngineConfig(
+        backend="exact" if exact else "scan"))
     sw = run_sweep(wls, samples_per_stratum=samples_per_stratum, seed=0,
                    verbose=True, engine=engine)
     rows = []

@@ -45,7 +45,13 @@
   plus the resume-replay path over a completed checkpoint directory —
   informational (no floor): the overhead is stage-boundary I/O, the
   replay speedup is what a crash-resume saves (PR 8; writes
-  ``BENCH_PR8.json``).
+  ``BENCH_PR8.json``);
+* the per-link NoC + per-channel DRAM fidelity tier
+  (``fidelity="link"``) vs the aggregate tier on the exact throughput
+  dispatch — identical mapping/latency/energy asserted, ``II(link) >=
+  II(aggregate)`` pinned, overhead reported against a fail-soft 3.5x
+  ceiling (PR 9; ``--link-fidelity`` runs just this one and writes
+  ``BENCH_PR9.json``).
 
 Besides the per-run ``results/bench/perf_micro.json`` payload, ``run``
 writes the machine-readable cross-PR trajectory files ``BENCH_PR5.json``
@@ -71,6 +77,7 @@ from repro.core.compiler.pipeline import compile_to_table, lower_plan
 from repro.core.dse.batch_eval import (batch_evaluate, prepare_configs,
                                        prepare_workload)
 from repro.core.dse.encoding import decode, random_genomes
+from repro.core.dse.api import EngineConfig
 from repro.core.dse.engine import (EngineStats, EvalEngine,
                                    genomes_to_configs, prepared_workload)
 from repro.core.dse.ga import GAConfig, run_ga
@@ -214,7 +221,7 @@ def run_ga_exact_speedup(repeats: int = 3, population: int = 64,
     e_homo = sweep.homo_baseline()[200.0]
 
     def fresh(backend):
-        eng = EvalEngine(workloads, backend=backend)
+        eng = EvalEngine(workloads, config=EngineConfig(backend=backend))
         eng.evaluate(sweep.genomes)   # untimed memo warm (shared sweep→GA)
         return eng
 
@@ -223,7 +230,8 @@ def run_ga_exact_speedup(repeats: int = 3, population: int = 64,
     _ga_run(fresh("batched"), True, sweep, loop="host", cfg=cfg)
     _, res_dev = _ga_run(fresh("exact"), True, sweep, loop="device", cfg=cfg)
 
-    m_search = EvalEngine(workloads, backend="exact").evaluate(
+    m_search = EvalEngine(
+        workloads, config=EngineConfig(backend="exact")).evaluate(
         res_dev.best_genome[None, :])
     m_rescore = EvalEngine(workloads).rescore(res_dev.best_genome[None, :])
     f_search = fitness_device(m_search, e_homo, 200.0)
@@ -445,6 +453,71 @@ def run_throughput_exact(population: int = 64, repeats: int = 3,
     }
 
 
+def run_link_fidelity_overhead(population: int = 64, repeats: int = 3,
+                               workloads=EXACT_WORKLOADS) -> dict:
+    """What the per-link NoC + per-channel DRAM tier costs over the
+    aggregate tier on the exact throughput path.
+
+    Both sides run the identical fused mapper+executor dispatch in
+    ``mode="throughput"``; only the II composition differs — the link
+    tier folds XY-routed per-link occupancy and per-channel DRAM queues
+    into the steady-state bound.  The tier is a jit-cache key, so each
+    side is warmed separately (untimed), and the invariant ``II(link) >=
+    II(aggregate)`` plus identical mappable sets / latency / energy are
+    asserted on every row before timing starts.  Reported as an overhead
+    multiplier with a fail-soft ceiling for the perf-smoke job: the link
+    tier buys contention fidelity, it must not cost a regime change."""
+    rng = np.random.default_rng(2)  # same genomes as run_exact_path_speedup
+    genomes = random_genomes(rng, population)
+    cfgs = genomes_to_configs(genomes)
+    ws_all = {w: prepared_workload(w) for w in workloads}
+
+    def run_fid(fid):
+        return {w: map_and_simulate(ws_all[w], cfgs, mode="throughput",
+                                    fidelity=fid)
+                for w in workloads}
+
+    agg = run_fid("aggregate")   # jit warmup, per fidelity tier
+    link = run_fid("link")
+    tighter = total = 0
+    for w in workloads:
+        ok = np.flatnonzero(agg[w]["ok"])
+        assert np.array_equal(agg[w]["ok"], link[w]["ok"]), w
+        assert np.array_equal(agg[w]["latency_s"][ok],
+                              link[w]["latency_s"][ok]), \
+            (w, "fidelity tier leaked into the latency surface")
+        assert np.array_equal(agg[w]["energy_pj"][ok],
+                              link[w]["energy_pj"][ok]), \
+            (w, "fidelity tier leaked into the energy surface")
+        assert np.all(link[w]["ii_s"][ok] >= agg[w]["ii_s"][ok]), \
+            (w, "link-tier II fell below the aggregate bound")
+        tighter += int(np.sum(link[w]["ii_s"][ok] > agg[w]["ii_s"][ok]))
+        total += len(ok)
+
+    t_agg, t_link = [], []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        run_fid("aggregate")
+        t_agg.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        run_fid("link")
+        t_link.append(time.perf_counter() - t0)
+    med_agg, med_link = median_s(t_agg), median_s(t_link)
+    return {
+        "population": population,
+        "workloads": list(workloads),
+        "aggregate_s": min(t_agg),
+        "link_s": min(t_link),
+        "aggregate_median_s": med_agg,
+        "link_median_s": med_link,
+        "overhead_x": med_link / max(med_agg, 1e-12),
+        "frac_ii_tightened": tighter / max(total, 1),
+        "ii_dominates": True,            # asserted above
+        "max_overhead_x": 3.5,           # perf-smoke fail-soft ceiling
+        "within_budget": med_link / max(med_agg, 1e-12) <= 3.5,
+    }
+
+
 def run_service_coalescing(population: int = 32, generations: int = 6,
                            workloads=("kan", "resnet50_int8"),
                            seeds=(0, 1), max_wait_ms: float = 100.0,
@@ -479,12 +552,13 @@ def run_service_coalescing(population: int = 32, generations: int = 6,
                    seed_top_k=min(16, population), early_stop=10_000)
     sweep = run_sweep(workloads, samples_per_stratum=4, seed=0,
                       brackets=(100.0, bracket),
-                      engine=EvalEngine(workloads, backend="exact"))
+                      engine=EvalEngine(workloads,
+                                        config=EngineConfig(backend="exact")))
 
     # ---- baseline: sequential tenants on private local engines ----------
     local, local_wall, local_dispatches = {}, 0.0, 0
     for s in seeds:
-        eng = EvalEngine(workloads, backend="exact")
+        eng = EvalEngine(workloads, config=EngineConfig(backend="exact"))
         t0 = time.perf_counter()
         local[s] = run_ga(sweep, bracket, cfg, seed=s, engine=eng)
         local_wall += time.perf_counter() - t0
@@ -495,9 +569,9 @@ def run_service_coalescing(population: int = 32, generations: int = 6,
                       "results.sqlite")
 
     def serve(run_seeds):
-        eng = EvalEngine(workloads, backend="exact",
-                         store=TieredStore(MemoryLRUStore(),
-                                           SqliteStore(db)))
+        eng = EvalEngine(workloads, config=EngineConfig(
+            backend="exact", store=TieredStore(MemoryLRUStore(),
+                                               SqliteStore(db))))
         svc = DSEService(eng, max_batch=max_batch, max_wait_ms=max_wait_ms)
         svc.start()
         try:
@@ -592,12 +666,12 @@ def run_pipeline_speedup(population: int = 4096, generations: int = 6,
     workloads = list(workloads)
     cfg = GAConfig(population=population, generations=generations,
                    seed_top_k=min(64, population), early_stop=10_000)
-    setup = EvalEngine(workloads, backend="exact")
+    setup = EvalEngine(workloads, config=EngineConfig(backend="exact"))
     sweep = run_sweep(workloads, samples_per_stratum=8, seed=seed,
                       brackets=tuple(brackets), engine=setup)
 
     def fresh():
-        eng = EvalEngine(workloads, backend="exact")
+        eng = EvalEngine(workloads, config=EngineConfig(backend="exact"))
         eng.evaluate(sweep.genomes)   # untimed memo warm (shared sweep->GA)
         return eng
 
@@ -687,7 +761,7 @@ def run_checkpoint_overhead(population: int = 256, generations: int = 4,
               samples_per_stratum=samples_per_stratum, cfg=cfg)
 
     def fresh():
-        return EvalEngine(workloads, backend="exact")
+        return EvalEngine(workloads, config=EngineConfig(backend="exact"))
 
     def run_plain():
         return run_pipeline(workloads, engine=fresh(), **kw)
@@ -908,6 +982,36 @@ def write_bench_pr8(payload: dict, smoke: bool) -> str:
         "BENCH_PR8_smoke.json" if smoke else "BENCH_PR8.json", bench)
 
 
+def write_bench_pr9(payload: dict, smoke: bool) -> str:
+    """Distill the link-fidelity benchmark into the PR-9 trajectory file
+    ``BENCH_PR9.json`` at the repo root (``perf_compare`` keeps merging
+    the earlier ``BENCH_PR*.json`` files for the benchmarks this one
+    doesn't carry).  Smoke runs write the gitignored
+    ``BENCH_PR9_smoke.json`` instead."""
+    lf = payload["link_fidelity"]
+    bench = {
+        "pr": 9,
+        "smoke": smoke,
+        "generated_unix": time.time(),
+        "benchmarks": {
+            # baseline = the aggregate tier on the identical dispatch;
+            # "speedup" below 1.0 IS the contention-fidelity overhead
+            # (bounded fail-soft by max_overhead_x in perf-smoke)
+            "run_link_fidelity_overhead": _bench_entry(
+                lf["link_median_s"], lf["aggregate_median_s"],
+                population=lf["population"],
+                workloads=lf["workloads"],
+                overhead_x=lf["overhead_x"],
+                frac_ii_tightened=lf["frac_ii_tightened"],
+                ii_dominates=lf["ii_dominates"],
+                max_overhead_x=lf["max_overhead_x"],
+                within_budget=lf["within_budget"]),
+        },
+    }
+    return save_repo_json(
+        "BENCH_PR9_smoke.json" if smoke else "BENCH_PR9.json", bench)
+
+
 def run(smoke: bool = False) -> dict:
     """Full microbenchmark suite; ``smoke=True`` runs small-population
     exact-path + exact-GA checks (the non-blocking CI perf-smoke job:
@@ -926,6 +1030,9 @@ def run(smoke: bool = False) -> dict:
             "ga_exact": run_ga_exact_speedup(
                 repeats=3, population=32, generations=8,
                 workloads=["kan", "resnet50_int8"]),
+            "link_fidelity": run_link_fidelity_overhead(
+                population=16, repeats=2,
+                workloads=["kan", "resnet50_int8"]),
             "service_coalescing": run_service_coalescing(
                 population=16, generations=4),
             # small population: the host loop's per-genome Python work
@@ -940,6 +1047,7 @@ def run(smoke: bool = False) -> dict:
         write_bench_pr6(payload, smoke=True)
         write_bench_pr7(payload, smoke=True)
         write_bench_pr8(payload, smoke=True)
+        write_bench_pr9(payload, smoke=True)
         save_json("perf_micro_smoke", payload)
         return payload
 
@@ -975,6 +1083,7 @@ def run(smoke: bool = False) -> dict:
         "population_sim": run_population_sim_speedup(),
         "exact_path": run_exact_path_speedup(),
         "exact_path_throughput": run_throughput_exact(),
+        "link_fidelity": run_link_fidelity_overhead(),
         "service_coalescing": run_service_coalescing(),
         "pipeline": run_pipeline_speedup(),
         "checkpoint": run_checkpoint_overhead(),
@@ -984,6 +1093,7 @@ def run(smoke: bool = False) -> dict:
     write_bench_pr6(payload, smoke=False)
     write_bench_pr7(payload, smoke=False)
     write_bench_pr8(payload, smoke=False)
+    write_bench_pr9(payload, smoke=False)
     return payload
 
 
@@ -1014,6 +1124,14 @@ def _csv_rows(p: dict, smoke: bool = False) -> list:
             f"vs_pr4_approx_search={gx['speedup_vs_scan_search']:.1f}x "
             f"pop={gx['ga_population']} "
             f"target_5x={'met' if gx['meets_target'] else 'MISSED'}"))
+    if "link_fidelity" in p:
+        lf = p["link_fidelity"]
+        rows.append(csv_row(
+            "perf_link_fidelity", lf["link_s"],
+            f"vs_aggregate_tier={lf['overhead_x']:.2f}x_cost "
+            f"pop={lf['population']} "
+            f"ii_tightened={lf['frac_ii_tightened']:.0%} "
+            f"budget_3p5x={'met' if lf['within_budget'] else 'MISSED'}"))
     if "service_coalescing" in p:
         sc = p["service_coalescing"]
         rows.append(csv_row(
@@ -1071,11 +1189,27 @@ if __name__ == "__main__":
                     help="run only the service-coalescing benchmark and "
                          "write BENCH_PR6.json (full-suite benchmarks stay "
                          "carried by the earlier BENCH_PR*.json files)")
+    ap.add_argument("--link-fidelity", action="store_true",
+                    help="run only the link-fidelity overhead benchmark "
+                         "and write BENCH_PR9.json (full-suite benchmarks "
+                         "stay carried by the earlier BENCH_PR*.json files)")
     ap.add_argument("--pipeline", action="store_true",
                     help="run only the fused-pipeline benchmark and write "
                          "BENCH_PR7.json (full-suite benchmarks stay "
                          "carried by the earlier BENCH_PR*.json files)")
     args = ap.parse_args()
+    if args.link_fidelity:
+        payload = {"link_fidelity": run_link_fidelity_overhead()}
+        write_bench_pr9(payload, smoke=False)
+        save_json("perf_link_fidelity", payload)
+        lf = payload["link_fidelity"]
+        print(csv_row(
+            "perf_link_fidelity", lf["link_s"],
+            f"vs_aggregate_tier={lf['overhead_x']:.2f}x_cost "
+            f"pop={lf['population']} "
+            f"ii_tightened={lf['frac_ii_tightened']:.0%} "
+            f"budget_3p5x={'met' if lf['within_budget'] else 'MISSED'}"))
+        sys.exit(0 if lf["within_budget"] and lf["ii_dominates"] else 1)
     if args.pipeline:
         payload = {"pipeline": run_pipeline_speedup()}
         write_bench_pr7(payload, smoke=False)
@@ -1124,6 +1258,16 @@ if __name__ == "__main__":
         else:
             print(f"perf-smoke: exact-GA speedup {ga_spd:.2f}x "
                   f"(floor {floor:.0f}x)")
+        lf = payload["link_fidelity"]
+        if not lf["within_budget"]:
+            print(f"perf-smoke: link-fidelity overhead "
+                  f"{lf['overhead_x']:.2f}x > "
+                  f"{lf['max_overhead_x']:.0f}x ceiling", file=sys.stderr)
+            failed = True
+        else:
+            print(f"perf-smoke: link-fidelity overhead "
+                  f"{lf['overhead_x']:.2f}x "
+                  f"(ceiling {lf['max_overhead_x']:.0f}x)")
         pp_spd = payload["pipeline"]["median_speedup"]
         pp_floor = payload["pipeline"]["floor_speedup"]
         if pp_spd < pp_floor:

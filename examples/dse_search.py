@@ -22,6 +22,7 @@ import warnings
 import numpy as np
 
 from repro.core.dse.encoding import decode
+from repro.core.dse.api import EngineConfig
 from repro.core.dse.engine import EvalEngine
 from repro.core.dse.ga import GAConfig, run_ga
 from repro.core.dse.pareto import pareto_front
@@ -101,8 +102,8 @@ def main():
 
     # one cache-aware engine end to end: the GA re-scores sweep genomes
     # (its seed population) and its own elites for free
-    engine = EvalEngine(args.workloads,
-                        backend="exact" if args.exact else "scan")
+    engine = EvalEngine(args.workloads, config=EngineConfig(
+        backend="exact" if args.exact else "scan"))
 
     print(f"[1/3] stratified sweep ({args.samples}/stratum x 15 strata)...")
     sw = run_sweep(args.workloads, samples_per_stratum=args.samples, seed=0,

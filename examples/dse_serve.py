@@ -23,6 +23,7 @@ import warnings
 import numpy as np
 
 from repro.core.dse.encoding import decode
+from repro.core.dse.api import EngineConfig
 from repro.core.dse.engine import EvalEngine
 from repro.core.dse.ga import GAConfig, run_ga
 from repro.core.dse.store import MemoryLRUStore, SqliteStore, TieredStore
@@ -48,7 +49,8 @@ def main():
 
     store = (TieredStore(MemoryLRUStore(), SqliteStore(args.store))
              if args.store else None)
-    engine = EvalEngine(args.workloads, backend="exact", store=store)
+    engine = EvalEngine(args.workloads, config=EngineConfig(
+        backend="exact", store=store))
 
     print(f"[1/4] stratified sweep ({args.samples}/stratum, warms the "
           f"store)...")

@@ -58,12 +58,14 @@ def run_serving_dse(args):
     """Throughput-mode NPU search for the serving deployment (see module
     docstring): sweep candidates at an II target, exact-rescore the best."""
     from repro.core.dse.encoding import random_genomes
+    from repro.core.dse.api import EngineConfig
     from repro.core.dse.engine import EvalEngine
     from repro.core.dse.objective import serving_fitness
 
     workloads = ["llama7b_int4", "vit_b16_int8"]
     ii_target_s = args.ii_target_us * 1e-6
-    engine = EvalEngine(workloads, mode="throughput")
+    engine = EvalEngine(workloads,
+                        config=EngineConfig(mode="throughput"))
     rng = np.random.default_rng(args.seed)
     genomes = random_genomes(rng, args.samples)
     m = engine.evaluate(genomes)

@@ -144,6 +144,10 @@ class ChipConfig:
     noc_bytes_per_cycle: float = 64.0
     noc_base_cycles: int = 8         # per-hop base latency
     ref_clock_mhz: int = 1000        # chip-level cycle base for NoC/DRAM DMA
+    # link-fidelity interconnect structure (ignored by the aggregate tier)
+    torus: bool = False              # wrap-around links on the tile grid
+    grid_aspect: float = 1.0         # grid_w ~= round(sqrt(n) * aspect)
+    dram_channels: int = 1           # address-interleaved DRAM channels
 
     def __post_init__(self):
         if not (1 <= len(self.tiles) <= MAX_TILE_TYPES):
@@ -151,6 +155,10 @@ class ChipConfig:
         for t, c in self.tiles:
             if not (1 <= c <= MAX_INSTANCES):
                 raise ValueError(f"{self.name}/{t.name}: count {c} out of 1..{MAX_INSTANCES}")
+        if self.dram_channels < 1:
+            raise ValueError(f"{self.name}: dram_channels must be >= 1")
+        if self.grid_aspect <= 0:
+            raise ValueError(f"{self.name}: grid_aspect must be > 0")
 
     def instances(self) -> List[TileTemplate]:
         out: List[TileTemplate] = []
@@ -191,6 +199,9 @@ class ChipConfig:
             "noc_base_cycles": np.float64(self.noc_base_cycles),
             "interconnect": np.float64(int(self.interconnect)),
             "ref_clock_mhz": np.float64(self.ref_clock_mhz),
+            "torus": np.float64(self.torus),
+            "grid_aspect": np.float64(self.grid_aspect),
+            "dram_channels": np.float64(self.dram_channels),
         }
         return {"tile": vec, "chip": chip}
 
@@ -203,6 +214,7 @@ TILE_VEC_FIELDS = (
 CHIP_VEC_FIELDS = (
     "dram_gbps", "dram_latency_cycles", "noc_bytes_per_cycle",
     "noc_base_cycles", "interconnect", "ref_clock_mhz",
+    "torus", "grid_aspect", "dram_channels",
 )
 
 
@@ -224,6 +236,12 @@ KNOB_GRID: Dict[str, tuple] = {
     "engine": (Engine.SYSTOLIC, Engine.SPATIAL, Engine.DOT, Engine.CIM),
     "dataflow": (Dataflow.WS, Dataflow.OS, Dataflow.RS),
     "interconnect": (Interconnect.MESH, Interconnect.BUS, Interconnect.RING, Interconnect.NOC),
+    # link-fidelity interconnect knobs (searched as genome genes; the
+    # aggregate tier only reads noc_bpc)
+    "noc_topology": (False, True),                           # mesh, torus
+    "grid_aspect": (0.5, 1.0, 2.0),
+    "noc_bpc": (32, 64, 128, 256),
+    "dram_channels": (1, 2, 4, 8),
     "double_buffer": (False, True),
     "asym_mac": (AsymMAC.NONE, AsymMAC.W4A8, AsymMAC.W2A8, AsymMAC.W4A16),
     "pipeline_depth": (1, 4, 8, 16),
@@ -247,7 +265,11 @@ def knob_space_size() -> float:
         * len(KNOB_GRID["pipeline_depth"])
         * len(KNOB_GRID["sfu_mask"])
     )
-    chip = len(KNOB_GRID["dram_gbps"]) * len(KNOB_GRID["interconnect"])
+    chip = (
+        len(KNOB_GRID["dram_gbps"]) * len(KNOB_GRID["interconnect"])
+        * len(KNOB_GRID["noc_topology"]) * len(KNOB_GRID["grid_aspect"])
+        * len(KNOB_GRID["noc_bpc"]) * len(KNOB_GRID["dram_channels"])
+    )
     return float(per_tile) ** MAX_TILE_TYPES * chip
 
 

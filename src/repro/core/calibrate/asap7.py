@@ -79,6 +79,9 @@ class CalibrationTable:
     a_ports_base_mm2: float = 0.36
     a_ports_per_lane_mm2: float = 1.25e-2   # per (row+col) DMA lane
     a_noc_mm2_per_tile: float = 0.045
+    # per-channel DRAM PHY + controller (beyond the first, which the
+    # baseline area already carries)
+    a_dram_phy_mm2: float = 1.8
     # sparsity-logic area overhead multipliers (index = Sparsity)
     sparsity_a_mult: tuple = (1.0, 1.06, 1.06, 1.12, 1.04)
     # ---- timing -------------------------------------------------------------

@@ -67,14 +67,16 @@ import jax.numpy as jnp
 
 from ..arch import MAX_TILES
 from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
-from ..ir import OpClass
+from ..ir import MAX_PREDS, OpClass
 from ..simulator.batched import (CHIP_KEYS, SCHEDULE_MODES, TILE_KEYS,
                                  _build_plan_exec, _OP_TABLE_KEYS,
                                  fifo_insert)
-from ..simulator.costs import (ACT_CACHE_SLOTS, OP_COST_KEYS, cost_model,
+from ..simulator.costs import (ACT_CACHE_SLOTS, FIDELITIES,
+                               MAX_DRAM_CHANNELS, MAX_LINKS, OP_COST_KEYS,
+                               cost_model, dram_channel_one_hot,
                                noc_transfer_energy_pj, noc_transfer_seconds,
                                pipeline_bounds, split_op_fields,
-                               steady_state_energy)
+                               steady_state_energy, xy_route_link_mask)
 
 __all__ = ["batched_map", "map_and_simulate", "search_and_simulate",
            "search_population", "place_configs"]
@@ -228,9 +230,10 @@ def _build_mapper(calib: CalibrationTable, max_ops: int,
 # fused mapping + plan execution (one device dispatch per workload)
 # =============================================================================
 
-def _build_map_exec(calib: CalibrationTable, max_ops: int):
+def _build_map_exec(calib: CalibrationTable, max_ops: int,
+                    fidelity: str = "aggregate"):
     mapper = _build_mapper(calib, max_ops)
-    exec_plan = _build_plan_exec(calib, max_ops)
+    exec_plan = _build_plan_exec(calib, max_ops, fidelity)
 
     def run(tile, chip, xs, total_macs):
         placed = mapper(tile, chip, xs)
@@ -262,8 +265,9 @@ def _jitted_map(calib: CalibrationTable, max_ops: int, enable_split: bool):
 
 
 @functools.lru_cache(maxsize=64)
-def _jitted_map_exec(calib: CalibrationTable, max_ops: int):
-    fn = _build_map_exec(calib, max_ops)
+def _jitted_map_exec(calib: CalibrationTable, max_ops: int,
+                     fidelity: str = "aggregate"):
+    fn = _build_map_exec(calib, max_ops, fidelity)
     batched = jax.vmap(fn, in_axes=({k: 0 for k in TILE_KEYS},
                                     {k: 0 for k in CHIP_KEYS}, None, None))
     return jax.jit(batched)
@@ -354,7 +358,8 @@ def map_and_simulate(ws: Dict[str, np.ndarray],
                      cfgs: Dict[str, Dict[str, np.ndarray]],
                      calib: CalibrationTable = DEFAULT_CALIB,
                      sharding=None, placed=None,
-                     mode: str = "latency") -> Dict[str, np.ndarray]:
+                     mode: str = "latency",
+                     fidelity: str = "aggregate") -> Dict[str, np.ndarray]:
     """The compile-free exact path: batched Eq. 1-3 mapping fused with the
     batched plan executor in one jitted dispatch.
 
@@ -378,10 +383,12 @@ def map_and_simulate(ws: Dict[str, np.ndarray],
         raise ValueError(
             f"batched mapper+executor cannot model schedule mode {mode!r}; "
             f"supported modes: {SCHEDULE_MODES}")
+    if fidelity not in FIDELITIES:
+        raise ValueError(f"fidelity must be one of {FIDELITIES}, got {fidelity!r}")
     xs, max_ops = _device_xs_cached(ws)
     tile, chip = placed if placed is not None \
         else place_configs(cfgs, sharding)
-    fn = _jitted_map_exec(calib, max_ops)
+    fn = _jitted_map_exec(calib, max_ops, fidelity)
     out = fn(tile, chip, xs, jnp.asarray(float(ws["total_macs"]), _F))
     res = {k: np.asarray(v) for k, v in out.items()}
     res["area_mm2"] = cfgs["chip"]["chip_area"]
@@ -395,7 +402,7 @@ def map_and_simulate(ws: Dict[str, np.ndarray],
 # =============================================================================
 
 def _build_search(calib: CalibrationTable, n_steps: int, n_state: int,
-                  enable_split: bool = True):
+                  enable_split: bool = True, fidelity: str = "aggregate"):
     """ONE ``lax.scan`` over the op axis that maps *and* executes each op
     in the same step, with the cost model specialized per operator class.
 
@@ -421,6 +428,7 @@ def _build_search(calib: CalibrationTable, n_steps: int, n_state: int,
     """
     cm = cost_model(calib, jnp)
     c = calib
+    link = fidelity == "link"
 
     def run(tile, chip, xs, total_macs):
         T = tile
@@ -428,6 +436,8 @@ def _build_search(calib: CalibrationTable, n_steps: int, n_state: int,
         n_tiles = jnp.sum(T["exists"])
         # static per-tile bandwidth share of the estimate domain (§3.2)
         bw_share_est = chip["dram_gbps"] / n_tiles
+        tidx_f = jnp.arange(MAX_TILES, dtype=_F)
+        ch_oh = dram_channel_one_hot(jnp, tidx_f, chip["dram_channels"])
 
         def noc_s(nbytes):
             return noc_transfer_seconds(jnp, nbytes, chip["noc_bpc"],
@@ -440,10 +450,17 @@ def _build_search(calib: CalibrationTable, n_steps: int, n_state: int,
                                           c.e_noc_pj_per_byte_hop,
                                           chip["hops"])
 
+        def link_seconds(nbytes):
+            return noc_transfer_seconds(jnp, nbytes, chip["noc_bpc"], 1.0,
+                                        chip["noc_base_cycles"],
+                                        chip["ref_clock_hz"])
+
         def step(carry, op):
             (m_tile_finish, m_op_finish, m_op_tile, ok,
              tile_finish, op_finish, cached_at, fifo_ops, fifo_bytes,
-             tile_ops, tile_active, e_mod, res_occ) = carry
+             tile_ops, tile_active, e_mod, res_occ) = carry[:13]
+            if link:
+                link_occ, chan_occ = carry[13], carry[14]
             idx = jnp.asarray(op["index"], jnp.int32)
             active = (op["valid"] > 0) & (op["fused"] == 0)
 
@@ -668,14 +685,49 @@ def _build_search(calib: CalibrationTable, n_steps: int, n_state: int,
             occ = jnp.stack([dram_b_op, noc_s_op])
             res_occ = res_occ + jnp.where(placed, occ, jnp.zeros(2, _F))
 
+            if link:
+                # per-link XY routes + per-DRAM-channel bytes, identical
+                # accumulation to batched._build_plan_exec (parity holds
+                # because every ok row adds the same float contributions
+                # in the same op order; empty routes add exact 0.0)
+                owner_f = jnp.asarray(owner, _F)
+                acq_rt = xy_route_link_mask(jnp, jnp.asarray(src, _F),
+                                            owner_f, chip["grid_w"],
+                                            chip["grid_h"], chip["torus"])
+                acq_t = link_seconds(per_pred)
+                for p in range(MAX_PREDS):
+                    link_occ = link_occ + jnp.where(placed,
+                                                    acq_rt[p] * acq_t, 0.0)
+                red_rt = xy_route_link_mask(jnp, tidx_f, owner_f,
+                                            chip["grid_w"], chip["grid_h"],
+                                            chip["torus"])
+                red_t = link_seconds(op["bytes_out"]
+                                     / jnp.maximum(k_ex, 1.0))
+                for t in range(MAX_TILES):
+                    link_occ = link_occ + jnp.where(
+                        placed & is_split & mask[t], red_rt[t] * red_t, 0.0)
+                dram_each = jnp.where(
+                    is_split,
+                    jnp.where(mask, jnp.broadcast_to(dram_b_sub,
+                                                     (MAX_TILES,)), 0.0),
+                    jnp.where(onehot, jnp.broadcast_to(ex["dram_bytes"],
+                                                       (MAX_TILES,)), 0.0))
+                for t in range(MAX_TILES):
+                    chan_occ = chan_occ + jnp.where(placed,
+                                                    dram_each[t] * ch_oh[t],
+                                                    0.0)
+
             op_finish = op_finish.at[idx].set(
                 jnp.where(placed, fin_op, 0.0), mode="drop")
             fifo_ops, fifo_bytes, cached_at = fifo_insert(
                 fifo_ops, fifo_bytes, cached_at, owner, idx,
                 op["bytes_out"], T["cache_cap"][owner], placed)
-            return (m_tile_finish, m_op_finish, m_op_tile, ok,
-                    tile_finish, op_finish, cached_at, fifo_ops, fifo_bytes,
-                    tile_ops, tile_active, e_mod, res_occ), None
+            out_c = (m_tile_finish, m_op_finish, m_op_tile, ok,
+                     tile_finish, op_finish, cached_at, fifo_ops, fifo_bytes,
+                     tile_ops, tile_active, e_mod, res_occ)
+            if link:
+                out_c = out_c + (link_occ, chan_occ)
+            return out_c, None
 
         e0 = {m: jnp.asarray(0.0, _F)
               for m in ("compute", "dram", "sram", "irf", "orf", "dsp",
@@ -688,8 +740,13 @@ def _build_search(calib: CalibrationTable, n_steps: int, n_state: int,
                 jnp.zeros((MAX_TILES, ACT_CACHE_SLOTS), _F),
                 jnp.zeros(MAX_TILES, _F), jnp.zeros(MAX_TILES, _F),
                 e0, jnp.zeros(2, _F))
+        if link:
+            init = init + (jnp.zeros(MAX_LINKS, _F),
+                           jnp.zeros(MAX_DRAM_CHANNELS, _F))
+        final, _ = jax.lax.scan(step, init, xs["per_op"])
         (_, _, _, ok, tile_finish, _, _, _, _, tile_ops, tile_active,
-         e_mod, res_occ), _ = jax.lax.scan(step, init, xs["per_op"])
+         e_mod, res_occ) = final[:13]
+        link_occ, chan_occ = (final[13], final[14]) if link else (None, None)
 
         # final surface: batched.exec_plan's reductions, verbatim
         makespan = jnp.max(tile_finish)
@@ -710,8 +767,11 @@ def _build_search(calib: CalibrationTable, n_steps: int, n_state: int,
         leak_rate = jnp.sum(jnp.where(T["exists"] > 0,
                                       c.leak_mw_per_mm2 * T["area_mm2"]
                                       * resid * 1e9, 0.0))
-        out.update(pipeline_bounds(jnp, makespan, jnp.max(tile_active),
-                                   dram_bytes, chip["dram_gbps"], noc_busy))
+        out.update(pipeline_bounds(
+            jnp, makespan, jnp.max(tile_active), dram_bytes,
+            chip["dram_gbps"], noc_busy, chan_bytes=chan_occ,
+            dram_channels=chip["dram_channels"] if link else None,
+            link_busy_s=link_occ))
         ii = out["ii_s"]
         out["fill_latency_s"] = makespan
         out["dram_bytes_per_batch"] = dram_bytes
@@ -760,13 +820,14 @@ def _search_xs(ws: Dict[str, np.ndarray]):
 @functools.lru_cache(maxsize=64)
 def _jitted_search_population(calib: CalibrationTable,
                               shapes: Tuple[Tuple[int, int], ...],
-                              enable_split: bool = True):
+                              enable_split: bool = True,
+                              fidelity: str = "aggregate"):
     """One jitted dispatch evaluating a candidate batch on EVERY workload
     of a generation: the per-workload single-scan search kernels run
     back-to-back inside one executable, so a GA generation costs one
     evaluation dispatch instead of W (no per-workload host sync, no
     executable alternation between kernels)."""
-    fns = [_build_search(calib, n_steps, n_state, enable_split)
+    fns = [_build_search(calib, n_steps, n_state, enable_split, fidelity)
            for n_steps, n_state in shapes]
 
     def run_all(tile, chip, xs_list, tm_list):
@@ -781,7 +842,8 @@ def _jitted_search_population(calib: CalibrationTable,
 
 def search_population(ws_list, cfgs, calib: CalibrationTable = DEFAULT_CALIB,
                       sharding=None, placed=None, mode: str = "latency",
-                      out_keys: Optional[Tuple[str, ...]] = None):
+                      out_keys: Optional[Tuple[str, ...]] = None,
+                      fidelity: str = "aggregate"):
     """Exact search scoring of one candidate batch on a list of prepared
     workloads, as ONE device dispatch (see ``_jitted_search_population``).
     Returns one result dict per workload — the ``search_and_simulate``
@@ -793,13 +855,15 @@ def search_population(ws_list, cfgs, calib: CalibrationTable = DEFAULT_CALIB,
         raise ValueError(
             f"exact search kernel cannot model schedule mode {mode!r}; "
             f"supported modes: {SCHEDULE_MODES}")
+    if fidelity not in FIDELITIES:
+        raise ValueError(f"fidelity must be one of {FIDELITIES}, got {fidelity!r}")
     staged = [_search_xs_cached(ws) for ws in ws_list]
     shapes = tuple((s[1], s[2]) for s in staged)
     xs_list = tuple(s[0] for s in staged)
     tm_list = tuple(s[3] for s in staged)
     tile, chip = placed if placed is not None \
         else place_configs(cfgs, sharding)
-    fn = _jitted_search_population(calib, shapes)
+    fn = _jitted_search_population(calib, shapes, True, fidelity)
     outs = fn(tile, chip, xs_list, tm_list)
     results = []
     for out in outs:
@@ -817,7 +881,8 @@ def search_and_simulate(ws: Dict[str, np.ndarray],
                         cfgs: Dict[str, Dict[str, np.ndarray]],
                         calib: CalibrationTable = DEFAULT_CALIB,
                         sharding=None, placed=None,
-                        mode: str = "latency") -> Dict[str, np.ndarray]:
+                        mode: str = "latency",
+                        fidelity: str = "aggregate") -> Dict[str, np.ndarray]:
     """The exact *search* dispatch: one class-specialized scan that maps
     and executes every (active) op, returning only the (B,) scoring
     surface.
@@ -833,4 +898,4 @@ def search_and_simulate(ws: Dict[str, np.ndarray],
     ``search_population`` (one dispatch for all of them).
     """
     return search_population([ws], cfgs, calib, sharding=sharding,
-                             placed=placed, mode=mode)[0]
+                             placed=placed, mode=mode, fidelity=fidelity)[0]

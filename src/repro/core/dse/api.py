@@ -1,0 +1,166 @@
+"""The unified engine/evaluator API surface.
+
+PR 9 consolidates the knob sprawl that had accumulated on
+``EvalEngine.__init__`` (backend, schedule mode, exact-mapper choice,
+sharding, store, memo sizing, non-finite policy — and now the NoC/DRAM
+fidelity tier) into one frozen ``EngineConfig`` value object.  The
+config is the *single source of truth* for the engine's content
+context: ``context_digest`` derives the store/checkpoint binding key
+from it, so every knob that changes metrics provably lands in the
+digest (adding a knob here without threading it through the digest is a
+one-line diff review, not an archaeology project).
+
+``Evaluator`` is the protocol every scoring surface satisfies — the
+in-process ``EvalEngine``, the in-process ``DSEClient``, and the TCP
+``DSEClient`` — pinned by the shared conformance suite in
+tests/test_api.py.  Search frontends type against it; "engine-shaped"
+stops being folklore.
+
+**Fidelity tiers** (the PR-9 axis).  ``fidelity`` selects how the
+steady-state initiation interval composes interconnect contention:
+
+* ``"aggregate"`` — the historical single-resource model: one NoC busy
+  term, one DRAM bandwidth term.  Bitwise-identical to every pre-PR-9
+  result.
+* ``"link"`` — per-link 2D mesh/torus XY-routed NoC occupancy and
+  per-channel DRAM queues; the II is additionally bounded by the
+  hottest link and the hottest channel (so ``II(link) >=
+  II(aggregate)`` by construction).  Same mapping, same energy, same
+  latency-mode metrics — only the throughput-mode II composition
+  changes.
+
+Both tiers run through every backend (oracle / batched / exact / scan)
+with the same bitwise-parity guarantees the aggregate tier always had.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import (Any, Dict, Optional, Protocol, Sequence,
+                    runtime_checkable)
+
+import numpy as np
+
+from ..calibrate.asap7 import CalibrationTable
+from ..simulator.costs import COST_MODEL_VERSION, FIDELITIES
+from ..simulator.orchestrator import SCHEDULE_MODES
+
+__all__ = ["EngineConfig", "Evaluator", "context_digest", "BACKENDS",
+           "EXACT_MAPPERS", "NONFINITE_POLICIES", "META_VERSION"]
+
+BACKENDS = ("scan", "exact", "batched", "oracle")
+EXACT_MAPPERS = ("batched", "python")
+NONFINITE_POLICIES = ("raise", "skip")
+
+# Version stamp of the result["meta"] schema every Evaluator returns
+# (see README "Result meta schema").  Bump when meta keys change
+# meaning; consumers can gate on it instead of sniffing keys.
+META_VERSION = 1
+
+
+def context_digest(workloads: Sequence[str], calib: CalibrationTable,
+                   aggressive_int4: bool, enable_fusion: bool,
+                   backend: str, fidelity: str) -> bytes:
+    """Digest of everything a memoized metric row depends on besides the
+    (canonical genome, mode) pair the short store key carries: the
+    workload list *and order* (metric columns follow it), the
+    calibration table, the precision/fusion compile flags, the backend's
+    mapping-fidelity class (the ``scan`` backend's approximate in-scan
+    mapping produces different numbers than the exact family, which is
+    bitwise-shared by exact/batched/oracle), the NoC/DRAM fidelity tier,
+    and the cost-model version.  Persistent stores and checkpoints fold
+    this into their content address, so results accumulated by one
+    engine are served to another exactly when every one of these
+    matches.  The service handshake recomputes this digest client-side
+    (``DSEClient._connect``) — keep the two in lockstep by keeping them
+    the same function."""
+    mapping = "approx" if backend == "scan" else "exact"
+    text = repr((tuple(workloads), repr(calib), bool(aggressive_int4),
+                 bool(enable_fusion), mapping, str(fidelity),
+                 COST_MODEL_VERSION))
+    return hashlib.sha256(text.encode()).digest()
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Every ``EvalEngine`` knob in one frozen, comparable value object.
+
+    ``EvalEngine(workloads, config=EngineConfig(...))`` is the
+    canonical construction; the legacy per-knob kwargs still work but
+    warn ``DeprecationWarning``.  ``store`` is excluded from equality /
+    repr — it is runtime wiring (an open sqlite handle), not identity.
+    """
+
+    backend: str = "scan"
+    mode: str = "latency"
+    fidelity: str = "aggregate"
+    exact_mapper: str = "batched"
+    shard: bool = False
+    memoize: bool = True
+    vectorized: bool = True
+    aggressive_int4: bool = False
+    enable_fusion: bool = True
+    batch: int = 1024
+    memo_max: Optional[int] = None
+    nonfinite: str = "raise"
+    store: Optional[Any] = dataclasses.field(
+        default=None, compare=False, repr=False)
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend {self.backend!r} not in {BACKENDS}")
+        if self.mode not in SCHEDULE_MODES:
+            raise ValueError(f"mode {self.mode!r} not in {SCHEDULE_MODES}")
+        if self.fidelity not in FIDELITIES:
+            raise ValueError(
+                f"fidelity {self.fidelity!r} not in {FIDELITIES}")
+        if self.exact_mapper not in EXACT_MAPPERS:
+            raise ValueError(f"exact_mapper {self.exact_mapper!r} not in "
+                             f"{EXACT_MAPPERS}")
+        if self.nonfinite not in NONFINITE_POLICIES:
+            raise ValueError(f"nonfinite {self.nonfinite!r} not in "
+                             f"{NONFINITE_POLICIES}")
+        if self.backend == "exact" and self.exact_mapper != "batched":
+            raise ValueError("backend='exact' is the fused search kernel; "
+                             "it cannot run exact_mapper='python'")
+        if self.batch < 1:
+            raise ValueError(f"batch must be >= 1, got {self.batch}")
+
+    def context_digest(self, workloads: Sequence[str],
+                       calib: CalibrationTable) -> bytes:
+        """The content-context digest this config induces for a given
+        (workloads, calib) pair — see module-level ``context_digest``."""
+        return context_digest(workloads, calib, self.aggressive_int4,
+                              self.enable_fusion, self.backend,
+                              self.fidelity)
+
+
+@runtime_checkable
+class Evaluator(Protocol):
+    """What a scoring surface must provide for the search frontends
+    (sweep / GA / Bayes / hillclimb) and the serving layer to drive it.
+    Satisfied by ``EvalEngine`` and ``DSEClient`` (both bindings);
+    pinned by the conformance suite in tests/test_api.py.
+
+    Metric contract: ``evaluate``/``rescore``/``score_batch`` return a
+    dict of ``latency`` (N, W), ``energy`` (N, W), ``tops_w`` (N, W),
+    ``area`` (N,); ``evaluate`` and ``rescore`` additionally carry a
+    ``"meta"`` dict stamped with ``meta_version`` (see ``META_VERSION``
+    and the README meta-schema table).
+    """
+
+    workloads: Sequence[str]
+    stats: Any
+
+    def evaluate(self, genomes: np.ndarray, keep=None,
+                 mode: Optional[str] = None,
+                 canonical: Optional[np.ndarray] = None
+                 ) -> Dict[str, Any]: ...
+
+    def rescore(self, genomes: np.ndarray, oracle: bool = False,
+                mode: Optional[str] = None) -> Dict[str, Any]: ...
+
+    def score_batch(self, genomes: np.ndarray,
+                    mode: Optional[str] = None) -> Dict[str, Any]: ...
+
+    def context_key(self) -> bytes: ...

@@ -55,9 +55,11 @@ from ..ir import (MAX_PREDS, OpClass, OpType, PRECISION_BYTES, WorkloadGraph,
 from ..simulator.batched import (CHIP_KEYS, TILE_KEYS, fifo_insert,
                                  stack_chip_configs)
 from ..simulator.costs import (ACC_BYTES, ACT_CACHE_SLOTS, CACHE_FRAC,
-                               DSP_OPS_PER_ELEM, DSP_OPS_TABLE, SFU_NEED,
-                               cost_model, pipeline_bounds,
-                               steady_state_energy)
+                               DSP_OPS_PER_ELEM, DSP_OPS_TABLE, FIDELITIES,
+                               MAX_DRAM_CHANNELS, MAX_LINKS, SFU_NEED,
+                               cost_model, dram_channel_one_hot,
+                               noc_transfer_seconds, pipeline_bounds,
+                               steady_state_energy, xy_route_link_mask)
 from ..simulator.orchestrator import noc_hops
 
 __all__ = ["prepare_workload", "prepare_configs", "batch_evaluate"]
@@ -136,10 +138,12 @@ def _make_eval(calib: CalibrationTable, max_ops: int):
 # the scan: greedy Eq. 1-3 mapping + orchestrator replay, one op per step
 # =============================================================================
 
-def _build_eval_fn(calib: CalibrationTable, max_ops: int):
+def _build_eval_fn(calib: CalibrationTable, max_ops: int,
+                   fidelity: str = "aggregate"):
     fns = _make_eval(calib, max_ops)
     c = calib
     eps_tie = 1e-18
+    link = fidelity == "link"
 
     def eval_one(tile, chip, ops_xs, total_macs):
         """Evaluate ONE config against one workload.  tile: dict of
@@ -147,11 +151,18 @@ def _build_eval_fn(calib: CalibrationTable, max_ops: int):
         (max_ops, ...) arrays."""
         T = tile
         n_tiles_f = jnp.sum(T["exists"])
+        tidx_f = jnp.arange(MAX_TILES, dtype=_F)
+        ch_oh = dram_channel_one_hot(jnp, tidx_f, chip["dram_channels"])
 
         def noc_seconds(nbytes):
             cyc = jnp.ceil(nbytes / chip["noc_bpc"]) \
                 + chip["hops"] * chip["noc_base_cycles"]
             return cyc / chip["ref_clock_hz"]
+
+        def link_seconds(nbytes):
+            return noc_transfer_seconds(jnp, nbytes, chip["noc_bpc"], 1.0,
+                                        chip["noc_base_cycles"],
+                                        chip["ref_clock_hz"])
 
         def noc_energy(nbytes):
             return nbytes * c.e_noc_pj_per_byte_hop * chip["hops"]
@@ -160,7 +171,9 @@ def _build_eval_fn(calib: CalibrationTable, max_ops: int):
 
         def step(carry, op):
             (fin_est, fin_act, opf_est, opf_act, op_tile, tile_ops, energy,
-             cached_at, fifo_ops, fifo_bytes, tile_busy, res_occ) = carry
+             cached_at, fifo_ops, fifo_bytes, tile_busy, res_occ) = carry[:12]
+            if link:
+                link_occ, chan_occ = carry[12], carry[13]
             idx = jnp.asarray(op["index"], jnp.int32)
             active = (op["valid"] > 0) & (op["fused"] == 0)
 
@@ -321,12 +334,43 @@ def _build_eval_fn(calib: CalibrationTable, max_ops: int):
             res_occ = res_occ + jnp.where(
                 active, jnp.stack([dram_b_op, noc_s_op]), jnp.zeros(2, _F))
 
+            if link:
+                # per-link XY-route and per-DRAM-channel occupancy on this
+                # scan's greedy placements (same composition the exact
+                # backends accumulate; tightens the II bound only)
+                owner_f = jnp.asarray(owner, _F)
+                acq_rt = xy_route_link_mask(jnp, jnp.asarray(src, _F),
+                                            owner_f, chip["grid_w"],
+                                            chip["grid_h"], chip["torus"])
+                acq_t = link_seconds(per_pred)
+                for p in range(MAX_PREDS):
+                    link_occ = link_occ + jnp.where(active,
+                                                    acq_rt[p] * acq_t, 0.0)
+                red_rt = xy_route_link_mask(jnp, tidx_f, owner_f,
+                                            chip["grid_w"], chip["grid_h"],
+                                            chip["torus"])
+                red_t = link_seconds(op["bytes_out"] / kf)
+                for t in range(MAX_TILES):
+                    link_occ = link_occ + jnp.where(
+                        active & do_split & mac_mask[t], red_rt[t] * red_t,
+                        0.0)
+                dram_each = jnp.where(
+                    do_split, jnp.where(mac_mask, db_sub, 0.0),
+                    jnp.where(onehot > 0, db_single, 0.0))
+                for t in range(MAX_TILES):
+                    chan_occ = chan_occ + jnp.where(active,
+                                                    dram_each[t] * ch_oh[t],
+                                                    0.0)
+
             fifo_ops, fifo_bytes, cached_at = fifo_insert(
                 fifo_ops, fifo_bytes, cached_at, owner, idx,
                 op["bytes_out"], T["cache_cap"][owner], active)
-            return (fin_est, fin_act, opf_est, opf_act, op_tile, tile_ops,
-                    energy, cached_at, fifo_ops, fifo_bytes, tile_busy,
-                    res_occ), None
+            out = (fin_est, fin_act, opf_est, opf_act, op_tile, tile_ops,
+                   energy, cached_at, fifo_ops, fifo_bytes, tile_busy,
+                   res_occ)
+            if link:
+                out = out + (link_occ, chan_occ)
+            return out, None
 
         init = (jnp.zeros(MAX_TILES, _F), jnp.zeros(MAX_TILES, _F),
                 jnp.zeros(max_ops, _F), jnp.zeros(max_ops, _F),
@@ -335,9 +379,13 @@ def _build_eval_fn(calib: CalibrationTable, max_ops: int):
                 jnp.full((MAX_TILES, ACT_CACHE_SLOTS), -1, jnp.int32),
                 jnp.zeros((MAX_TILES, ACT_CACHE_SLOTS), _F),
                 jnp.zeros(MAX_TILES, _F), jnp.zeros(2, _F))
+        if link:
+            init = init + (jnp.zeros(MAX_LINKS, _F),
+                           jnp.zeros(MAX_DRAM_CHANNELS, _F))
+        final, _ = jax.lax.scan(step, init, ops_xs["per_op"])
         (fin_est, fin_act, opf_est, opf_act, op_tile, tile_ops, energy,
-         _, _, _, tile_busy, res_occ), _ = jax.lax.scan(step, init,
-                                                        ops_xs["per_op"])
+         _, _, _, tile_busy, res_occ) = final[:12]
+        link_occ, chan_occ = (final[12], final[13]) if link else (None, None)
 
         makespan = jnp.max(fin_act)
         gated = tile_ops <= 0
@@ -354,8 +402,11 @@ def _build_eval_fn(calib: CalibrationTable, max_ops: int):
         leak_rate = jnp.sum(jnp.where(T["exists"] > 0,
                                       c.leak_mw_per_mm2 * T["area_mm2"]
                                       * resid * 1e9, 0.0))
-        bounds = pipeline_bounds(jnp, makespan, jnp.max(tile_busy),
-                                 res_occ[0], chip["dram_gbps"], res_occ[1])
+        bounds = pipeline_bounds(
+            jnp, makespan, jnp.max(tile_busy), res_occ[0],
+            chip["dram_gbps"], res_occ[1], chan_bytes=chan_occ,
+            dram_channels=chip["dram_channels"] if link else None,
+            link_busy_s=link_occ)
         ii = jnp.where(jnp.isfinite(makespan), bounds["ii_s"], jnp.inf)
         energy_ss = jnp.where(
             jnp.isfinite(makespan),
@@ -371,14 +422,14 @@ def _build_eval_fn(calib: CalibrationTable, max_ops: int):
 
 
 @functools.lru_cache(maxsize=64)
-def _jitted(calib_key, max_ops: int):
+def _jitted(calib_key, max_ops: int, fidelity: str = "aggregate"):
     # maxsize must exceed the distinct (calib, max_ops) pairs of a full
     # workload-suite sweep: the multiple-of-64 op buckets give the 20
     # stock workloads ~10 distinct max_ops, and an engine loops over all
     # of them every evaluate() — an undersized LRU would recompile the
     # evaluator on every call
     calib = _CALIB_REGISTRY[calib_key]
-    eval_one = _build_eval_fn(calib, max_ops)
+    eval_one = _build_eval_fn(calib, max_ops, fidelity)
     batched = jax.vmap(eval_one, in_axes=({k: 0 for k in _TILE_KEYS},
                                           {k: 0 for k in _CHIP_KEYS},
                                           None, None))
@@ -399,12 +450,15 @@ _PER_OP_KEYS = ("op_type", "op_cls", "macs", "elems", "m", "k", "n",
 
 
 def batch_evaluate(ws: Dict[str, np.ndarray], cfgs: Dict[str, Dict[str, np.ndarray]],
-                   calib: CalibrationTable = DEFAULT_CALIB) -> Dict[str, np.ndarray]:
+                   calib: CalibrationTable = DEFAULT_CALIB,
+                   fidelity: str = "aggregate") -> Dict[str, np.ndarray]:
     """Evaluate every config in ``cfgs`` against workload ``ws``.
 
     Returns dict with (B,) arrays: latency_s, energy_pj, achieved_tops,
     plus pass-through area/peak_tops from prepare_configs.
     """
+    if fidelity not in FIDELITIES:
+        raise ValueError(f"fidelity must be one of {FIDELITIES}, got {fidelity!r}")
     key = id(calib)
     _CALIB_REGISTRY[key] = calib
     max_ops = len(ws["op_type"])
@@ -414,7 +468,7 @@ def batch_evaluate(ws: Dict[str, np.ndarray], cfgs: Dict[str, Dict[str, np.ndarr
     ops_xs = {"per_op": per_op}
     tile = {k: jnp.asarray(cfgs["tile"][k], _F) for k in _TILE_KEYS}
     chip = {k: jnp.asarray(cfgs["chip"][k], _F) for k in _CHIP_KEYS}
-    fn = _jitted(key, max_ops)
+    fn = _jitted(key, max_ops, fidelity)
     out = fn(tile, chip, ops_xs, jnp.asarray(float(ws["total_macs"]), _F))
     res = {k: np.asarray(v) for k, v in out.items()}
     res["area_mm2"] = cfgs["chip"]["chip_area"]

@@ -23,6 +23,7 @@ import numpy as np
 
 from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
 from .encoding import GENOME_LEN, genome_bounds, random_genomes
+from .api import EngineConfig
 from .engine import EvalEngine
 from .objective import area_bracket
 
@@ -97,8 +98,9 @@ def run_bayes(workloads: Sequence[str], objective_fn,
     search-time numbers."""
     engine = (engine.check_workloads(workloads, calib)
               if engine is not None
-              else EvalEngine(workloads, calib, backend="exact",
-                              nonfinite="skip"))
+              else EvalEngine(workloads, calib,
+                              config=EngineConfig(backend="exact",
+                                                  nonfinite="skip")))
     rng = np.random.default_rng(seed)
     genomes = random_genomes(rng, cfg.init_samples)
     metrics = engine.evaluate(genomes)

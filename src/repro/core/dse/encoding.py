@@ -29,12 +29,34 @@ _HOMO_PREC_IDX = KNOB_GRID["precision_set"].index(
     frozenset({Precision.INT8, Precision.FP16}))
 
 __all__ = ["Genome", "GENOME_LEN", "FIELDS_PER_TILE", "decode",
-           "random_genomes", "genome_bounds", "FAMILIES"]
+           "random_genomes", "genome_bounds", "FAMILIES",
+           "IDX_DRAM", "IDX_ICONN", "IDX_TOPO", "IDX_ASPECT",
+           "IDX_NOC_BPC", "IDX_DRAM_CH", "INTERCONNECT_GENE_DEFAULTS"]
 
 _TILE_FIELDS = ("count", "rows", "cols", "sram", "prec", "sparsity",
                 "engine", "dataflow", "sfu", "asym", "pipe", "db")
 FIELDS_PER_TILE = len(_TILE_FIELDS)
-GENOME_LEN = 1 + MAX_TILE_TYPES * FIELDS_PER_TILE + 2
+# chip-level genes trail the tile blocks: dram bw, interconnect enum,
+# then the PR-9 interconnect-structure genes (mesh/torus, grid aspect,
+# NoC bytes/cycle, DRAM channel count)
+GENOME_LEN = 1 + MAX_TILE_TYPES * FIELDS_PER_TILE + 6
+IDX_DRAM = 1 + MAX_TILE_TYPES * FIELDS_PER_TILE          # 37
+IDX_ICONN = IDX_DRAM + 1                                 # 38
+IDX_TOPO = IDX_DRAM + 2                                  # 39
+IDX_ASPECT = IDX_DRAM + 3                                # 40
+IDX_NOC_BPC = IDX_DRAM + 4                               # 41
+IDX_DRAM_CH = IDX_DRAM + 5                               # 42
+
+_ASPECT_DEFAULT_IDX = KNOB_GRID["grid_aspect"].index(1.0)
+_NOC_BPC_DEFAULT_IDX = KNOB_GRID["noc_bpc"].index(64)
+# gene values that reproduce the pre-topology chip (mesh, square grid,
+# 64 B/cycle NoC, one DRAM channel) — the canonical interconnect
+INTERCONNECT_GENE_DEFAULTS = {
+    IDX_TOPO: 0,
+    IDX_ASPECT: _ASPECT_DEFAULT_IDX,
+    IDX_NOC_BPC: _NOC_BPC_DEFAULT_IDX,
+    IDX_DRAM_CH: 0,
+}
 
 _GRID_FOR_FIELD = {
     "count": KNOB_GRID["count"],
@@ -63,6 +85,10 @@ def genome_bounds() -> np.ndarray:
         b.extend(len(_GRID_FOR_FIELD[f]) for f in _TILE_FIELDS)
     b.append(len(KNOB_GRID["dram_gbps"]))
     b.append(len(KNOB_GRID["interconnect"]))
+    b.append(len(KNOB_GRID["noc_topology"]))
+    b.append(len(KNOB_GRID["grid_aspect"]))
+    b.append(len(KNOB_GRID["noc_bpc"]))
+    b.append(len(KNOB_GRID["dram_channels"]))
     return np.asarray(b, dtype=np.int32)
 
 
@@ -107,8 +133,12 @@ def decode(genome: Genome, name: str = "dse") -> ChipConfig:
         tiles.append((tmpl, int(KNOB_GRID["count"][vals["count"] % 8])))
     return ChipConfig(
         name=name, tiles=tuple(tiles),
-        interconnect=KNOB_GRID["interconnect"][int(genome[-1]) % 4],
-        dram_gbps=float(KNOB_GRID["dram_gbps"][int(genome[-2]) % 6]),
+        interconnect=KNOB_GRID["interconnect"][int(genome[IDX_ICONN]) % 4],
+        dram_gbps=float(KNOB_GRID["dram_gbps"][int(genome[IDX_DRAM]) % 6]),
+        torus=bool(KNOB_GRID["noc_topology"][int(genome[IDX_TOPO]) % 2]),
+        grid_aspect=float(KNOB_GRID["grid_aspect"][int(genome[IDX_ASPECT]) % 3]),
+        noc_bytes_per_cycle=float(KNOB_GRID["noc_bpc"][int(genome[IDX_NOC_BPC]) % 4]),
+        dram_channels=int(KNOB_GRID["dram_channels"][int(genome[IDX_DRAM_CH]) % 4]),
     )
 
 
@@ -118,8 +148,10 @@ def _family_fixup(genomes: np.ndarray, family: str) -> np.ndarray:
     if family == "homo":
         # iso-knob homogeneous baseline (§4.3): N identical FP16+INT8 MAC
         # tiles — the commercial-NPU template the savings are measured
-        # against.
+        # against, on the stock mesh/1-channel interconnect
         g[:, 0] = 0
+        for idx, v in INTERCONNECT_GENE_DEFAULTS.items():
+            g[:, idx] = v
         sl = _tile_slice(0)
         g[:, sl.start + _TILE_FIELDS.index("sfu")] = 0
         g[:, sl.start + _TILE_FIELDS.index("prec")] = _HOMO_PREC_IDX

@@ -85,25 +85,28 @@ import functools
 import hashlib
 import threading
 import time
+import warnings
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..arch import (KNOB_GRID, MAX_TILE_TYPES, MAX_TILES, prec_mask)
 from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
-from ..simulator.costs import COST_MODEL_VERSION
+from ..simulator.costs import COST_MODEL_VERSION, FIDELITIES, grid_dims
 from ..simulator.orchestrator import CACHE_FRAC, SCHEDULE_MODES, noc_hops
 from ..workloads import build
+from .api import (BACKENDS, EngineConfig, META_VERSION, context_digest)
 from .batch_eval import (_CHIP_KEYS, _TILE_KEYS, batch_evaluate,
                          prepare_configs, prepare_workload)
-from .encoding import (FIELDS_PER_TILE, GENOME_LEN, _TILE_FIELDS, decode)
+from .encoding import (FIELDS_PER_TILE, GENOME_LEN, IDX_ASPECT, IDX_DRAM,
+                       IDX_DRAM_CH, IDX_ICONN, IDX_NOC_BPC, IDX_TOPO,
+                       _TILE_FIELDS, decode)
 from .store import MemoryLRUStore, ResultStore, TieredStore
 
-__all__ = ["EvalEngine", "EngineStats", "NonFiniteMetricsError",
-           "genomes_to_configs", "genome_areas", "canonical_genomes",
-           "prepared_workload", "BACKENDS", "SCHEDULE_MODES"]
-
-BACKENDS = ("scan", "exact", "batched", "oracle")
+__all__ = ["EvalEngine", "EngineStats", "EngineConfig",
+           "NonFiniteMetricsError", "genomes_to_configs", "genome_areas",
+           "canonical_genomes", "prepared_workload", "BACKENDS",
+           "SCHEDULE_MODES"]
 
 
 class NonFiniteMetricsError(RuntimeError):
@@ -189,6 +192,11 @@ _PREC_MAX = np.asarray([int(max(s, key=int))
                         for s in KNOB_GRID["precision_set"]], np.int64)
 _DRAM = np.asarray(KNOB_GRID["dram_gbps"], np.float64)
 _ICONN = [ic for ic in KNOB_GRID["interconnect"]]
+# interconnect-structure gene grids (PR 9 topology genes)
+_TOPO = np.asarray([float(b) for b in KNOB_GRID["noc_topology"]], np.float64)
+_ASPECT = np.asarray(KNOB_GRID["grid_aspect"], np.float64)
+_NOC_BPC = np.asarray(KNOB_GRID["noc_bpc"], np.float64)
+_DRAM_CH = np.asarray(KNOB_GRID["dram_channels"], np.float64)
 # hop counts tabulated over (interconnect, num_tiles): 4 x (MAX_TILES+1)
 _HOPS_TABLE = np.asarray(
     [[float(noc_hops(ic, max(n, 1))) for n in range(MAX_TILES + 1)]
@@ -311,12 +319,18 @@ def genomes_to_configs(genomes: np.ndarray,
 
     num_tiles = counts.sum(axis=1)              # (B,) ints
     chip_f = {f: np.zeros(B) for f in _CHIP_KEYS}
-    chip_f["dram_gbps"] = _DRAM[genomes[:, -2] % 6].copy()
-    iconn_idx = np.asarray(genomes[:, -1] % 4)
+    chip_f["dram_gbps"] = _DRAM[genomes[:, IDX_DRAM] % 6].copy()
+    iconn_idx = np.asarray(genomes[:, IDX_ICONN] % 4)
     chip_f["hops"] = _HOPS_TABLE[iconn_idx, num_tiles]
-    chip_f["noc_bpc"] = np.full(B, 64.0)        # ChipConfig defaults
-    chip_f["noc_base_cycles"] = np.full(B, 8.0)
+    chip_f["noc_bpc"] = _NOC_BPC[genomes[:, IDX_NOC_BPC] % 4].copy()
+    chip_f["noc_base_cycles"] = np.full(B, 8.0)  # ChipConfig defaults
     chip_f["ref_clock_hz"] = np.full(B, 1000 * 1e6)
+    # interconnect-structure genes (decode()'s knob lookups, vectorized)
+    chip_f["torus"] = _TOPO[genomes[:, IDX_TOPO] % 2].copy()
+    chip_f["dram_channels"] = _DRAM_CH[genomes[:, IDX_DRAM_CH] % 4].copy()
+    aspect = _ASPECT[genomes[:, IDX_ASPECT] % 3]
+    gw, gh = grid_dims(np, np.asarray(num_tiles, np.float64), aspect)
+    chip_f["grid_w"], chip_f["grid_h"] = gw, gh
 
     # peak_tops: sequential per-instance sum, matching prepare_configs
     term = tile_f["num_macs"] * tile_f["clock_hz"]
@@ -326,10 +340,16 @@ def genomes_to_configs(genomes: np.ndarray,
     chip_f["peak_tops"] = acc / 1e12
 
     # chip_area: per-type tile_area * count summed in type order + NoC
+    # (router/link width + torus scale) + extra DRAM-channel PHYs —
+    # term-for-term simulator.area.chip_area
     area = np.zeros(B)
     for t in range(MAX_TILE_TYPES):
         area = area + v["area_mm2"][:, t] * counts[:, t]
-    chip_f["chip_area"] = area + num_tiles * calib.a_noc_mm2_per_tile
+    noc_scale = (0.5 + 0.5 * chip_f["noc_bpc"] / 64.0) \
+        * np.where(chip_f["torus"] > 0, 1.25, 1.0)
+    area = area + num_tiles * calib.a_noc_mm2_per_tile * noc_scale
+    chip_f["chip_area"] = area \
+        + (chip_f["dram_channels"] - 1) * calib.a_dram_phy_mm2
     return {"tile": tile_f, "chip": chip_f}
 
 
@@ -415,6 +435,11 @@ class EngineStats:
         return pairs / max(self.eval_seconds, 1e-12)
 
 
+# sentinel distinguishing "caller passed this legacy kwarg" (deprecation
+# shim fires) from "default" on EvalEngine.__init__
+_UNSET = object()
+
+
 def _bucket(n: int, step: int = 4, floor: int = 16) -> int:
     """Pad batch sizes to multiples of ``step`` (>= ``floor``): CPU
     vectorization of the vmapped scan saturates around B=16, so cost is
@@ -438,39 +463,67 @@ class EvalEngine:
 
     def __init__(self, workloads: Sequence[str],
                  calib: CalibrationTable = DEFAULT_CALIB,
-                 batch: int = 1024, memoize: bool = True,
-                 vectorized: bool = True, shard: bool = False,
-                 aggressive_int4: bool = False, enable_fusion: bool = True,
-                 memo_max: Optional[int] = None, backend: str = "scan",
-                 exact_mapper: str = "batched", mode: str = "latency",
-                 memo_limit: Optional[int] = None,
-                 store: Optional[ResultStore] = None,
-                 nonfinite: str = "raise"):
-        if backend not in BACKENDS:
-            raise ValueError(f"backend {backend!r} not in {BACKENDS}")
-        if nonfinite not in ("raise", "skip"):
-            raise ValueError(f"nonfinite {nonfinite!r} not in "
-                             f"('raise', 'skip')")
-        if exact_mapper not in ("batched", "python"):
-            raise ValueError(f"exact_mapper {exact_mapper!r} not in "
-                             f"('batched', 'python')")
-        if mode not in SCHEDULE_MODES:
-            raise ValueError(f"mode {mode!r} not in {SCHEDULE_MODES}")
-        if backend == "exact" and exact_mapper != "batched":
-            raise ValueError("backend='exact' is the fused search kernel; "
-                             "it cannot run exact_mapper='python'")
-        self.exact_mapper = exact_mapper
-        self.mode = mode
+                 batch=_UNSET, memoize=_UNSET,
+                 vectorized=_UNSET, shard=_UNSET,
+                 aggressive_int4=_UNSET, enable_fusion=_UNSET,
+                 memo_max=_UNSET, backend=_UNSET,
+                 exact_mapper=_UNSET, mode=_UNSET,
+                 memo_limit=_UNSET,
+                 store=_UNSET,
+                 nonfinite=_UNSET, fidelity=_UNSET,
+                 config: Optional[EngineConfig] = None):
+        # ``config=EngineConfig(...)`` is the canonical construction; the
+        # per-knob kwargs are the pre-PR-9 surface, kept working behind a
+        # deprecation shim (they warn, then assemble the same config).
+        if memo_limit is not _UNSET:
+            warnings.warn(
+                "EvalEngine(memo_limit=...) is deprecated; pass "
+                "config=EngineConfig(memo_max=...) (memo_limit is the "
+                "pre-PR-5 alias of memo_max)", DeprecationWarning,
+                stacklevel=2)
+            if memo_max is not _UNSET:
+                raise ValueError("pass memo_max or its legacy alias "
+                                 "memo_limit, not both")
+            memo_max = memo_limit
+        legacy = {k: v for k, v in [
+            ("batch", batch), ("memoize", memoize),
+            ("vectorized", vectorized), ("shard", shard),
+            ("aggressive_int4", aggressive_int4),
+            ("enable_fusion", enable_fusion), ("memo_max", memo_max),
+            ("backend", backend), ("exact_mapper", exact_mapper),
+            ("mode", mode), ("store", store), ("nonfinite", nonfinite),
+            ("fidelity", fidelity)] if v is not _UNSET}
+        if config is not None:
+            if legacy:
+                raise ValueError(
+                    f"pass config=EngineConfig(...) or the legacy per-knob "
+                    f"kwargs, not both (got both config= and "
+                    f"{sorted(legacy)})")
+        else:
+            if legacy:
+                warnings.warn(
+                    f"EvalEngine per-knob kwargs ({sorted(legacy)}) are "
+                    f"deprecated; pass config=EngineConfig(...) instead",
+                    DeprecationWarning, stacklevel=2)
+            config = EngineConfig(**legacy)
+        self.config = config
+        self.exact_mapper = config.exact_mapper
+        self.mode = config.mode
+        self.fidelity = config.fidelity
         self.workloads = list(workloads)
         self.calib = calib
-        self.batch = batch
-        self.memoize = memoize
-        self.vectorized = vectorized
-        self.shard = shard
-        self.aggressive_int4 = aggressive_int4
-        self.enable_fusion = enable_fusion
-        self.backend = backend
-        self.nonfinite = nonfinite
+        self.batch = config.batch
+        self.memoize = config.memoize
+        self.vectorized = config.vectorized
+        self.shard = config.shard
+        self.aggressive_int4 = config.aggressive_int4
+        self.enable_fusion = config.enable_fusion
+        self.backend = config.backend
+        self.nonfinite = config.nonfinite
+        # rebind the locals the rest of the ctor reads off the config
+        batch, shard = config.batch, config.shard
+        memo_max = config.memo_max
+        store = config.store
         self.stats = EngineStats(workloads=len(self.workloads))
         # genome key -> (lat (W,), en (W,), tw (W,)); areas are always
         # recomputed from the (cheap, bitwise-reproducible) config stack.
@@ -481,14 +534,8 @@ class EvalEngine:
         # (population 200 x 101 generations of novel canonical genomes
         # per (bracket, seed)) before recency eviction kicks in, so long
         # multi-seed multi-bracket runs stay bounded without evicting the
-        # live refinement's working set.  ``memo_limit`` is the pre-PR-5
-        # name, accepted as an alias.  >= batch so entries stored in one
-        # call can't evict each other.
-        if memo_limit is not None:
-            if memo_max is not None:
-                raise ValueError("pass memo_max or its legacy alias "
-                                 "memo_limit, not both")
-            memo_max = memo_limit
+        # live refinement's working set.  >= batch so entries stored in
+        # one call can't evict each other.
         explicit_cap = memo_max is not None
         self.memo_max = max(memo_max if explicit_cap else 131_072, batch)
         # Caching policy lives behind the pluggable ResultStore interface
@@ -532,20 +579,16 @@ class EvalEngine:
 
     def context_key(self) -> bytes:
         """Digest of everything a memoized metric row depends on besides
-        the (canonical genome, mode) pair the short store key carries:
-        the workload list *and order* (metric columns follow it), the
-        calibration table, the precision/fusion compile flags, the
-        backend's fidelity class (the ``scan`` backend's approximate
-        in-scan mapping produces different numbers than the exact
-        family, which is bitwise-shared by exact/batched/oracle), and
-        the cost-model version.  Persistent stores fold this into their
-        content address, so results accumulated by one engine are served
-        to another exactly when every one of these matches."""
-        fidelity = "approx" if self.backend == "scan" else "exact"
-        text = repr((tuple(self.workloads), repr(self.calib),
-                     bool(self.aggressive_int4), bool(self.enable_fusion),
-                     fidelity, COST_MODEL_VERSION))
-        return hashlib.sha256(text.encode()).digest()
+        the (canonical genome, mode) pair the short store key carries —
+        ``api.context_digest`` over this engine's config (workloads,
+        calibration, compile flags, backend mapping class, NoC/DRAM
+        fidelity tier, cost-model version).  Persistent stores fold this
+        into their content address, so results accumulated by one engine
+        are served to another exactly when every one of these
+        matches."""
+        return context_digest(self.workloads, self.calib,
+                              self.aggressive_int4, self.enable_fusion,
+                              self.backend, self.fidelity)
 
     @property
     def _memo(self) -> Dict[bytes, Tuple[np.ndarray, np.ndarray,
@@ -656,7 +699,8 @@ class EvalEngine:
         tw = np.zeros((pad_n, W))
         cfgs = self._shard_cfgs(cfgs)
         for j, wname in enumerate(self.workloads):
-            res = batch_evaluate(self._prepared(wname), cfgs, self.calib)
+            res = batch_evaluate(self._prepared(wname), cfgs, self.calib,
+                                 fidelity=self.fidelity)
             lat[:, j] = res[lkey]
             en[:, j] = res[ekey]
             power = res[ekey] * 1e-12 / np.maximum(res[lkey], 1e-30)
@@ -709,7 +753,8 @@ class EvalEngine:
                 continue
             if oracle:
                 for i, plan in zip(rows, plans):
-                    r = oracle_simulate(chips[i], plan, self.calib)
+                    r = oracle_simulate(chips[i], plan, self.calib,
+                                        fidelity=self.fidelity)
                     if mode == "throughput":
                         lat[i, j] = r.pipeline["ii_s"]
                         en[i, j] = r.pipeline["energy_ss_pj"]
@@ -729,7 +774,8 @@ class EvalEngine:
                 reps = pad_to - len(sel)
                 sel = sel + [rows[0]] * reps
                 tables = tables + [tables[0]] * reps
-            res = simulate_plans([chips[i] for i in sel], tables, self.calib)
+            res = simulate_plans([chips[i] for i in sel], tables, self.calib,
+                                 fidelity=self.fidelity)
             for r, i in enumerate(rows):
                 lat[i, j] = res[lkey][r]
                 en[i, j] = res[ekey][r]
@@ -781,10 +827,11 @@ class EvalEngine:
             results = search_population(
                 [self._prepared(w) for w in self.workloads], cfgs,
                 self.calib, placed=placed, mode=mode,
-                out_keys=(lkey, ekey, akey))
+                out_keys=(lkey, ekey, akey), fidelity=self.fidelity)
         else:
             results = [map_and_simulate(self._prepared(w), cfgs, self.calib,
-                                        placed=placed, mode=mode)
+                                        placed=placed, mode=mode,
+                                        fidelity=self.fidelity)
                        for w in self.workloads]
         for j, res in enumerate(results):
             ok = res["ok"][:n]
@@ -938,7 +985,8 @@ class EvalEngine:
             j = seen_this_call[keys[i]]
             lat[i], en[i], tw[i] = lat[j], en[j], tw[j]
         self.stats.eval_seconds += time.perf_counter() - t0
-        meta = {"backend": self.backend, "mode": mode, "requests": n,
+        meta = {"meta_version": META_VERSION, "backend": self.backend,
+                "mode": mode, "fidelity": self.fidelity, "requests": n,
                 "hits": self.stats.hits - pre.hits,
                 "misses": self.stats.misses - pre.misses,
                 "skips": self.stats.skips - pre.skips,
@@ -967,8 +1015,10 @@ class EvalEngine:
         mapper = "python" if oracle else self.exact_mapper
         return {"latency": lat, "energy": en, "tops_w": tw,
                 "area": self.areas(genomes),
-                "meta": {"backend": "oracle" if oracle else "batched",
+                "meta": {"meta_version": META_VERSION,
+                         "backend": "oracle" if oracle else "batched",
                          "mapper": mapper, "mode": mode,
+                         "fidelity": self.fidelity,
                          "requests": len(genomes), "hits": 0,
                          "misses": len(genomes), "skips": 0,
                          "hit_rate": 0.0}}

@@ -22,6 +22,7 @@ import numpy as np
 
 from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
 from .encoding import GENOME_LEN, genome_bounds, random_genomes
+from .api import EngineConfig
 from .engine import EvalEngine
 from .objective import ALPHA, AREA_BRACKETS, area_bracket
 from .sweep import SweepResult
@@ -139,7 +140,9 @@ def run_ga(sweep: SweepResult, bracket: float,
                              verbose=verbose, engine=engine, islands=1)
         return None if fused is None else fused.result
     engine = (engine.check_workloads(sweep.workloads, calib)
-              if engine is not None else EvalEngine(sweep.workloads, calib))
+              if engine is not None
+              else EvalEngine(sweep.workloads, calib,
+                              config=EngineConfig()))
     rng = np.random.default_rng(seed + int(bracket))
     base = sweep.homo_baseline()
     if bracket not in base:

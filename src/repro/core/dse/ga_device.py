@@ -56,15 +56,20 @@ import jax.numpy as jnp
 from ..arch import MAX_TILE_TYPES, MAX_TILES
 from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
 from ..simulator.batched import CHIP_KEYS, TILE_KEYS
+from ..simulator.costs import grid_dims
 from ..simulator.orchestrator import CACHE_FRAC
+from .api import EngineConfig
 from .device_memo import (DeviceMemo, drain_to_store, memo_from_store,
                           memo_init, memo_insert, memo_lookup)
-from .encoding import FIELDS_PER_TILE, GENOME_LEN, genome_bounds, random_genomes
-from .engine import (_ARRAY_DIM, _ASYM, _ASYM_CANON, _ASYM_COL, _COUNT,
-                     _DATAFLOW, _DB, _DRAM, _ENGINE, _FIELD_COL, _HOPS_TABLE,
-                     _MODE_KEYS, _PIPE, _PREC_COL, _PREC_MASK, _PREC_MAX,
-                     _SFU, _SFU_COL, _SPARSITY, _SPECIAL_INERT_COLS,
-                     _SRAM_KB, EvalEngine)
+from .encoding import (FIELDS_PER_TILE, GENOME_LEN, IDX_ASPECT, IDX_DRAM,
+                       IDX_DRAM_CH, IDX_ICONN, IDX_NOC_BPC, IDX_TOPO,
+                       genome_bounds, random_genomes)
+from .engine import (_ARRAY_DIM, _ASPECT, _ASYM, _ASYM_CANON, _ASYM_COL,
+                     _COUNT, _DATAFLOW, _DB, _DRAM, _DRAM_CH, _ENGINE,
+                     _FIELD_COL, _HOPS_TABLE, _MODE_KEYS, _NOC_BPC, _PIPE,
+                     _PREC_COL, _PREC_MASK, _PREC_MAX, _SFU, _SFU_COL,
+                     _SPARSITY, _SPECIAL_INERT_COLS, _SRAM_KB, _TOPO,
+                     EvalEngine)
 from .objective import ALPHA, AREA_BRACKETS, area_bracket
 
 __all__ = ["run_ga_device", "run_ga_fused", "FusedRefinement",
@@ -251,8 +256,9 @@ def run_ga_device(sweep, bracket: float, cfg=None, seed: int = 0,
     cfg = cfg or GAConfig()
     engine = (engine.check_workloads(sweep.workloads, calib)
               if engine is not None
-              else EvalEngine(sweep.workloads, calib, backend="exact",
-                              nonfinite="skip"))
+              else EvalEngine(sweep.workloads, calib,
+                              config=EngineConfig(backend="exact",
+                                                  nonfinite="skip")))
     rng = np.random.default_rng(seed + int(bracket))
     base = sweep.homo_baseline()
     if bracket not in base:
@@ -358,6 +364,10 @@ _PREC_MASK_DEV = jnp.asarray(_PREC_MASK)
 _PREC_MAX_DEV = jnp.asarray(_PREC_MAX)
 _DRAM_DEV = jnp.asarray(_DRAM)
 _HOPS_TABLE_DEV = jnp.asarray(_HOPS_TABLE)
+_TOPO_DEV = jnp.asarray(_TOPO)
+_ASPECT_DEV = jnp.asarray(_ASPECT)
+_NOC_BPC_DEV = jnp.asarray(_NOC_BPC)
+_DRAM_CH_DEV = jnp.asarray(_DRAM_CH)
 
 
 def _area_tables(calib: CalibrationTable):
@@ -416,10 +426,21 @@ def _area_tables_host(calib: CalibrationTable):
 
     count_terms = area[..., None] * _COUNT        # x count, pre-rounded
     max_tiles = MAX_TILE_TYPES * int(np.max(_COUNT))
-    noc = np.arange(max_tiles + 1) * calib.a_noc_mm2_per_tile
+    # NoC term by (tile count, noc_bpc knob, torus knob): the host stack
+    # computes ``(num_tiles * a_noc) * noc_scale`` left-associatively —
+    # precompute every product here so the device gathers a finished
+    # float64 (the same FMA-contraction hazard as the tile terms)
+    n_tiles = np.arange(max_tiles + 1, dtype=np.float64)
+    noc_scale = (0.5 + 0.5 * _NOC_BPC / 64.0)[:, None] \
+        * np.where(_TOPO[None, :] > 0, 1.25, 1.0)
+    noc = (n_tiles * calib.a_noc_mm2_per_tile)[:, None, None] \
+        * noc_scale[None, :, :]
+    # per-channel DRAM PHY term by the dram_channels knob
+    dram_phy = (_DRAM_CH - 1.0) * calib.a_dram_phy_mm2
     return (np.ascontiguousarray(area.reshape(-1)),
             np.ascontiguousarray(count_terms.reshape(-1, len(_COUNT))),
-            np.ascontiguousarray(noc))
+            np.ascontiguousarray(noc),
+            np.ascontiguousarray(dram_phy))
 
 
 def _chip_area_device(g, calib: CalibrationTable):
@@ -435,7 +456,7 @@ def _chip_area_device(g, calib: CalibrationTable):
     def tcol(t, f):
         return g[:, 1 + t * FIELDS_PER_TILE + _FIELD_COL[f]]
 
-    area_tab, count_tab, noc_tab = _area_tables(calib)
+    area_tab, count_tab, noc_tab, dram_tab = _area_tables(calib)
     sfu_idx = jnp.stack([tcol(t, "sfu") % len(_SFU) for t in range(T)],
                         axis=1)
     prec_idx = jnp.stack([tcol(t, "prec") % 4 for t in range(T)], axis=1)
@@ -460,7 +481,9 @@ def _chip_area_device(g, calib: CalibrationTable):
     area = jnp.zeros(B)
     for t in range(T):
         area = area + terms[:, t]
-    return area + noc_tab[num_tiles.astype(jnp.int64)]
+    area = area + noc_tab[num_tiles.astype(jnp.int64),
+                          g[:, IDX_NOC_BPC] % 4, g[:, IDX_TOPO] % 2]
+    return area + dram_tab[g[:, IDX_DRAM_CH] % 4]
 
 
 def _configs_device(g, calib: CalibrationTable):
@@ -524,7 +547,7 @@ def _configs_device(g, calib: CalibrationTable):
 
     # tile_area (Eq. 7) as a pure gather from the host-precomputed knob
     # grid (see _area_tables for why no area arithmetic may run on device)
-    area_tab, count_tab, noc_tab = _area_tables(calib)
+    area_tab, count_tab, noc_tab, dram_tab = _area_tables(calib)
     eng_k = jnp.stack([tcol(t, "engine") % 4 for t in range(T)], axis=1)
     sp_k = jnp.stack([tcol(t, "sparsity") % 3 for t in range(T)], axis=1)
     rows_k = jnp.stack([tcol(t, "rows") % 5 for t in range(T)], axis=1)
@@ -556,17 +579,24 @@ def _configs_device(g, calib: CalibrationTable):
     tile["exists"] = member.any(axis=1).astype(jnp.float64)
 
     num_tiles = counts.sum(axis=1)
+    gw, gh = grid_dims(jnp, num_tiles.astype(jnp.float64),
+                       _ASPECT_DEV[g[:, IDX_ASPECT] % 3])
     chip = {
-        "dram_gbps": _DRAM_DEV[g[:, -2] % 6],
-        "hops": _HOPS_TABLE_DEV[g[:, -1] % 4, num_tiles],
-        "noc_bpc": jnp.full(B, 64.0),
+        "dram_gbps": _DRAM_DEV[g[:, IDX_DRAM] % 6],
+        "hops": _HOPS_TABLE_DEV[g[:, IDX_ICONN] % 4, num_tiles],
+        "noc_bpc": _NOC_BPC_DEV[g[:, IDX_NOC_BPC] % 4],
         "noc_base_cycles": jnp.full(B, 8.0),
         "ref_clock_hz": jnp.full(B, 1000 * 1e6),
+        "torus": _TOPO_DEV[g[:, IDX_TOPO] % 2],
+        "dram_channels": _DRAM_CH_DEV[g[:, IDX_DRAM_CH] % 4],
+        "grid_w": gw,
+        "grid_h": gh,
     }
     assert set(tile) == set(TILE_KEYS) and set(chip) == set(CHIP_KEYS)
 
     # chip_area: per-type sequential sum in type order + NoC (host order),
-    # every term a gather from the pre-rounded area x count / NoC tables
+    # every term a gather from the pre-rounded area x count / NoC / DRAM
+    # PHY tables
     cnt_k = jnp.stack([tcol(t, "count") % len(_COUNT) for t in range(T)],
                       axis=1)
     active = jnp.arange(T)[None, :] < n_types
@@ -574,7 +604,9 @@ def _configs_device(g, calib: CalibrationTable):
     area = jnp.zeros(B)
     for t in range(T):
         area = area + terms[:, t]
-    area = area + noc_tab[num_tiles.astype(jnp.int64)]
+    area = area + noc_tab[num_tiles.astype(jnp.int64),
+                          g[:, IDX_NOC_BPC] % 4, g[:, IDX_TOPO] % 2]
+    area = area + dram_tab[g[:, IDX_DRAM_CH] % 4]
     return tile, chip, area
 
 
@@ -602,7 +634,8 @@ def _refine_kernel(calib: CalibrationTable,
                    population: int, islands: int, generations: int,
                    tournament: int, n_elite: int, crossover_rate: float,
                    mutation_rate: float, early_stop: int,
-                   migrate_every: int, migrate_k: int):
+                   migrate_every: int, migrate_k: int,
+                   fidelity: str = "aggregate"):
     """The whole Stage-2 refinement as ONE jitted dispatch: a
     ``lax.while_loop`` over generations whose body runs ring migration
     (islands > 1), the genetics kernel, canonicalization, the
@@ -631,7 +664,7 @@ def _refine_kernel(calib: CalibrationTable,
     lkey, ekey, akey = _MODE_KEYS[mode]
     gen_fn = _genetics_kernel(Pi, tournament, n_elite, crossover_rate,
                               mutation_rate)
-    search_fn = _jitted_search_population(calib, shapes)
+    search_fn = _jitted_search_population(calib, shapes, True, fidelity)
 
     def score(pop, canon, memo, e_homo, lo, hi, alpha, xs_list, tm_list):
         # areas only (cheap gathers, bitwise _configs_device's) — full
@@ -785,8 +818,9 @@ def run_ga_fused(sweep, bracket: float, cfg=None, seed: int = 0,
     from ..compiler.batched_mapper import _search_xs_cached
     cfg = cfg or GAConfig()
     if engine is None:
-        engine = EvalEngine(sweep.workloads, calib, backend="exact",
-                            nonfinite="skip")
+        engine = EvalEngine(sweep.workloads, calib,
+                            config=EngineConfig(backend="exact",
+                                                nonfinite="skip"))
     elif not isinstance(engine, EvalEngine):
         raise ValueError("run_ga_fused needs a local EvalEngine — the "
                          "fused loop stages configs and the search scan "
@@ -847,7 +881,8 @@ def run_ga_fused(sweep, bracket: float, cfg=None, seed: int = 0,
     kernel = _refine_kernel(calib, shapes, engine.mode, P, islands,
                             cfg.generations, cfg.tournament, n_elite,
                             cfg.crossover_rate, cfg.mutation_rate,
-                            cfg.early_stop, int(migrate_every), mk)
+                            cfg.early_stop, int(migrate_every), mk,
+                            engine.fidelity)
 
     pop_dev = jnp.asarray(pop, jnp.int32)
     sharding = None

@@ -51,6 +51,7 @@ from .checkpoint import PipelineCheckpoint, run_digest
 from .device_memo import (clear_fresh, drain_to_store, fresh_entries,
                           memo_from_store)
 from .encoding import GENOME_LEN
+from .api import EngineConfig
 from .engine import EvalEngine, canonical_genomes
 from .ga import GAConfig, GAResult
 from .ga_device import run_ga_fused
@@ -218,9 +219,9 @@ def run_pipeline(workloads: Sequence[str], seeds: Sequence[int] = (0, 1, 2),
     cfg = cfg or GAConfig()
     ck = PipelineCheckpoint(checkpoint) if checkpoint is not None else None
     if engine is None:
-        engine = EvalEngine(workloads, calib, backend="exact",
-                            nonfinite="skip",
-                            store=ck.open_store() if ck is not None else None)
+        engine = EvalEngine(workloads, calib, config=EngineConfig(
+            backend="exact", nonfinite="skip",
+            store=ck.open_store() if ck is not None else None))
     else:
         engine.check_workloads(workloads, calib)
     if not isinstance(engine, EvalEngine):

@@ -23,6 +23,7 @@ from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
 from ..workloads import build
 from .batch_eval import batch_evaluate, prepare_configs, prepare_workload
 from .encoding import FAMILIES, decode, random_genomes
+from .api import EngineConfig
 from .engine import EvalEngine
 from .objective import ALPHA, AREA_BRACKETS, area_bracket
 
@@ -96,7 +97,8 @@ def evaluate_genomes(genomes: np.ndarray, workloads: Sequence[str],
     Search loops should hold their own engine so the genome memo and
     workload-prep cache persist across calls; this wrapper exists for
     single-batch scoring and backwards compatibility."""
-    return EvalEngine(workloads, calib, batch=batch).evaluate(genomes)
+    return EvalEngine(workloads, calib,
+                      config=EngineConfig(batch=batch)).evaluate(genomes)
 
 
 def evaluate_genomes_reference(genomes: np.ndarray, workloads: Sequence[str],
@@ -150,8 +152,8 @@ def run_sweep(workloads: Sequence[str], samples_per_stratum: int = 64,
 
     engine = (engine.check_workloads(workloads, calib)
               if engine is not None
-              else EvalEngine(workloads, calib,
-                              backend="exact" if exact else "scan"))
+              else EvalEngine(workloads, calib, config=EngineConfig(
+                  backend="exact" if exact else "scan")))
     rng = np.random.default_rng(seed)
 
     def area_fn(genome):
@@ -193,8 +195,8 @@ def run_sweeps(workloads: Sequence[str], seeds: Sequence[int] = (0, 1, 2),
     frontend over this."""
     engine = (engine.check_workloads(workloads, calib)
               if engine is not None
-              else EvalEngine(workloads, calib,
-                              backend="exact" if exact else "scan"))
+              else EvalEngine(workloads, calib, config=EngineConfig(
+                  backend="exact" if exact else "scan")))
     return {s: run_sweep(workloads, samples_per_stratum, seed=s, calib=calib,
                          brackets=brackets, verbose=verbose, engine=engine)
             for s in seeds}

@@ -14,7 +14,7 @@ from typing import Dict
 from ..arch import ChipConfig, TileTemplate, SFU_FFT, SFU_SNN, SFU_POLY
 from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
 
-__all__ = ["tile_area", "chip_area", "area_breakdown"]
+__all__ = ["tile_area", "chip_area", "area_breakdown", "noc_area_scale"]
 
 
 def tile_area(tile: TileTemplate, calib: CalibrationTable = DEFAULT_CALIB) -> float:
@@ -39,6 +39,15 @@ def area_breakdown(tile: TileTemplate, calib: CalibrationTable = DEFAULT_CALIB) 
             "ports": a_ports}
 
 
+def noc_area_scale(noc_bytes_per_cycle: float, torus: bool) -> float:
+    """Interconnect area multiplier on the per-tile NoC term: router/link
+    width grows with flit width (64 B/cycle is the calibrated baseline),
+    and a torus carries the wrap-around links."""
+    return (0.5 + 0.5 * noc_bytes_per_cycle / 64.0) * (1.25 if torus else 1.0)
+
+
 def chip_area(chip: ChipConfig, calib: CalibrationTable = DEFAULT_CALIB) -> float:
     a = sum(tile_area(t, calib) * c for t, c in chip.tiles)
-    return a + chip.num_tiles * calib.a_noc_mm2_per_tile
+    a = a + chip.num_tiles * calib.a_noc_mm2_per_tile \
+        * noc_area_scale(chip.noc_bytes_per_cycle, chip.torus)
+    return a + (chip.dram_channels - 1) * calib.a_dram_phy_mm2

@@ -39,9 +39,12 @@ from ..arch import MAX_TILES, ChipConfig
 from ..calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
 from ..ir import MAX_PREDS, PlanTensor
 from .area import chip_area, tile_area
-from .costs import (ACT_CACHE_SLOTS, CACHE_FRAC, OP_COST_KEYS, cost_model,
+from .costs import (ACT_CACHE_SLOTS, CACHE_FRAC, FIDELITIES,
+                    MAX_DRAM_CHANNELS, MAX_LINKS, OP_COST_KEYS, cost_model,
+                    dram_channel_one_hot, grid_dims,
                     noc_transfer_energy_pj, noc_transfer_seconds,
-                    pipeline_bounds, split_op_fields, steady_state_energy)
+                    pipeline_bounds, split_op_fields, steady_state_energy,
+                    xy_route_link_mask)
 from .orchestrator import SCHEDULE_MODES, noc_hops
 
 __all__ = ["stack_chip_configs", "stack_plan_tables", "batch_simulate",
@@ -55,7 +58,7 @@ TILE_KEYS = ("exists", "num_macs", "rows", "cols", "engine", "prec_mask",
              "pipeline_depth", "clock_hz", "cache_cap", "sram_bpc",
              "area_mm2", "max_prec")
 CHIP_KEYS = ("dram_gbps", "hops", "noc_bpc", "noc_base_cycles",
-             "ref_clock_hz")
+             "ref_clock_hz", "grid_w", "grid_h", "torus", "dram_channels")
 
 _OP_TABLE_KEYS = OP_COST_KEYS + (
     "valid", "fused", "num_preds", "per_pred_bytes", "fused_lane_ops",
@@ -107,6 +110,11 @@ def stack_chip_configs(chips: Sequence[ChipConfig],
         chip_f["noc_bpc"][b] = chip.noc_bytes_per_cycle
         chip_f["noc_base_cycles"][b] = chip.noc_base_cycles
         chip_f["ref_clock_hz"][b] = chip.ref_clock_mhz * 1e6
+        gw, gh = grid_dims(np, float(len(inst)), chip.grid_aspect)
+        chip_f["grid_w"][b] = gw
+        chip_f["grid_h"][b] = gh
+        chip_f["torus"][b] = float(chip.torus)
+        chip_f["dram_channels"][b] = chip.dram_channels
         chip_f["peak_tops"][b] = sum(t.num_macs * t.clock_mhz * 1e6
                                      for t in inst) / 1e12
         chip_f["chip_area"][b] = chip_area(chip, calib)
@@ -198,9 +206,11 @@ def fifo_insert(fifo_ops, fifo_bytes, cached_at, tile, op_idx, nbytes, cap,
 # the plan-execution scan (mirrors ChipSim.run op-for-op)
 # =============================================================================
 
-def _build_plan_exec(calib: CalibrationTable, max_ops: int):
+def _build_plan_exec(calib: CalibrationTable, max_ops: int,
+                     fidelity: str = "aggregate"):
     cm = cost_model(calib, jnp)
     c = calib
+    link = fidelity == "link"
 
     def exec_plan(tile, chip, xs, total_macs):
         T = tile
@@ -216,10 +226,23 @@ def _build_plan_exec(calib: CalibrationTable, max_ops: int):
                                           c.e_noc_pj_per_byte_hop,
                                           chip["hops"])
 
+        def link_seconds(nbytes):
+            # one grid link's store-and-forward occupancy (hops = 1)
+            return noc_transfer_seconds(jnp, nbytes, chip["noc_bpc"], 1.0,
+                                        chip["noc_base_cycles"],
+                                        chip["ref_clock_hz"])
+
+        # per-tile DRAM-channel one-hot of the link-fidelity tier
+        # (chip-constant, hoisted out of the scan)
+        tidx_f = jnp.arange(MAX_TILES, dtype=_F)
+        ch_oh = dram_channel_one_hot(jnp, tidx_f, chip["dram_channels"])
+
         def step(carry, op):
             (tile_finish, op_finish, cached_at, fifo_ops, fifo_bytes,
              tile_ops, tile_active, tile_macs, e_mod, cache_ev,
-             res_occ) = carry
+             res_occ) = carry[:11]
+            if link:
+                link_occ, chan_occ = carry[11], carry[12]
             idx = jnp.asarray(op["index"], jnp.int32)
             active = (op["valid"] > 0) & (op["fused"] == 0)
             owner = jnp.asarray(op["owner"], jnp.int32)
@@ -333,13 +356,52 @@ def _build_plan_exec(calib: CalibrationTable, max_ops: int):
             occ = jnp.stack([dram_b_op, noc_s_op])
             res_occ = res_occ + jnp.where(active, occ, jnp.zeros(2, _F))
 
+            if link:
+                # --- link-fidelity occupancy (mirrors the oracle walk) ---
+                # (a) XY-routed acquisition links, one route per via-NoC
+                # pred; hit/miss/padded preds yield empty routes (src ==
+                # owner / src < 0), so the unconditional adds stay exact.
+                owner_f = jnp.asarray(owner, _F)
+                acq_rt = xy_route_link_mask(
+                    jnp, jnp.asarray(src, _F), owner_f, chip["grid_w"],
+                    chip["grid_h"], chip["torus"])
+                acq_t = link_seconds(per_pred)
+                for p in range(MAX_PREDS):
+                    link_occ = link_occ + jnp.where(active,
+                                                    acq_rt[p] * acq_t, 0.0)
+                # (b) split-reduce links: every split tile sends its output
+                # slice to the owner (the owner's own route is empty)
+                red_rt = xy_route_link_mask(
+                    jnp, tidx_f, owner_f, chip["grid_w"], chip["grid_h"],
+                    chip["torus"])
+                red_t = link_seconds(slice_out)
+                for t in range(MAX_TILES):
+                    link_occ = link_occ + jnp.where(
+                        active & is_split & mask[t], red_rt[t] * red_t, 0.0)
+                # (c) per-channel DRAM bytes, interleaved by executing tile
+                dram_each = jnp.where(
+                    is_split,
+                    jnp.where(mask,
+                              jnp.broadcast_to(ex_sub["dram_bytes"],
+                                               (MAX_TILES,)), 0.0),
+                    jnp.where(onehot,
+                              jnp.broadcast_to(ex["dram_bytes"],
+                                               (MAX_TILES,)), 0.0))
+                for t in range(MAX_TILES):
+                    chan_occ = chan_occ + jnp.where(active,
+                                                    dram_each[t] * ch_oh[t],
+                                                    0.0)
+
             op_finish = op_finish.at[idx].set(jnp.where(active, fin_op, 0.0))
             fifo_ops, fifo_bytes, cached_at = fifo_insert(
                 fifo_ops, fifo_bytes, cached_at, owner, idx,
                 op["bytes_out"], T["cache_cap"][owner], active)
-            return (tile_finish, op_finish, cached_at, fifo_ops, fifo_bytes,
-                    tile_ops, tile_active, tile_macs, e_mod, cache_ev,
-                    res_occ), None
+            out_carry = (tile_finish, op_finish, cached_at, fifo_ops,
+                         fifo_bytes, tile_ops, tile_active, tile_macs,
+                         e_mod, cache_ev, res_occ)
+            if link:
+                out_carry = out_carry + (link_occ, chan_occ)
+            return out_carry, None
 
         e0 = {m: jnp.asarray(0.0, _F)
               for m in ("compute", "dram", "sram", "irf", "orf", "dsp",
@@ -351,9 +413,13 @@ def _build_plan_exec(calib: CalibrationTable, max_ops: int):
                 jnp.zeros(MAX_TILES, _F), jnp.zeros(MAX_TILES, _F),
                 jnp.zeros(MAX_TILES, _F), e0, jnp.zeros(3, _F),
                 jnp.zeros(2, _F))
+        if link:
+            init = init + (jnp.zeros(MAX_LINKS, _F),
+                           jnp.zeros(MAX_DRAM_CHANNELS, _F))
+        final, _ = jax.lax.scan(step, init, xs["per_op"])
         (tile_finish, op_finish, cached_at, _, _, tile_ops, tile_active,
-         tile_macs, e_mod, cache_ev, res_occ), _ = jax.lax.scan(
-             step, init, xs["per_op"])
+         tile_macs, e_mod, cache_ev, res_occ) = final[:11]
+        link_occ, chan_occ = (final[11], final[12]) if link else (None, None)
 
         makespan = jnp.max(tile_finish)
         gated = tile_ops <= 0
@@ -383,8 +449,11 @@ def _build_plan_exec(calib: CalibrationTable, max_ops: int):
         leak_rate = jnp.sum(jnp.where(T["exists"] > 0,
                                       c.leak_mw_per_mm2 * T["area_mm2"]
                                       * resid * 1e9, 0.0))
-        out.update(pipeline_bounds(jnp, makespan, jnp.max(tile_active),
-                                   dram_bytes, chip["dram_gbps"], noc_busy))
+        out.update(pipeline_bounds(
+            jnp, makespan, jnp.max(tile_active), dram_bytes,
+            chip["dram_gbps"], noc_busy, chan_bytes=chan_occ,
+            dram_channels=chip["dram_channels"] if link else None,
+            link_busy_s=link_occ))
         ii = out["ii_s"]
         out["fill_latency_s"] = makespan
         out["dram_bytes_per_batch"] = dram_bytes
@@ -403,9 +472,9 @@ _CALIB_REGISTRY: Dict[int, CalibrationTable] = {}
 
 
 @functools.lru_cache(maxsize=64)
-def _jitted(calib_key: int, max_ops: int):
+def _jitted(calib_key: int, max_ops: int, fidelity: str = "aggregate"):
     calib = _CALIB_REGISTRY[calib_key]
-    fn = _build_plan_exec(calib, max_ops)
+    fn = _build_plan_exec(calib, max_ops, fidelity)
     batched = jax.vmap(fn, in_axes=({k: 0 for k in TILE_KEYS},
                                     {k: 0 for k in CHIP_KEYS}, 0, 0))
     return jax.jit(batched)
@@ -414,7 +483,8 @@ def _jitted(calib_key: int, max_ops: int):
 def batch_simulate(plans: Dict[str, np.ndarray],
                    cfgs: Dict[str, Dict[str, np.ndarray]],
                    calib: CalibrationTable = DEFAULT_CALIB,
-                   mode: Optional[str] = None) -> Dict[str, np.ndarray]:
+                   mode: Optional[str] = None,
+                   fidelity: str = "aggregate") -> Dict[str, np.ndarray]:
     """Execute stacked plan tables against stacked chip configs.
 
     ``plans`` comes from ``stack_plan_tables`` (candidate b's plan must
@@ -440,6 +510,9 @@ def batch_simulate(plans: Dict[str, np.ndarray],
         raise ValueError(
             f"batched executor cannot model schedule mode {mode!r}; "
             f"supported modes: {SCHEDULE_MODES}")
+    if fidelity not in FIDELITIES:
+        raise ValueError(
+            f"unknown fidelity {fidelity!r}; supported: {FIDELITIES}")
     key = id(calib)
     _CALIB_REGISTRY[key] = calib
     max_ops = plans["op_type"].shape[1]
@@ -455,7 +528,7 @@ def batch_simulate(plans: Dict[str, np.ndarray],
     xs = {"per_op": per_op}
     tile = {k: jnp.asarray(cfgs["tile"][k], _F) for k in TILE_KEYS}
     chip = {k: jnp.asarray(cfgs["chip"][k], _F) for k in CHIP_KEYS}
-    fn = _jitted(key, max_ops)
+    fn = _jitted(key, max_ops, fidelity)
     out = fn(tile, chip, xs, jnp.asarray(plans["total_macs"], _F))
     res = {k: np.asarray(v) for k, v in out.items()}
     res["area_mm2"] = cfgs["chip"]["chip_area"]
@@ -465,10 +538,11 @@ def batch_simulate(plans: Dict[str, np.ndarray],
 
 
 def simulate_plans(chips: Sequence[ChipConfig], tables: Sequence[PlanTensor],
-                   calib: CalibrationTable = DEFAULT_CALIB
-                   ) -> Dict[str, np.ndarray]:
+                   calib: CalibrationTable = DEFAULT_CALIB,
+                   fidelity: str = "aggregate") -> Dict[str, np.ndarray]:
     """Convenience wrapper: stack ``chips`` + their ``tables`` and execute."""
     if len(chips) != len(tables):
         raise ValueError("one plan table per chip required")
     return batch_simulate(stack_plan_tables(tables),
-                          stack_chip_configs(chips, calib), calib)
+                          stack_chip_configs(chips, calib), calib,
+                          fidelity=fidelity)

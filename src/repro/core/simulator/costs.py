@@ -32,15 +32,17 @@ from typing import Dict, Tuple
 
 import numpy as np
 
-from ..arch import Dataflow, Engine, Sparsity
+from ..arch import Dataflow, Engine, MAX_TILES, Sparsity
 from ..calibrate.asap7 import CalibrationTable
 from ..ir import OpClass, OpType, PRECISION_BYTES
 
 __all__ = [
     "CACHE_FRAC", "ACT_CACHE_SLOTS", "ACC_BYTES", "DSP_OPS_PER_ELEM",
     "DSP_OPS_TABLE", "SFU_NEED", "TILE_COST_KEYS", "OP_COST_KEYS",
-    "COST_MODEL_VERSION", "CostModel", "cost_model", "ActivationCache",
+    "COST_MODEL_VERSION", "FIDELITIES", "MAX_DRAM_CHANNELS", "MAX_LINKS",
+    "CostModel", "cost_model", "ActivationCache",
     "noc_transfer_seconds", "noc_transfer_energy_pj", "split_op_fields",
+    "grid_dims", "xy_route_link_mask", "dram_channel_one_hot",
     "pipeline_bounds", "steady_state_energy",
 ]
 
@@ -49,7 +51,24 @@ __all__ = [
 # it invalidates all previously accumulated metrics at once — REQUIRED
 # whenever an edit in this module (or in the mapping/orchestration
 # semantics it feeds) changes any metric bit.  Format: "<pr>.<rev>".
-COST_MODEL_VERSION = "6.0"
+COST_MODEL_VERSION = "9.0"
+
+# Throughput-II fidelity tiers shared by every execution surface:
+# ``aggregate`` keeps the historical one-shared-link NoC / one-channel
+# DRAM bounds; ``link`` adds per-link XY-routed NoC occupancy on the tile
+# grid and per-channel (address-interleaved) DRAM queues on top.
+FIDELITIES = ("aggregate", "link")
+
+# Fixed per-channel DRAM queue width of the link-fidelity tier.  Chips
+# declare ``dram_channels`` in [1, MAX_DRAM_CHANNELS]; unused channel
+# lanes stay zero so the vectors keep a static shape under jit.
+MAX_DRAM_CHANNELS = 8
+
+# Link-occupancy vector width: one horizontal link (to the right of each
+# grid position) + one vertical link (below each grid position) on the
+# largest admissible tile grid.  Positions outside a chip's actual
+# ``grid_w x grid_h`` footprint never match a route and stay zero.
+MAX_LINKS = 2 * MAX_TILES
 
 # fraction of per-tile SRAM reserved for the activation cache (§3.3.4)
 CACHE_FRAC = 0.25
@@ -124,6 +143,83 @@ def noc_transfer_energy_pj(xp, nbytes, e_noc_pj_per_byte_hop, hops):
     return nbytes * e_noc_pj_per_byte_hop * hops
 
 
+# =============================================================================
+# link-fidelity tier: XY-routed per-link NoC + per-channel DRAM queues
+# =============================================================================
+
+def grid_dims(xp, num_tiles, grid_aspect):
+    """(grid_w, grid_h) of the 2D tile layout: width tracks
+    ``sqrt(n) * aspect`` (clipped to [1, n]); the last row may be
+    partial.  Same float64 arithmetic on both backends."""
+    n = xp.maximum(xp.asarray(num_tiles, getattr(xp, "float64")), 1.0)
+    w = xp.clip(xp.round(xp.sqrt(n) * grid_aspect), 1.0, n)
+    return w, xp.ceil(n / w)
+
+
+def xy_route_link_mask(xp, src, dst, grid_w, grid_h, torus):
+    """0/1 occupancy mask over the ``MAX_LINKS`` grid links used by an
+    XY route from tile ``src`` to tile ``dst``.
+
+    Tiles are laid out row-major on a ``grid_w x grid_h`` grid.  Link
+    ``i < MAX_TILES`` is the horizontal link to the *right* of grid
+    position ``i``; link ``MAX_TILES + i`` is the vertical link *below*
+    position ``i``.  Links are undirected shared channels — a leftward
+    hop occupies the same link as the rightward one.  XY (dimension-
+    ordered) routing moves horizontally along the source row first, then
+    vertically along the destination column.  On a torus each dimension
+    independently takes the wrap-around direction when strictly shorter
+    (``2*delta > extent``; ties go the mesh way), using the wrap links at
+    the grid edge.  A negative ``src``/``dst`` (no tile) yields an empty
+    route.  All inputs broadcast; the link axis is appended last.
+    """
+    f64 = getattr(xp, "float64")
+    links = xp.arange(MAX_TILES, dtype=f64)
+    s = xp.asarray(src, f64)[..., None]
+    d = xp.asarray(dst, f64)[..., None]
+    w = xp.maximum(xp.asarray(grid_w, f64), 1.0)[..., None]
+    h = xp.maximum(xp.asarray(grid_h, f64), 1.0)[..., None]
+    wrap_ok = xp.asarray(torus, f64)[..., None] > 0
+    sr = xp.floor_divide(s, w)
+    sc = s - sr * w
+    dr = xp.floor_divide(d, w)
+    dc = d - dr * w
+    lr = xp.floor_divide(links, w)
+    lc = links - lr * w
+    valid = (s >= 0) & (d >= 0)
+    # horizontal segment: along the source row
+    cmin = xp.minimum(sc, dc)
+    cmax = xp.maximum(sc, dc)
+    hwrap = wrap_ok & (2.0 * (cmax - cmin) > w)
+    inside_h = (lc >= cmin) & (lc < cmax)
+    outside_h = (lc >= cmax) | (lc < cmin)
+    use_h = valid & (lr == sr) & xp.where(hwrap, outside_h, inside_h)
+    # vertical segment: along the destination column
+    rmin = xp.minimum(sr, dr)
+    rmax = xp.maximum(sr, dr)
+    vwrap = wrap_ok & (2.0 * (rmax - rmin) > h)
+    inside_v = (lr >= rmin) & (lr < rmax)
+    outside_v = (lr >= rmax) | (lr < rmin)
+    use_v = valid & (lc == dc) & (lr < h) \
+        & xp.where(vwrap, outside_v, inside_v)
+    return xp.concatenate([xp.where(use_h, 1.0, 0.0),
+                           xp.where(use_v, 1.0, 0.0)], axis=-1)
+
+
+def dram_channel_one_hot(xp, tile_idx, dram_channels):
+    """One-hot (..., MAX_DRAM_CHANNELS) selector of the DRAM channel that
+    serves ``tile_idx``'s traffic: addresses interleave across channels
+    by owner tile (``tile mod dram_channels``), the way NeuPIMs-style
+    channel/rank models stripe a tensor across the memory system.  A
+    negative tile index selects no channel."""
+    f64 = getattr(xp, "float64")
+    ch = xp.arange(MAX_DRAM_CHANNELS, dtype=f64)
+    t = xp.asarray(tile_idx, f64)[..., None]
+    n = xp.clip(xp.asarray(dram_channels, f64), 1.0,
+                float(MAX_DRAM_CHANNELS))[..., None]
+    sel = t - xp.floor_divide(t, n) * n
+    return xp.where((ch == sel) & (t >= 0), 1.0, 0.0)
+
+
 def split_op_fields(xp, op, axis, kf):
     """Array mirror of ``ir.slice_op``: even 1/k slice of a MAC op along
     OC (axis 0), B (1) or IC (2).  ``op`` is an ``OP_COST_KEYS`` dict;
@@ -154,7 +250,8 @@ def split_op_fields(xp, op, axis, kf):
 # =============================================================================
 
 def pipeline_bounds(xp, makespan_s, tile_busy_max_s, dram_bytes, dram_gbps,
-                    noc_busy_s):
+                    noc_busy_s, chan_bytes=None, dram_channels=None,
+                    link_busy_s=None):
     """Steady-state initiation interval of a pipelined (throughput-mode)
     schedule: successive inference batches replay the same plan, and in
     steady state the batch rate is set by the busiest *resource*, not the
@@ -176,16 +273,42 @@ def pipeline_bounds(xp, makespan_s, tile_busy_max_s, dram_bytes, dram_gbps,
     the latency model's dynamic-bandwidth optimism lets overlapping tiles
     exceed a shared-resource bound.  All backends call this one function,
     so the II arithmetic cannot drift between them.
+
+    The ``fidelity="link"`` tier passes two extra occupancy vectors and
+    the chip's channel count:
+
+    * ``chan_bytes`` — (..., MAX_DRAM_CHANNELS) per-channel DRAM bytes
+      (address-interleaved by owner tile); each channel serves its queue
+      at ``dram_gbps / dram_channels``, so the channel bound is the max
+      channel queue at the per-channel bandwidth.  With one channel it
+      reduces exactly to the aggregate DRAM bound.
+    * ``link_busy_s`` — (..., MAX_LINKS) per-link XY-routed transfer
+      occupancy; the link bound is the busiest single link.
+
+    Both are *additional* lower bounds max'd into the bottleneck (the
+    aggregate bounds model injection/front-end serialization and are kept)
+    — so ``II(link) >= II(aggregate)`` always, and the aggregate keys keep
+    their historical bits.
     """
     dram_bound = dram_bytes / (dram_gbps * 1e9)
     bottleneck = xp.maximum(xp.maximum(tile_busy_max_s, dram_bound),
                             noc_busy_s)
-    return {
-        "ii_s": xp.minimum(makespan_s, bottleneck),
+    out = {
         "ii_tile_bound_s": tile_busy_max_s,
         "ii_dram_bound_s": dram_bound,
         "ii_noc_bound_s": noc_busy_s,
     }
+    if chan_bytes is not None:
+        n_ch = xp.clip(dram_channels, 1.0, float(MAX_DRAM_CHANNELS))
+        chan_bound = xp.max(chan_bytes, axis=-1) \
+            / ((dram_gbps / n_ch) * 1e9)
+        link_bound = xp.max(link_busy_s, axis=-1)
+        bottleneck = xp.maximum(xp.maximum(bottleneck, chan_bound),
+                                link_bound)
+        out["ii_chan_bound_s"] = chan_bound
+        out["ii_link_bound_s"] = link_bound
+    out["ii_s"] = xp.minimum(makespan_s, bottleneck)
+    return out
 
 
 def steady_state_energy(energy_total_pj, leakage_pj, leak_rate_pj_per_s,

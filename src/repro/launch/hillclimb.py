@@ -30,12 +30,13 @@ def dse_hillclimb(workloads, budget_mm2: float = 200.0, steps: int = 24,
 
     from repro.core.dse.encoding import GENOME_LEN, genome_bounds, \
         random_genomes
+    from repro.core.dse.api import EngineConfig
     from repro.core.dse.engine import EvalEngine
 
     if not workloads:
         raise ValueError("dse_hillclimb needs at least one workload")
     engine = (engine.check_workloads(workloads) if engine is not None
-              else EvalEngine(workloads))
+              else EvalEngine(workloads, config=EngineConfig()))
     rng = np.random.default_rng(seed)
     bounds = genome_bounds()
 

@@ -73,7 +73,6 @@ from __future__ import annotations
 import asyncio
 import dataclasses
 import functools
-import hashlib
 import itertools
 import json
 import random
@@ -86,6 +85,7 @@ from typing import Any, Dict, Iterator, List, Optional, Sequence
 import numpy as np
 
 from ..core.calibrate.asap7 import CalibrationTable, DEFAULT_CALIB
+from ..core.dse.api import META_VERSION, EngineConfig, context_digest
 from ..core.dse.encoding import GENOME_LEN
 from ..core.dse.engine import (EngineStats, EvalEngine, canonical_genomes,
                                genome_areas)
@@ -428,7 +428,8 @@ class DSEService:
         en = np.stack([r[1] for r in rows]) if rows else np.zeros((0, W))
         tw = np.stack([r[2] for r in rows]) if rows else np.zeros((0, W))
         n_batches = max(len(acct["batches"]), 1)
-        meta = {"backend": eng.backend, "mode": mode, "requests": n,
+        meta = {"meta_version": META_VERSION, "backend": eng.backend,
+                "fidelity": eng.fidelity, "mode": mode, "requests": n,
                 "store_hits": store_hits,
                 "hit_rate": store_hits / max(n, 1),
                 "inflight_merged": merged,
@@ -663,7 +664,7 @@ class DSEService:
     def _hello(self) -> Dict[str, Any]:
         eng = self.engine
         return {"ok": True, "workloads": eng.workloads, "mode": eng.mode,
-                "backend": eng.backend,
+                "backend": eng.backend, "fidelity": eng.fidelity,
                 "aggressive_int4": eng.aggressive_int4,
                 "enable_fusion": eng.enable_fusion,
                 "cost_model_version": COST_MODEL_VERSION,
@@ -835,6 +836,7 @@ class DSEClient:
             self.calib = eng.calib
             self.backend = eng.backend
             self.mode = eng.mode
+            self.fidelity = eng.fidelity
         else:
             self.calib = calib
             with self._lock:
@@ -856,12 +858,16 @@ class DSEClient:
         self.workloads = list(hello["workloads"])
         self.backend = hello["backend"]
         self.mode = hello["mode"]
-        fidelity = "approx" if self.backend == "scan" else "exact"
-        text = repr((tuple(self.workloads), repr(self.calib),
-                     bool(hello["aggressive_int4"]),
-                     bool(hello["enable_fusion"]), fidelity,
-                     hello["cost_model_version"]))
-        digest = hashlib.sha256(text.encode()).hexdigest()
+        self.fidelity = hello["fidelity"]
+        # recompute the engine context digest client-side from the
+        # handshake knobs + the LOCAL calibration and cost-model version
+        # (api.context_digest — the same function the server's
+        # context_key() runs), so a server with different calib/version
+        # hashes differently and is rejected here
+        digest = context_digest(self.workloads, self.calib,
+                                hello["aggressive_int4"],
+                                hello["enable_fusion"], self.backend,
+                                self.fidelity).hex()
         if digest != hello["context"]:
             self._drop()
             raise ValueError(
@@ -990,7 +996,9 @@ class DSEClient:
         en[skip] = np.inf
         self.stats.skips += len(skip)
         sel = np.flatnonzero(keep_mask)
-        meta: Dict[str, Any] = {"backend": self.backend,
+        meta: Dict[str, Any] = {"meta_version": META_VERSION,
+                                "backend": self.backend,
+                                "fidelity": self.fidelity,
                                 "mode": mode or self.mode,
                                 "requests": n, "skips": len(skip)}
         if len(sel):
@@ -1015,6 +1023,29 @@ class DSEClient:
     def areas(self, genomes: np.ndarray) -> np.ndarray:
         genomes = np.asarray(genomes, np.int64).reshape(-1, GENOME_LEN)
         return genome_areas(genomes, self.calib)
+
+    def score_batch(self, genomes: np.ndarray,
+                    mode: Optional[str] = None) -> Dict[str, Any]:
+        """The Evaluator core call: genomes in, metrics out, no keep
+        predicate and no per-request meta.  In-process it drives the
+        engine's reentrant ``score_batch`` directly; over TCP it flows
+        through ``evaluate`` (the wire only carries cached-or-simulated
+        content-addressed results, which are bitwise identical)."""
+        if self._service is not None:
+            return self._service.engine.score_batch(genomes, mode=mode)
+        res = self.evaluate(genomes, mode=mode)
+        return {k: res[k] for k in ("latency", "energy", "tops_w", "area")}
+
+    def context_key(self) -> bytes:
+        """The served engine's content-context digest (see
+        ``api.context_digest``) — verified against the local
+        recomputation at every (re)connect."""
+        if self._service is not None:
+            return self._service.engine.context_key()
+        with self._lock:
+            if self._sock is None:
+                self._connect()
+            return bytes.fromhex(self._context)
 
     def rescore(self, genomes: np.ndarray, oracle: bool = False,
                 mode: Optional[str] = None) -> Dict[str, Any]:
@@ -1179,14 +1210,14 @@ def _smoke(tcp: bool = True, verbose: bool = True) -> Dict[str, Any]:
                    early_stop=10_000)
     seeds = (0, 1)
 
-    sweep_eng = EvalEngine(workloads, backend="exact")
+    sweep_eng = EvalEngine(workloads, config=EngineConfig(backend="exact"))
     sweep = run_sweep(workloads, samples_per_stratum=4, seed=0,
                       brackets=(100.0, bracket), engine=sweep_eng)
 
     # ---- baseline: each client against its own local exact engine --------
     local, local_dispatches = {}, {}
     for s in seeds:
-        eng = EvalEngine(workloads, backend="exact")
+        eng = EvalEngine(workloads, config=EngineConfig(backend="exact"))
         local[s] = run_ga(sweep, bracket, cfg, seed=s, engine=eng)
         local_dispatches[s] = eng.stats.dispatches
     rescore = EvalEngine(workloads).rescore(
@@ -1197,9 +1228,9 @@ def _smoke(tcp: bool = True, verbose: bool = True) -> Dict[str, Any]:
     store_path = f"{tmp}/results.sqlite"
 
     def fresh_service():
-        eng = EvalEngine(workloads, backend="exact",
-                         store=TieredStore(MemoryLRUStore(),
-                                           SqliteStore(store_path)))
+        eng = EvalEngine(workloads, config=EngineConfig(
+            backend="exact", store=TieredStore(MemoryLRUStore(),
+                                               SqliteStore(store_path))))
         return DSEService(eng, max_batch=256, max_wait_ms=100.0).start()
 
     service = fresh_service()
@@ -1266,7 +1297,8 @@ def _smoke(tcp: bool = True, verbose: bool = True) -> Dict[str, Any]:
         "seed_done" in stages, stages
     served_pipe = events[-1]["result"]
     local_pipe = run_pipeline(
-        workloads, engine=EvalEngine(workloads, backend="exact"),
+        workloads,
+        engine=EvalEngine(workloads, config=EngineConfig(backend="exact")),
         **{**pipe_kw, "cfg": GAConfig(**pipe_kw["cfg"])})
     assert served_pipe["front"]["points"] == \
         local_pipe.front_points.tolist(), \
@@ -1318,6 +1350,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--workloads", nargs="*",
                     default=["kan", "resnet50_int8"])
     ap.add_argument("--backend", default="exact")
+    ap.add_argument("--fidelity", default="aggregate",
+                    choices=("aggregate", "link"),
+                    help="NoC/DRAM contention tier: 'aggregate' (single "
+                         "busy/bandwidth terms) or 'link' (per-link "
+                         "XY-routed NoC + per-channel DRAM queues)")
     ap.add_argument("--store", default=None,
                     help="sqlite path for a persistent result store")
     ap.add_argument("--max-batch", type=int, default=1024)
@@ -1337,8 +1374,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         store = None
         if args.store:
             store = TieredStore(MemoryLRUStore(), SqliteStore(args.store))
-        engine = EvalEngine(args.workloads, backend=args.backend,
-                            store=store)
+        engine = EvalEngine(args.workloads, config=EngineConfig(
+            backend=args.backend, fidelity=args.fidelity, store=store))
         service = DSEService(engine, max_batch=args.max_batch,
                              max_wait_ms=args.max_wait_ms).start()
         bound = service.listen(host or "127.0.0.1", int(port))

@@ -1,0 +1,71 @@
+"""CI guard: tier-1 internals are deprecation-clean.
+
+Exercises every internal construction path — engine (all knob classes),
+search frontends with default engines, and the service/client pair —
+under ``-W error::DeprecationWarning``.  The legacy per-knob
+``EvalEngine`` kwargs warn on purpose for *external* callers; this
+script proves no in-repo caller still uses them (they must all go
+through ``config=EngineConfig(...)``).
+
+Run: ``PYTHONPATH=src python -W error::DeprecationWarning
+tests/check_no_deprecations.py``
+"""
+import warnings
+
+import numpy as np
+
+from repro.core.dse.api import EngineConfig
+from repro.core.dse.encoding import random_genomes
+from repro.core.dse.engine import EvalEngine
+from repro.core.dse.ga import GAConfig, run_ga
+from repro.core.dse.sweep import run_sweep
+from repro.serve.dse_service import DSEClient, DSEService
+
+WLS = ["kan"]
+
+
+def main():
+    # the config path itself must be silent
+    eng = EvalEngine(WLS, config=EngineConfig(backend="exact",
+                                              fidelity="link"))
+    g = random_genomes(np.random.default_rng(0), 8)
+    eng.evaluate(g)
+    eng.rescore(g[:2])
+    eng.score_batch(g[:2])
+
+    # search frontends constructing their own default engines
+    sweep = run_sweep(WLS, samples_per_stratum=2, seed=0,
+                      brackets=(200.0,))
+    run_ga(sweep, 200.0, GAConfig(population=8, generations=2,
+                                  seed_top_k=4, early_stop=100))
+
+    # service + both client bindings
+    svc = DSEService(EvalEngine(WLS)).start()
+    try:
+        cl = DSEClient(service=svc)
+        cl.evaluate(g[:4])
+        cl.context_key()
+        host, port = svc.listen()
+        tcp = DSEClient(address=(host, port))
+        try:
+            tcp.evaluate(g[:4])
+        finally:
+            tcp.close()
+    finally:
+        svc.stop()
+
+    # and the shim still fires for legacy callers (sanity that the
+    # guard would actually catch a regression)
+    with warnings.catch_warnings():
+        warnings.simplefilter("always")
+        caught = warnings.catch_warnings(record=True)
+        with caught as w:
+            warnings.simplefilter("always")
+            EvalEngine(WLS, backend="exact")
+        assert any(issubclass(x.category, DeprecationWarning) for x in w), \
+            "legacy-kwarg shim stopped warning"
+    print("deprecation-clean: ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+"""The unified engine/evaluator API (PR 9): ``EngineConfig`` as the one
+knob surface, the ``Evaluator`` protocol conformance suite shared by
+every scoring surface (local ``EvalEngine``, in-process ``DSEClient``,
+TCP ``DSEClient``), the legacy-kwarg deprecation shim, and the
+``result["meta"]`` schema stamp."""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.dse.api import (BACKENDS, EngineConfig, Evaluator,
+                                META_VERSION, context_digest)
+from repro.core.dse.encoding import random_genomes
+from repro.core.dse.engine import EvalEngine
+from repro.serve.dse_service import DSEClient, DSEService
+
+WLS = ["kan"]
+METRICS = ("latency", "energy", "tops_w", "area")
+
+
+@pytest.fixture(scope="module")
+def service():
+    svc = DSEService(EvalEngine(WLS), max_batch=64, max_wait_ms=20.0)
+    svc.start()
+    yield svc
+    svc.stop()
+
+
+@pytest.fixture(scope="module", params=["engine", "client", "tcp"])
+def evaluator(request, service):
+    """One fixture per scoring surface; each must satisfy the full
+    ``Evaluator`` contract below."""
+    if request.param == "engine":
+        yield EvalEngine(WLS, config=EngineConfig())
+        return
+    if request.param == "client":
+        cl = DSEClient(service=service)
+        yield cl
+        cl.close()
+        return
+    host, port = service.listen()
+    cl = DSEClient(address=(host, port))
+    yield cl
+    cl.close()
+
+
+def _genomes(n=8, seed=11):
+    return random_genomes(np.random.default_rng(seed), n)
+
+
+# =============================================================================
+# Evaluator protocol conformance (shared across all three surfaces)
+# =============================================================================
+
+def test_satisfies_protocol(evaluator):
+    assert isinstance(evaluator, Evaluator)
+    assert list(evaluator.workloads) == WLS
+    assert evaluator.stats is not None
+
+
+def test_evaluate_contract(evaluator):
+    g = _genomes()
+    res = evaluator.evaluate(g)
+    for k in ("latency", "energy", "tops_w"):
+        assert res[k].shape == (len(g), len(WLS)), k
+        assert res[k].dtype == np.float64, k
+    assert res["area"].shape == (len(g),)
+    meta = res["meta"]
+    assert meta["meta_version"] == META_VERSION
+    assert meta["backend"] in BACKENDS
+    assert meta["fidelity"] in ("aggregate", "link")
+    assert meta["mode"] in ("latency", "throughput")
+    assert meta["requests"] == len(g)
+
+
+def test_rescore_contract(evaluator):
+    res = evaluator.rescore(_genomes(4))
+    for k in METRICS:
+        assert k in res
+    assert res["meta"]["meta_version"] == META_VERSION
+    assert res["meta"]["fidelity"] in ("aggregate", "link")
+
+
+def test_score_batch_matches_evaluate(evaluator):
+    g = _genomes(6, seed=12)
+    ref = evaluator.evaluate(g)
+    got = evaluator.score_batch(g)
+    assert set(got) == set(METRICS)   # metrics only, no meta
+    for k in METRICS:
+        assert got[k].tobytes() == ref[k].tobytes(), k
+
+
+def test_context_key_matches_local_engine(evaluator):
+    key = evaluator.context_key()
+    assert isinstance(key, bytes) and len(key) == 32
+    assert key == EvalEngine(WLS).context_key()
+
+
+# =============================================================================
+# EngineConfig: validation, digest coverage, immutability
+# =============================================================================
+
+def test_config_is_frozen_and_comparable():
+    a, b = EngineConfig(backend="exact"), EngineConfig(backend="exact")
+    assert a == b
+    assert a != EngineConfig()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        a.backend = "scan"
+    # store is wiring, not identity: excluded from equality and repr
+    assert EngineConfig(store=object()) == EngineConfig()
+    assert "store" not in repr(EngineConfig())
+
+
+@pytest.mark.parametrize("kw", [
+    {"backend": "cuda"},
+    {"mode": "speed"},
+    {"fidelity": "cycle"},
+    {"exact_mapper": "rust"},
+    {"nonfinite": "ignore"},
+    {"batch": 0},
+    {"backend": "exact", "exact_mapper": "python"},
+])
+def test_config_rejects_invalid_knobs(kw):
+    with pytest.raises(ValueError):
+        EngineConfig(**kw)
+
+
+def test_every_metric_knob_lands_in_the_digest():
+    """The acceptance bar: all knobs flow through EngineConfig's context
+    digest — fidelity and the compile flags change it, the exact-family
+    backends share one digest class, scan gets its own."""
+    from repro.core.calibrate.asap7 import DEFAULT_CALIB
+    base = EngineConfig().context_digest(WLS, DEFAULT_CALIB)
+    assert EngineConfig(fidelity="link").context_digest(
+        WLS, DEFAULT_CALIB) != base
+    assert EngineConfig(aggressive_int4=True).context_digest(
+        WLS, DEFAULT_CALIB) != base
+    assert EngineConfig(enable_fusion=False).context_digest(
+        WLS, DEFAULT_CALIB) != base
+    exact = EngineConfig(backend="exact").context_digest(WLS, DEFAULT_CALIB)
+    assert exact != base                     # scan maps approximately
+    for b in ("batched", "oracle"):
+        assert EngineConfig(backend=b).context_digest(
+            WLS, DEFAULT_CALIB) == exact     # one exact mapping class
+    # non-metric knobs (batch size, memo sizing, store) don't invalidate
+    assert EngineConfig(batch=7, memo_max=9,
+                        memoize=False).context_digest(
+        WLS, DEFAULT_CALIB) == base
+    assert context_digest(WLS, DEFAULT_CALIB, False, True, "scan",
+                          "aggregate") == base
+
+
+def test_engine_context_key_delegates_to_config():
+    from repro.core.calibrate.asap7 import DEFAULT_CALIB
+    cfg = EngineConfig(backend="exact", fidelity="link")
+    eng = EvalEngine(WLS, config=cfg)
+    assert eng.context_key() == cfg.context_digest(WLS, DEFAULT_CALIB)
+    assert eng.config == cfg
+    assert eng.fidelity == "link"
+
+
+# =============================================================================
+# legacy-kwarg deprecation shim
+# =============================================================================
+
+def test_config_path_emits_no_warnings():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        EvalEngine(WLS, config=EngineConfig(backend="exact"))
+
+
+def test_legacy_kwargs_warn_and_still_work():
+    with pytest.warns(DeprecationWarning, match=r"backend.*nonfinite"):
+        eng = EvalEngine(WLS, backend="exact", nonfinite="skip")
+    assert eng.config == EngineConfig(backend="exact", nonfinite="skip")
+    assert eng.backend == "exact"
+    g = _genomes(3, seed=13)
+    ref = EvalEngine(WLS, config=EngineConfig(backend="exact",
+                                              nonfinite="skip")).evaluate(g)
+    got = eng.evaluate(g)
+    for k in METRICS:
+        assert got[k].tobytes() == ref[k].tobytes(), k
+
+
+def test_memo_limit_warns_specifically():
+    # two warnings fire: the specific memo_limit-alias one, then the
+    # aggregated legacy-kwargs one for the memo_max it maps to
+    with pytest.warns(DeprecationWarning) as rec:
+        eng = EvalEngine(WLS, memo_limit=2048)
+    assert any("memo_limit" in str(w.message) for w in rec)
+    assert eng.config.memo_max == 2048
+
+
+def test_config_plus_legacy_kwargs_is_an_error():
+    with pytest.raises(ValueError, match="config"):
+        EvalEngine(WLS, backend="exact", config=EngineConfig())

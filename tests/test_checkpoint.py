@@ -14,6 +14,7 @@ import time
 import numpy as np
 import pytest
 
+from repro.core.dse.api import EngineConfig
 from repro.core.dse.checkpoint import (CheckpointMismatch,
                                        PipelineCheckpoint, run_digest)
 from repro.core.dse.engine import EvalEngine
@@ -28,7 +29,8 @@ KW = dict(seeds=(0, 1), brackets=(100.0, 200.0), samples_per_stratum=4,
 
 
 def _engine():
-    return EvalEngine(WLS, backend="exact", nonfinite="skip")
+    return EvalEngine(WLS, config=EngineConfig(backend="exact",
+                                               nonfinite="skip"))
 
 
 def _assert_same_study(ref, res):
@@ -132,7 +134,8 @@ def test_run_digest_sensitivity():
     assert base != run_digest(eng, (0, 1), (200.0,), 4, CFG, None, 5, 2)
     assert base != run_digest(eng, (0, 1), (100.0,), 8, CFG, None, 5, 2)
     assert base != run_digest(eng, (0, 1), (100.0,), 4, CFG, 2, 5, 2)
-    other = EvalEngine(["resnet50_int8"], backend="exact")
+    other = EvalEngine(["resnet50_int8"],
+                       config=EngineConfig(backend="exact"))
     assert base != run_digest(other, (0, 1), (100.0,), 4, CFG, None, 5, 2)
 
 

@@ -8,6 +8,7 @@ import pytest
 
 import jax.numpy as jnp
 
+from repro.core.dse.api import EngineConfig
 from repro.core.dse.device_memo import (PROBES, drain_to_store, memo_fill,
                                         memo_from_store, memo_init,
                                         memo_insert, memo_lookup)
@@ -106,7 +107,7 @@ def test_engine_sync_roundtrip():
     its evaluations without recomputation."""
     rng = np.random.default_rng(5)
     genomes = random_genomes(rng, 8)
-    eng = EvalEngine(["kan"], backend="exact")
+    eng = EvalEngine(["kan"], config=EngineConfig(backend="exact"))
     m = eng.evaluate(genomes)
 
     memo = memo_from_store(eng, 64)
@@ -122,7 +123,7 @@ def test_engine_sync_roundtrip():
 
     # fresh inserts DO drain — into a cold engine whose store then
     # serves the same genomes as pure hits, bitwise
-    eng2 = EvalEngine(["kan"], backend="exact")
+    eng2 = EvalEngine(["kan"], config=EngineConfig(backend="exact"))
     memo2 = memo_insert(memo_init(64, 1), canon, vals)
     assert drain_to_store(memo2, eng2) == memo_fill(memo2)
     m2 = eng2.evaluate(genomes)

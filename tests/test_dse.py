@@ -112,3 +112,74 @@ def test_pareto_mask_device_matches_host(rng):
     assert np.array_equal(host, dev)
     assert np.array_equal(pareto_mask(np.zeros((0, 3))),
                           np.asarray(pareto_mask_device(np.zeros((0, 3)))))
+
+
+# =============================================================================
+# topology genes (mesh/torus, grid aspect, NoC width, DRAM channels; PR 9)
+# =============================================================================
+
+def test_topology_gene_roundtrip():
+    """Every value of each interconnect gene decodes to the matching
+    ChipConfig field, and the host decode agrees with the vectorized
+    ``genomes_to_configs`` chip arrays gene-for-gene."""
+    from repro.core.arch import KNOB_GRID
+    from repro.core.dse.encoding import (IDX_ASPECT, IDX_DRAM_CH,
+                                         IDX_NOC_BPC, IDX_TOPO)
+    from repro.core.dse.engine import genomes_to_configs
+    from repro.core.simulator.costs import grid_dims
+
+    rng = np.random.default_rng(3)
+    g = random_genomes(rng, 48)
+    g[:, IDX_TOPO] = np.arange(48) % 2
+    g[:, IDX_ASPECT] = np.arange(48) % 3
+    g[:, IDX_NOC_BPC] = np.arange(48) % 4
+    g[:, IDX_DRAM_CH] = np.arange(48) % 4
+    cfgs = genomes_to_configs(g)
+    chip_f = cfgs["chip"]
+    for i in range(48):
+        chip = decode(g[i])
+        assert chip.torus == bool(KNOB_GRID["noc_topology"][i % 2])
+        assert chip.grid_aspect == KNOB_GRID["grid_aspect"][i % 3]
+        assert chip.noc_bytes_per_cycle == KNOB_GRID["noc_bpc"][i % 4]
+        assert chip.dram_channels == KNOB_GRID["dram_channels"][i % 4]
+        assert float(chip_f["torus"][i]) == float(chip.torus)
+        assert float(chip_f["noc_bpc"][i]) == chip.noc_bytes_per_cycle
+        assert float(chip_f["dram_channels"][i]) == chip.dram_channels
+        gw, gh = grid_dims(np, float(chip.num_tiles), chip.grid_aspect)
+        assert float(chip_f["grid_w"][i]) == float(gw)
+        assert float(chip_f["grid_h"][i]) == float(gh)
+        # area includes the NoC-width/torus scale + DRAM PHY term
+        assert float(chip_f["chip_area"][i]) == chip_area(chip)
+
+
+def test_homo_family_pins_interconnect_genes():
+    """The §4.3 homogeneous baseline stays on the stock interconnect: its
+    stratum pins the topology genes to the mesh/64B/1-channel defaults,
+    so the iso-area comparison never credits the baseline with a torus."""
+    from repro.core.dse.encoding import INTERCONNECT_GENE_DEFAULTS
+    area_fn = lambda g: chip_area(decode(g))
+    rng = np.random.default_rng(4)
+    g = sample_in_bracket(rng, 64, "homo", 200.0, area_fn)
+    for idx, v in INTERCONNECT_GENE_DEFAULTS.items():
+        assert np.all(g[:, idx] == v), idx
+    # hetero strata do explore the genes
+    gh = sample_in_bracket(rng, 256, "hetero_bls", 200.0, area_fn)
+    from repro.core.dse.encoding import IDX_TOPO
+    assert len(np.unique(gh[:, IDX_TOPO])) > 1
+
+
+def test_canonicalization_preserves_interconnect_genes():
+    """Interconnect genes are never don't-care on multi-type chips:
+    canonicalization must not collapse two designs that differ only in
+    topology (their metrics differ on the link tier)."""
+    from repro.core.dse.encoding import IDX_TOPO
+    from repro.core.dse.engine import canonical_genomes
+    rng = np.random.default_rng(5)
+    g = random_genomes(rng, 16)
+    g2 = g.copy()
+    g2[:, IDX_TOPO] = 1 - (g2[:, IDX_TOPO] % 2)
+    c, c2 = canonical_genomes(g), canonical_genomes(g2)
+    assert np.all(c[:, IDX_TOPO] != c2[:, IDX_TOPO])
+    # and the genes survive canonicalization verbatim
+    assert np.array_equal(c[:, IDX_TOPO], g[:, IDX_TOPO] % 2) or \
+        np.array_equal(c[:, IDX_TOPO], g[:, IDX_TOPO])

@@ -9,6 +9,7 @@ import sys
 import numpy as np
 import pytest
 
+from repro.core.dse.api import EngineConfig
 from repro.core.dse.batch_eval import (batch_evaluate, prepare_configs,
                                        prepare_workload)
 from repro.core.dse.encoding import (FIELDS_PER_TILE, GENOME_LEN,
@@ -197,7 +198,7 @@ def test_memo_lru_eviction_bounded_and_correct():
     first, and evicted genomes re-simulate to identical rows."""
     rng = np.random.default_rng(8)
     g = random_genomes(rng, 12)
-    eng = EvalEngine(["kan"], memo_max=8, batch=4)
+    eng = EvalEngine(["kan"], config=EngineConfig(memo_max=8, batch=4))
     assert eng.memo_max == 8
     first = eng.evaluate(g)
     assert len(eng._memo) <= 8
@@ -208,15 +209,16 @@ def test_memo_lru_eviction_bounded_and_correct():
     for k in ("latency", "energy", "tops_w", "area"):
         assert np.array_equal(first[k][:4], again[k]), k
     # hits refresh recency: a touched entry survives newer insertions
-    eng2 = EvalEngine(["kan"], memo_max=8, batch=4)
+    eng2 = EvalEngine(["kan"], config=EngineConfig(memo_max=8, batch=4))
     eng2.evaluate(g[:8])
     keep_key = b"latency:" + eng2._key(canonical_genomes(g[:1])[0])
     eng2.evaluate(g[:1])              # touch -> most recent
     eng2.evaluate(g[8:12])            # insert 4 more, evicting the LRU end
     assert keep_key in eng2._memo
     assert len(eng2._memo) <= 8
-    # memo_limit stays accepted as the pre-PR-5 alias
-    assert EvalEngine(["kan"], memo_limit=9, batch=4).memo_max == 9
+    # memo_limit stays accepted as the pre-PR-5 alias (it now warns)
+    with pytest.warns(DeprecationWarning):
+        assert EvalEngine(["kan"], memo_limit=9, batch=4).memo_max == 9
 
 
 def test_exact_backend_evaluate_matches_rescore():
@@ -224,7 +226,7 @@ def test_exact_backend_evaluate_matches_rescore():
     evaluate() bitwise identically to the exact rescore path, reports
     itself in meta, and memoizes like any other backend."""
     g = random_genomes(np.random.default_rng(9), 10)
-    eng = EvalEngine(WLS, backend="exact")
+    eng = EvalEngine(WLS, config=EngineConfig(backend="exact"))
     out = eng.evaluate(g)
     assert out["meta"]["backend"] == "exact"
     ref = EvalEngine(WLS).rescore(g)
@@ -241,7 +243,8 @@ def test_exact_backend_evaluate_matches_rescore():
         assert np.array_equal(tp[k], tp_ref[k]), k
     # the fused search kernel rejects the python per-candidate mapper
     with pytest.raises(ValueError):
-        EvalEngine(WLS, backend="exact", exact_mapper="python")
+        EvalEngine(WLS, config=EngineConfig(backend="exact",
+                                            exact_mapper="python"))
 
 
 def test_evaluate_accepts_precomputed_canonical():
@@ -260,7 +263,8 @@ def test_rescore_batched_mapper_matches_python_mapper():
     to the per-candidate map_graph + lower_plan pipeline."""
     g = random_genomes(np.random.default_rng(5), 6)
     rb = EvalEngine(["kan"]).rescore(g)
-    rp = EvalEngine(["kan"], exact_mapper="python").rescore(g)
+    rp = EvalEngine(["kan"],
+                    config=EngineConfig(exact_mapper="python")).rescore(g)
     for k in ("latency", "energy", "tops_w", "area"):
         assert np.array_equal(rb[k], rp[k]), k
     assert rb["meta"]["mapper"] == "batched"
@@ -278,7 +282,8 @@ def test_run_ga_fixed_seed_same_best_fitness():
                    brackets=(100.0, 200.0))
     cfg = GAConfig(population=10, generations=3, seed_top_k=6, early_stop=3)
     legacy = run_ga(sw, 200.0, cfg, seed=1,
-                    engine=EvalEngine(WLS, memoize=False, vectorized=False),
+                    engine=EvalEngine(WLS, config=EngineConfig(
+                        memoize=False, vectorized=False)),
                     prefilter=False)
     cached = run_ga(sw, 200.0, cfg, seed=1, engine=EvalEngine(WLS),
                     prefilter=True)
@@ -297,10 +302,11 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import numpy as np
 from repro.core.dse.encoding import random_genomes
+from repro.core.dse.api import EngineConfig
 from repro.core.dse.engine import EvalEngine
 g = random_genomes(np.random.default_rng(0), 16)
 plain = EvalEngine(["kan"]).evaluate(g)
-shard = EvalEngine(["kan"], shard=True)
+shard = EvalEngine(["kan"], config=EngineConfig(shard=True))
 assert shard._sharding is not None
 out = shard.evaluate(g)
 for k in plain:
@@ -329,7 +335,8 @@ def test_memo_max_applies_to_caller_supplied_store():
                                       TieredStore)
 
     st = MemoryLRUStore(max_entries=1000)
-    eng = EvalEngine(["kan"], memo_max=8, batch=4, store=st)
+    eng = EvalEngine(["kan"],
+                     config=EngineConfig(memo_max=8, batch=4, store=st))
     assert st.max_entries == 8 and eng.memo_max == 8
     g = random_genomes(np.random.default_rng(3), 12)
     eng.evaluate(g)
@@ -337,25 +344,28 @@ def test_memo_max_applies_to_caller_supplied_store():
 
     # the resize evicts eagerly when the store already holds more
     big = MemoryLRUStore(max_entries=1000)
-    warm = EvalEngine(["kan"], batch=4, store=big)   # no cap: untouched
+    warm = EvalEngine(["kan"],                       # no cap: untouched
+                      config=EngineConfig(batch=4, store=big))
     warm.evaluate(g)
     assert big.max_entries == 1000 and len(big) > 8
-    EvalEngine(["kan"], memo_max=8, batch=4, store=big)
+    EvalEngine(["kan"], config=EngineConfig(memo_max=8, batch=4,
+                                            store=big))
     assert big.max_entries == 8 and len(big) <= 8
 
     # tiered: the cap lands on the LRU front
     tiered = TieredStore(MemoryLRUStore(max_entries=500),
                          SqliteStore(":memory:"))
-    EvalEngine(["kan"], memo_max=16, batch=4, store=tiered)
+    EvalEngine(["kan"], config=EngineConfig(memo_max=16, batch=4,
+                                            store=tiered))
     assert tiered.front.max_entries == 16
 
     # no LRU tier to cap -> error, not a silent no-op
     with pytest.raises(ValueError, match="memo_max"):
-        EvalEngine(["kan"], memo_max=8, batch=4,
-                   store=SqliteStore(":memory:"))
+        EvalEngine(["kan"], config=EngineConfig(
+            memo_max=8, batch=4, store=SqliteStore(":memory:")))
     # the default cap is NOT "explicit": plain stores pass through
-    assert EvalEngine(["kan"], store=MemoryLRUStore(max_entries=777)
-                      ).store.max_entries == 777
+    assert EvalEngine(["kan"], config=EngineConfig(
+        store=MemoryLRUStore(max_entries=777))).store.max_entries == 777
 
 
 def test_export_import_memo_roundtrip():
@@ -364,7 +374,7 @@ def test_export_import_memo_roundtrip():
     and ``import_memo`` makes a cold engine serve them as pure hits,
     bitwise."""
     g = random_genomes(np.random.default_rng(4), 6)
-    eng = EvalEngine(["kan"], backend="exact")
+    eng = EvalEngine(["kan"], config=EngineConfig(backend="exact"))
     m = eng.evaluate(g)
     canon, rows = eng.export_memo()
     assert canon.shape[1:] == (GENOME_LEN,) and rows.shape[1:] == (3, 1)
@@ -380,7 +390,7 @@ def test_export_import_memo_roundtrip():
     c2, r2 = eng.export_memo()
     assert c2 is canon and r2 is rows
 
-    cold = EvalEngine(["kan"], backend="exact")
+    cold = EvalEngine(["kan"], config=EngineConfig(backend="exact"))
     assert cold.import_memo(canon, rows) == len(canon)
     served = cold.evaluate(g)
     assert served["meta"]["hits"] == len(g)
@@ -417,7 +427,7 @@ def _poison_simulate(eng, cell=(0, 0)):
 def test_nonfinite_default_raises_naming_the_genome():
     from repro.core.dse.engine import NonFiniteMetricsError
     g = random_genomes(np.random.default_rng(11), 5)
-    eng = EvalEngine(["kan"], backend="exact")
+    eng = EvalEngine(["kan"], config=EngineConfig(backend="exact"))
     _poison_simulate(eng)
     with pytest.raises(NonFiniteMetricsError) as ei:
         eng.evaluate(g)
@@ -426,7 +436,7 @@ def test_nonfinite_default_raises_naming_the_genome():
     assert err.canon.shape == (GENOME_LEN,)  # the culprit, canonical
     assert str(err.canon.tolist()) in str(err)
     # the poisoned batch never reached the memo: a retry is bitwise clean
-    clean = EvalEngine(["kan"], backend="exact").evaluate(g)
+    clean = EvalEngine(["kan"], config=EngineConfig(backend="exact")).evaluate(g)
     retried = eng.evaluate(g)
     for k in ("latency", "energy", "tops_w"):
         assert clean[k].tobytes() == retried[k].tobytes(), k
@@ -434,7 +444,8 @@ def test_nonfinite_default_raises_naming_the_genome():
 
 def test_nonfinite_skip_scores_minus_inf_and_never_memoizes():
     g = random_genomes(np.random.default_rng(11), 5)
-    eng = EvalEngine(["kan"], backend="exact", nonfinite="skip")
+    eng = EvalEngine(["kan"], config=EngineConfig(backend="exact",
+                                                  nonfinite="skip"))
     _poison_simulate(eng)
     res = eng.evaluate(g)
     assert res["meta"]["nonfinite"] == 1
@@ -445,15 +456,16 @@ def test_nonfinite_skip_scores_minus_inf_and_never_memoizes():
     # now un-poisoned — and the whole batch matches a clean engine
     again = eng.evaluate(g)
     assert again["meta"]["nonfinite"] == 0
-    clean = EvalEngine(["kan"], backend="exact").evaluate(g)
+    clean = EvalEngine(["kan"], config=EngineConfig(backend="exact")).evaluate(g)
     for k in ("latency", "energy", "tops_w"):
         assert clean[k].tobytes() == again[k].tobytes(), k
 
 
 def test_nonfinite_ctor_validation():
     with pytest.raises(ValueError, match="nonfinite"):
-        EvalEngine(["kan"], nonfinite="bogus")
+        EvalEngine(["kan"], config=EngineConfig(nonfinite="bogus"))
     # legitimate unmappable rows (inf, inf, 0) are NOT corruption: the
     # skip path leaves genuinely-infinite sentinel rows alone
-    eng = EvalEngine(["kan"], backend="exact", nonfinite="raise")
+    eng = EvalEngine(["kan"], config=EngineConfig(backend="exact",
+                                                  nonfinite="raise"))
     assert eng.nonfinite == "raise"

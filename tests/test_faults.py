@@ -13,6 +13,7 @@ import time
 import numpy as np
 import pytest
 
+from repro.core.dse.api import EngineConfig
 from repro.core.dse.encoding import random_genomes
 from repro.core.dse.engine import EvalEngine, NonFiniteMetricsError
 from repro.core.dse.faults import (FAULT_SITES, FaultInjector, FaultyStore,
@@ -118,12 +119,12 @@ def test_tiered_degrades_to_lru_only_under_back_faults(tmp_path):
 
 def test_engine_results_bitwise_equal_under_store_chaos(tmp_path):
     g = _genomes(8)
-    clean = EvalEngine(WLS, backend="exact").evaluate(g)
+    clean = EvalEngine(WLS, config=EngineConfig(backend="exact")).evaluate(g)
     inj = FaultInjector(seed=SEED, rates={"store_get": 0.4,
                                           "store_put": 0.4})
     back = FaultyStore(SqliteStore(str(tmp_path / "r.sqlite")), inj)
-    eng = EvalEngine(WLS, backend="exact",
-                     store=TieredStore(MemoryLRUStore(), back))
+    eng = EvalEngine(WLS, config=EngineConfig(
+        backend="exact", store=TieredStore(MemoryLRUStore(), back)))
     with pytest.warns(RuntimeWarning):
         chaotic = eng.evaluate(g)
         again = eng.evaluate(g)
@@ -138,9 +139,9 @@ def test_engine_results_bitwise_equal_under_store_chaos(tmp_path):
 
 def test_injected_engine_exception_is_retryable_and_clean_on_retry():
     g = _genomes(5)
-    clean = EvalEngine(WLS, backend="exact").evaluate(g)
+    clean = EvalEngine(WLS, config=EngineConfig(backend="exact")).evaluate(g)
     eng = inject_engine_faults(
-        EvalEngine(WLS, backend="exact"),
+        EvalEngine(WLS, config=EngineConfig(backend="exact")),
         FaultInjector(seed=SEED, at={"engine_exc": (0,)}))
     with pytest.raises(InjectedEngineError) as ei:
         eng.evaluate(g)
@@ -152,9 +153,9 @@ def test_injected_engine_exception_is_retryable_and_clean_on_retry():
 
 def test_injected_nan_raises_then_retries_bitwise_clean():
     g = _genomes(5)
-    clean = EvalEngine(WLS, backend="exact").evaluate(g)
+    clean = EvalEngine(WLS, config=EngineConfig(backend="exact")).evaluate(g)
     eng = inject_engine_faults(
-        EvalEngine(WLS, backend="exact"),
+        EvalEngine(WLS, config=EngineConfig(backend="exact")),
         FaultInjector(seed=SEED, at={"nan_metrics": (0,)}))
     with pytest.raises(NonFiniteMetricsError) as ei:
         eng.evaluate(g)
@@ -174,7 +175,7 @@ def _ga_setup():
                    early_stop=10_000)
     sweep = run_sweep(WLS, samples_per_stratum=4, seed=0,
                       brackets=(100.0, 200.0),
-                      engine=EvalEngine(WLS, backend="exact"))
+                      engine=EvalEngine(WLS, config=EngineConfig(backend="exact")))
     return cfg, sweep
 
 
@@ -186,12 +187,12 @@ def test_two_tenant_gas_bitwise_equal_under_service_chaos():
     cfg, sweep = _ga_setup()
     bracket = 200.0
     local = {s: run_ga(sweep, bracket, cfg, seed=s,
-                       engine=EvalEngine(WLS, backend="exact"))
+                       engine=EvalEngine(WLS, config=EngineConfig(backend="exact")))
              for s in (0, 1)}
 
     inj = FaultInjector(seed=SEED, at={"engine_exc": (1,),
                                        "nan_metrics": (3,)})
-    eng = inject_engine_faults(EvalEngine(WLS, backend="exact"), inj)
+    eng = inject_engine_faults(EvalEngine(WLS, config=EngineConfig(backend="exact")), inj)
     svc = DSEService(eng, max_batch=256, max_wait_ms=50.0).start()
     served, errs = {}, []
 
@@ -228,9 +229,9 @@ def test_tcp_drops_are_survived_bitwise():
     reconnect + idempotently retry to the same bytes a clean in-process
     evaluation returns."""
     g = _genomes(6)
-    clean = EvalEngine(WLS, backend="exact").evaluate(g)
+    clean = EvalEngine(WLS, config=EngineConfig(backend="exact")).evaluate(g)
     inj = FaultInjector(seed=SEED, at={"tcp_drop": (1, 3)})
-    svc = DSEService(EvalEngine(WLS, backend="exact"),
+    svc = DSEService(EvalEngine(WLS, config=EngineConfig(backend="exact")),
                      fault_injector=inj).start()
     host, port = svc.listen()
     cli = DSEClient(address=(host, port), retries=6, backoff_s=0.01,

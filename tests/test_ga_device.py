@@ -16,6 +16,7 @@ Pins the three contracts the device loop rides on:
 import numpy as np
 import pytest
 
+from repro.core.dse.api import EngineConfig
 from repro.core.dse.encoding import GENOME_LEN, genome_bounds, random_genomes
 from repro.core.dse.engine import EvalEngine, canonical_genomes
 from repro.core.dse.ga import GAConfig, run_ga, _fitness
@@ -64,8 +65,8 @@ def test_run_ga_device_engine_invariance():
     sw = _sweep()
     cfg = GAConfig(population=8, generations=2, seed_top_k=4, early_stop=30)
     fresh = run_ga(sw, 200.0, cfg, seed=3,
-                   engine=EvalEngine(WLS, backend="exact"))
-    warm_engine = EvalEngine(WLS, backend="exact")
+                   engine=EvalEngine(WLS, config=EngineConfig(backend="exact")))
+    warm_engine = EvalEngine(WLS, config=EngineConfig(backend="exact"))
     warm_engine.evaluate(sw.genomes)
     warm = run_ga(sw, 200.0, cfg, seed=3, engine=warm_engine)
     assert fresh.best_fitness == warm.best_fitness
@@ -75,7 +76,7 @@ def test_run_ga_device_engine_invariance():
 
 def _parity_check(genomes, workloads, bracket=200.0):
     e_homo = np.ones(len(workloads))  # any positive baseline works
-    eng = EvalEngine(workloads, backend="exact")
+    eng = EvalEngine(workloads, config=EngineConfig(backend="exact"))
     m_search = eng.evaluate(genomes)
     m_rescore = EvalEngine(workloads).rescore(genomes)
     f_search = fitness_device(m_search, e_homo, bracket)

@@ -137,3 +137,97 @@ def test_throughput_backends_match_oracle_full_suite():
     for wname in workload_names():
         chip, plan, r = _run_throughput(wname)
         _assert_throughput_parity(wname, chip, plan, r)
+
+
+# =============================================================================
+# link-fidelity tier (per-link NoC + per-channel DRAM, PR 9)
+# =============================================================================
+
+# the aggregate steady-state surface plus the two link-tier bounds
+LINK_PIPELINE_KEYS = PIPELINE_KEYS + ("ii_chan_bound_s", "ii_link_bound_s")
+
+
+def _link_chip():
+    """Topology-exercising reference chip: elongated torus grid, narrow
+    NoC links, two interleaved DRAM channels — chosen so the link tier's
+    extra bounds actually bite instead of hiding under the aggregate
+    bottleneck."""
+    import dataclasses
+    return dataclasses.replace(
+        hetero_bls(), name="heteroBLS-link", torus=True, grid_aspect=2.0,
+        dram_channels=2, noc_bytes_per_cycle=32.0)
+
+
+def _run_link(wname):
+    chip = _link_chip()
+    plan = compile_workload(build(wname), chip, mode="throughput")
+    return chip, plan, simulate(chip, plan, fidelity="link")
+
+
+@pytest.mark.parametrize("wname", GOLDEN_WORKLOADS)
+def test_golden_trace_link(wname, golden):
+    """Freeze the link-tier steady state (II + per-channel / per-link
+    bounds) for the topology-exercising reference runs."""
+    _, _, r = _run_link(wname)
+    assert "ii_chan_bound_s" in r.pipeline
+    assert "ii_link_bound_s" in r.pipeline
+    golden(f"{wname}_link", r.golden_dict())
+
+
+@pytest.mark.parametrize("wname", GOLDEN_WORKLOADS)
+def test_link_backends_match_oracle_on_golden_runs(wname):
+    """The link tier holds the same three-way backend agreement the
+    aggregate tier always had: batched executor AND fused
+    mapper+executor vs ChipSim, full link surface."""
+    chip, plan, r = _run_link(wname)
+    table = lower_plan(plan, chip.num_tiles)
+    res = simulate_plans([chip], [table], fidelity="link")
+    fused = map_and_simulate(prepared_workload(wname),
+                             stack_chip_configs([chip]),
+                             mode="throughput", fidelity="link")
+    assert bool(fused["ok"][0]), wname
+    for k in LINK_PIPELINE_KEYS:
+        assert float(res[k][0]) == pytest.approx(r.pipeline[k],
+                                                 rel=REL_TOL), (wname, k)
+        assert float(fused[k][0]) == pytest.approx(r.pipeline[k],
+                                                   rel=REL_TOL), (wname, k)
+
+
+@pytest.mark.parametrize("wname", GOLDEN_WORKLOADS)
+def test_link_ii_dominates_aggregate(wname):
+    """The link tier only *adds* occupancy lower bounds, so II(link) >=
+    II(aggregate); the aggregate bound keys and the latency/energy
+    surface keep their historical bits."""
+    chip = _link_chip()
+    plan = compile_workload(build(wname), chip, mode="throughput")
+    r_agg = simulate(chip, plan)
+    r_link = simulate(chip, plan, fidelity="link")
+    for k in ("ii_tile_bound_s", "ii_dram_bound_s", "ii_noc_bound_s"):
+        assert r_link.pipeline[k] == r_agg.pipeline[k], k
+    assert r_link.pipeline["ii_s"] >= r_agg.pipeline["ii_s"]
+    assert r_link.latency_s == r_agg.latency_s
+    assert r_link.energy_pj == r_agg.energy_pj
+
+
+def test_link_tier_population_parity():
+    """Population-level bitwise agreement between the fused link-tier
+    dispatch and the per-candidate oracle on random topology-bearing
+    genomes (the search-time fidelity is the rescore fidelity)."""
+    from repro.core.dse.encoding import decode, random_genomes
+    from repro.core.dse.engine import genomes_to_configs
+
+    rng = np.random.default_rng(9)
+    genomes = random_genomes(rng, 24)
+    cfgs = genomes_to_configs(genomes)
+    for wname in ("kan", "resnet50_int8"):
+        fused = map_and_simulate(prepared_workload(wname), cfgs,
+                                 mode="throughput", fidelity="link")
+        for i in np.flatnonzero(fused["ok"])[:6]:
+            chip = decode(genomes[i], f"lk{i}")
+            plan = compile_workload(build(wname), chip, mode="throughput")
+            r = simulate(chip, plan, fidelity="link")
+            assert float(fused["ii_s"][i]) == r.pipeline["ii_s"], (wname, i)
+            assert float(fused["ii_link_bound_s"][i]) == \
+                r.pipeline["ii_link_bound_s"], (wname, i)
+            assert float(fused["ii_chan_bound_s"][i]) == \
+                r.pipeline["ii_chan_bound_s"], (wname, i)

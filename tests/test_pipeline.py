@@ -24,6 +24,7 @@ import sys
 import numpy as np
 import pytest
 
+from repro.core.dse.api import EngineConfig
 from repro.core.dse.engine import EvalEngine, genome_areas
 from repro.core.dse.encoding import GENOME_LEN, random_genomes
 from repro.core.dse.ga import GAConfig, run_ga
@@ -44,7 +45,7 @@ def _sweep():
 
 
 def _exact():
-    return EvalEngine(WLS, backend="exact")
+    return EvalEngine(WLS, config=EngineConfig(backend="exact"))
 
 
 def _same(a, b) -> bool:
@@ -85,7 +86,7 @@ def test_fused_frontend_validation():
                on_generation=lambda **kw: None)
     with pytest.raises(ValueError, match="exact"):
         run_ga_fused(sw, 200.0, CFG, seed=0,
-                     engine=EvalEngine(WLS, backend="scan"))
+                     engine=EvalEngine(WLS, config=EngineConfig(backend="scan")))
     # a bracket with no homogeneous baseline returns None (run_ga
     # contract) — the baseline is cumulative over brackets, so only a
     # bracket BELOW every sampled homo design lacks one
@@ -198,8 +199,8 @@ sw = run_sweep(["kan"], samples_per_stratum=4, seed=0,
                brackets=(100.0, 200.0))
 cfg = GAConfig(population=16, generations=3, seed_top_k=8, early_stop=100)
 runs = [run_ga_fused(sw, 200.0, cfg, seed=4,
-                     engine=EvalEngine(["kan"], backend="exact",
-                                       shard=True),
+                     engine=EvalEngine(["kan"], config=EngineConfig(
+                         backend="exact", shard=True)),
                      islands=4, migrate_every=1, migrate_k=1)
         for _ in range(2)]
 a, b = (r.result for r in runs)
@@ -255,4 +256,4 @@ def test_run_pipeline_validation():
     with pytest.raises(ValueError, match="exact"):
         run_pipeline(WLS, seeds=(0,), brackets=(200.0,),
                      samples_per_stratum=2,
-                     engine=EvalEngine(WLS, backend="scan"))
+                     engine=EvalEngine(WLS, config=EngineConfig(backend="scan")))

@@ -87,3 +87,33 @@ def test_workload_graph_ai_scales_with_reuse(layers, dim):
                         preds=[prev] if prev is not None else ())
     assert g.total_macs == layers * dim ** 3
     assert g.arithmetic_intensity() > 0
+
+
+@given(st.floats(1e-6, 1.0), st.floats(1e-9, 1.0), st.floats(0.0, 1e9),
+       st.floats(1.0, 256.0), st.floats(0.0, 1.0),
+       st.lists(st.floats(0.0, 1e8), min_size=8, max_size=8),
+       st.lists(st.floats(0.0, 0.5), min_size=16, max_size=16),
+       st.integers(1, 8))
+@settings(**SETTINGS)
+def test_link_tier_ii_dominates_aggregate(makespan, tile_busy, dram_bytes,
+                                          dram_gbps, noc_busy, chan,
+                                          links, n_ch):
+    """``pipeline_bounds`` with the link-tier occupancy vectors can only
+    tighten the II: the aggregate bounds stay in the max, the channel and
+    link bounds are added — so II(link) >= II(aggregate) for *any*
+    occupancy split, and the shared aggregate keys are bitwise equal."""
+    from repro.core.simulator.costs import MAX_DRAM_CHANNELS, MAX_LINKS
+    chan_bytes = np.zeros(MAX_DRAM_CHANNELS)
+    chan_bytes[:len(chan)] = chan
+    link_busy = np.zeros(MAX_LINKS)
+    link_busy[:len(links)] = links
+    from repro.core.simulator.costs import pipeline_bounds
+    agg = pipeline_bounds(np, makespan, tile_busy, dram_bytes, dram_gbps,
+                          noc_busy)
+    link = pipeline_bounds(np, makespan, tile_busy, dram_bytes, dram_gbps,
+                           noc_busy, chan_bytes=chan_bytes,
+                           dram_channels=float(n_ch), link_busy_s=link_busy)
+    for k in ("ii_tile_bound_s", "ii_dram_bound_s", "ii_noc_bound_s"):
+        assert float(link[k]) == float(agg[k]), k
+    assert float(link["ii_s"]) >= float(agg["ii_s"])
+    assert float(link["ii_s"]) <= makespan * (1 + 1e-12)

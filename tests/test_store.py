@@ -7,6 +7,7 @@ import threading
 import numpy as np
 import pytest
 
+from repro.core.dse.api import EngineConfig
 from repro.core.dse.encoding import random_genomes
 from repro.core.dse.engine import EvalEngine
 from repro.core.dse.store import (COST_MODEL_VERSION, MemoryLRUStore,
@@ -228,15 +229,15 @@ def test_engine_store_served_results_bitwise(tmp_path):
     wls = ["kan"]
     fresh = EvalEngine(wls).evaluate(g)
 
-    cold = EvalEngine(wls, store=TieredStore(MemoryLRUStore(),
-                                             SqliteStore(path)))
+    cold = EvalEngine(wls, config=EngineConfig(
+        store=TieredStore(MemoryLRUStore(), SqliteStore(path))))
     first = cold.evaluate(g)
     assert first["meta"]["dispatches"] >= 1
 
     # a brand-new engine over the same file starts warm: zero dispatches,
     # bitwise-identical metrics
-    warm = EvalEngine(wls, store=TieredStore(MemoryLRUStore(),
-                                             SqliteStore(path)))
+    warm = EvalEngine(wls, config=EngineConfig(
+        store=TieredStore(MemoryLRUStore(), SqliteStore(path))))
     served = warm.evaluate(g)
     assert served["meta"]["dispatches"] == 0
     assert served["meta"]["hit_rate"] == 1.0
@@ -245,8 +246,7 @@ def test_engine_store_served_results_bitwise(tmp_path):
         assert fresh[k].tobytes() == served[k].tobytes(), k
     # a different engine context (other workload list) shares the file
     # but not the entries
-    other = EvalEngine(["resnet50_int8"],
-                       store=TieredStore(MemoryLRUStore(),
-                                         SqliteStore(path)))
+    other = EvalEngine(["resnet50_int8"], config=EngineConfig(
+        store=TieredStore(MemoryLRUStore(), SqliteStore(path))))
     res = other.evaluate(g[:4])
     assert res["meta"]["dispatches"] >= 1

@@ -14,6 +14,7 @@ from repro.core import compile_workload, hetero_bls, simulate
 from repro.core.compiler.batched_mapper import map_and_simulate
 from repro.core.compiler.pipeline import lower_plan
 from repro.core.compiler.schedule import SCHEDULE_MODES, emit_schedule
+from repro.core.dse.api import EngineConfig
 from repro.core.dse.encoding import random_genomes
 from repro.core.dse.engine import EvalEngine, prepared_workload
 from repro.core.dse.objective import serving_fitness
@@ -106,7 +107,7 @@ def test_chrome_trace_replays_batches_at_ii_offsets():
 # ------------------------------------------------------------------ engine
 def test_engine_mode_validation():
     with pytest.raises(ValueError, match="mode"):
-        EvalEngine([WORKLOAD], mode="warp-speed")
+        EvalEngine([WORKLOAD], config=EngineConfig(mode="warp-speed"))
     eng = EvalEngine([WORKLOAD])
     g = random_genomes(np.random.default_rng(0), 2)
     with pytest.raises(ValueError, match="mode"):
@@ -121,7 +122,8 @@ def test_engine_throughput_mode_scores_steady_state():
     the latency-mode makespan; meta reports the mode; the per-mode memo
     keys keep the two modes from cross-contaminating."""
     g = random_genomes(np.random.default_rng(1), 6)
-    eng = EvalEngine([WORKLOAD], mode="throughput")
+    eng = EvalEngine([WORKLOAD],
+                     config=EngineConfig(mode="throughput"))
     m_t = eng.evaluate(g)
     assert m_t["meta"]["mode"] == "throughput"
     m_l = eng.evaluate(g, mode="latency")
@@ -141,7 +143,8 @@ def test_engine_rescore_throughput_matches_oracle():
     throughput surface — the tier-1 slice of the 0-rel-err acceptance
     bar (the full 20-workload sweep runs under -m slow)."""
     g = random_genomes(np.random.default_rng(2), 4)
-    eng = EvalEngine([WORKLOAD], mode="throughput")
+    eng = EvalEngine([WORKLOAD],
+                     config=EngineConfig(mode="throughput"))
     rb = eng.rescore(g)
     ro = eng.rescore(g, oracle=True)
     assert rb["meta"]["mode"] == ro["meta"]["mode"] == "throughput"
