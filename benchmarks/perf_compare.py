@@ -31,7 +31,8 @@ import sys
 # (and mutate its config) just to diff two JSON files
 REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
 
-__all__ = ["compare", "render_markdown", "merged_trajectory"]
+__all__ = ["compare", "render_markdown", "merged_trajectory",
+           "missing_named_benchmarks"]
 
 
 def _load(filename: str):
@@ -76,6 +77,28 @@ def merged_trajectory(smoke: bool):
         merged["benchmarks"].update(data.get("benchmarks", {}))
     merged["files"] = [name for _, name, _ in hits]
     return merged
+
+
+def missing_named_benchmarks() -> list:
+    """Full-run ``BENCH_PR<N>.json`` files that CHANGES.md names but the
+    repo root does not contain.  A benchmark file named in the change
+    log and then never committed silently vanishes from the merged
+    baseline (the glob just doesn't see it), which is how PR 8's
+    trajectory went missing — so ``main`` warns loudly instead."""
+    changes = _load_text("CHANGES.md")
+    if changes is None:
+        return []
+    named = set(re.findall(r"BENCH_PR\d+\.json", changes))
+    return sorted(n for n in named
+                  if not os.path.exists(os.path.join(REPO_ROOT, n)))
+
+
+def _load_text(filename: str):
+    path = os.path.join(REPO_ROOT, filename)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return f.read()
 
 
 def compare(fresh: dict, baseline: dict) -> list:
@@ -129,6 +152,17 @@ def main() -> int:
               file=sys.stderr)
         return 1
     md = render_markdown(compare(fresh, baseline), fresh, baseline)
+    missing = missing_named_benchmarks()
+    if missing:
+        for name in missing:
+            print(f"perf_compare: WARNING: {name} is named in CHANGES.md "
+                  "but absent from the repo root — its benchmarks are "
+                  "MISSING from the committed baseline (regenerate via "
+                  "`python -m benchmarks.perf_micro` and commit the file)",
+                  file=sys.stderr)
+        md += ("\n> **WARNING**: missing committed benchmark file(s) "
+               f"named in CHANGES.md: {', '.join(missing)} — the baseline "
+               "above silently excludes them.\n")
     summary = os.environ.get("GITHUB_STEP_SUMMARY")
     if summary:
         with open(summary, "a") as f:

@@ -51,7 +51,15 @@
   dispatch — identical mapping/latency/energy asserted, ``II(link) >=
   II(aggregate)`` pinned, overhead reported against a fail-soft 3.5x
   ceiling (PR 9; ``--link-fidelity`` runs just this one and writes
-  ``BENCH_PR9.json``).
+  ``BENCH_PR9.json``);
+* coordinator dispatch-throughput scaling of the sharded worker cluster
+  (``serve.cluster.DSECluster`` over 1-3 ``DSEService`` workers with
+  emulated GIL-releasing worker service time — the CI box is
+  single-core, so real compute cannot scale), plus the recovery
+  overhead of a deterministic mid-stream ``worker_kill``, with bitwise
+  parity asserted across every configuration (PR 10 targets >= 1.5x
+  dispatch scaling at 3 workers; ``--cluster`` runs just this one and
+  writes ``BENCH_PR10.json``).
 
 Besides the per-run ``results/bench/perf_micro.json`` payload, ``run``
 writes the machine-readable cross-PR trajectory files ``BENCH_PR5.json``
@@ -815,6 +823,118 @@ def run_checkpoint_overhead(population: int = 256, generations: int = 4,
     }
 
 
+def run_cluster_scaling(workers=(1, 2, 3), batches: int = 12,
+                        population: int = 96,
+                        worker_ms_per_genome: float = 1.0,
+                        repeats: int = 3, kill_at_shard: int = 15,
+                        workloads=("kan",)) -> dict:
+    """Coordinator dispatch-throughput scaling across 1-N ``DSEService``
+    workers behind a ``DSECluster`` (PR 10), plus the recovery overhead
+    of losing a worker mid-stream.
+
+    The CI container is single-core, so local simulation cannot speed up
+    with more worker *processes or threads* — what this benchmark
+    isolates is the coordinator: can ``DSECluster`` keep N workers busy
+    concurrently?  Worker service time is therefore **emulated**: each
+    worker engine sleeps ``worker_ms_per_genome`` per dispatched genome
+    (a GIL-releasing stand-in for the compute a remote worker host would
+    perform off-box) on top of its real simulation.  With one worker
+    the emulated service times serialize; with N they overlap iff the
+    coordinator shards, dispatches, and collects concurrently — so
+    dispatch throughput (genomes/s over a stream of fresh micro-batches)
+    scales with N exactly as a multi-host deployment's would, and the
+    coordinator's own sharding/assembly cost is what bounds it.
+
+    Recovery: the same 3-worker stream re-runs with a deterministic
+    ``worker_kill`` mid-stream (the killed service stops for real); the
+    wall-clock delta over the unfaulted 3-worker run is the recovery
+    overhead.  Bitwise parity of every returned metric row across ALL
+    configurations (1w / Nw / Nw-faulted) is asserted untimed —
+    worker loss must never change the study's bytes."""
+    from repro.core.dse.faults import FaultInjector
+    from repro.serve.cluster import DSECluster
+    from repro.serve.dse_service import DSEService
+
+    workloads = list(workloads)
+    n_workers = sorted(set(int(w) for w in workers))
+    rng = np.random.default_rng(42)
+    stream = [random_genomes(rng, population) for _ in range(batches)]
+
+    def _laggy(engine):
+        inner = engine._simulate
+
+        def _simulate(cfgs, n, genomes=None, mode=None):
+            time.sleep(worker_ms_per_genome * 1e-3 * n)
+            return inner(cfgs, n, genomes=genomes, mode=mode)
+
+        engine._simulate = _simulate
+        return engine
+
+    def run_once(n: int, injector=None):
+        svcs = [DSEService(_laggy(EvalEngine(workloads)), max_batch=512,
+                           max_wait_ms=2.0, worker_id=f"bench-w{i}").start()
+                for i in range(n)]
+        cluster = DSECluster(svcs, fault_injector=injector, backoff_s=0.01)
+        try:
+            cluster.reserve_shapes(population)   # compile untimed
+            t0 = time.perf_counter()
+            rows = [cluster.evaluate(g) for g in stream]
+            wall = time.perf_counter() - t0
+            lat = np.concatenate([r["latency"] for r in rows])
+            return wall, lat.tobytes(), cluster.cluster_stats.snapshot()
+        finally:
+            cluster.close()
+            for s in svcs:
+                s.stop(drain=False)
+
+    # untimed compile warm (the in-process JIT cache is shared) + parity ref
+    _, ref_bytes, _ = run_once(1)
+
+    walls: dict = {}
+    parity = True
+    for n in n_workers:
+        times = []
+        for _ in range(repeats):
+            wall, got, _ = run_once(n)
+            parity = parity and (got == ref_bytes)
+            times.append(wall)
+        walls[str(n)] = median_s(times)
+
+    # recovery: kill one of 3 workers mid-stream (shard counter is
+    # deterministic: 3 shards form per batch until the kill)
+    n_rec = max(n_workers)
+    rec_times, rec_stats = [], None
+    for _ in range(repeats):
+        inj = FaultInjector(seed=0, at={"worker_kill": (kill_at_shard,)})
+        wall, got, rec_stats = run_once(n_rec, injector=inj)
+        parity = parity and (got == ref_bytes)
+        rec_times.append(wall)
+    rec_wall = median_s(rec_times)
+
+    assert parity, "cluster-served metrics diverged across worker counts"
+    genomes_total = batches * population
+    base = walls[str(n_workers[0])]
+    top = walls[str(max(n_workers))]
+    return {
+        "workers": n_workers,
+        "batches": batches,
+        "population": population,
+        "worker_ms_per_genome": worker_ms_per_genome,
+        "emulated_workers": True,    # single-core CI: see docstring
+        "workloads": workloads,
+        "wall_s": walls,
+        "throughput_genomes_s": {k: genomes_total / max(v, 1e-12)
+                                 for k, v in walls.items()},
+        "scaling_max_workers": base / max(top, 1e-12),
+        "recovery_wall_s": rec_wall,
+        "recovery_overhead_frac": rec_wall / max(top, 1e-12) - 1.0,
+        "recovery_stats": rec_stats,
+        "target_scaling": 1.5,
+        "meets_target": base / max(top, 1e-12) >= 1.5,
+        "bitwise_parity": True,      # asserted above
+    }
+
+
 def _bench_entry(median: float, baseline_median: float, **extra) -> dict:
     """One trajectory-file benchmark record: median seconds + speedup."""
     return {"median_s": median, "baseline_median_s": baseline_median,
@@ -982,6 +1102,42 @@ def write_bench_pr8(payload: dict, smoke: bool) -> str:
         "BENCH_PR8_smoke.json" if smoke else "BENCH_PR8.json", bench)
 
 
+def write_bench_pr10(payload: dict, smoke: bool) -> str:
+    """Distill the cluster-scaling benchmark into the PR-10 trajectory
+    file ``BENCH_PR10.json`` at the repo root (``perf_compare`` keeps
+    merging the earlier ``BENCH_PR*.json`` files for the benchmarks this
+    one doesn't carry).  Smoke runs write the gitignored
+    ``BENCH_PR10_smoke.json`` instead."""
+    cs = payload["cluster_scaling"]
+    top = str(max(cs["workers"]))
+    bench = {
+        "pr": 10,
+        "smoke": smoke,
+        "generated_unix": time.time(),
+        "benchmarks": {
+            # baseline = the 1-worker cluster on the identical stream;
+            # speedup IS the dispatch-throughput scaling at max workers
+            # (worker service time emulated: single-core CI, see
+            # run_cluster_scaling)
+            "run_cluster_scaling": _bench_entry(
+                cs["wall_s"][top], cs["wall_s"][str(cs["workers"][0])],
+                workers=cs["workers"],
+                batches=cs["batches"],
+                population=cs["population"],
+                workloads=cs["workloads"],
+                worker_ms_per_genome=cs["worker_ms_per_genome"],
+                emulated_workers=cs["emulated_workers"],
+                throughput_genomes_s=cs["throughput_genomes_s"],
+                recovery_overhead_frac=cs["recovery_overhead_frac"],
+                target_scaling=cs["target_scaling"],
+                meets_target=cs["meets_target"],
+                bitwise_parity=cs["bitwise_parity"]),
+        },
+    }
+    return save_repo_json(
+        "BENCH_PR10_smoke.json" if smoke else "BENCH_PR10.json", bench)
+
+
 def write_bench_pr9(payload: dict, smoke: bool) -> str:
     """Distill the link-fidelity benchmark into the PR-9 trajectory file
     ``BENCH_PR9.json`` at the repo root (``perf_compare`` keeps merging
@@ -1042,12 +1198,15 @@ def run(smoke: bool = False) -> dict:
             # informational: per-stage durability cost + replay win
             "checkpoint": run_checkpoint_overhead(
                 population=128, generations=3, repeats=2),
+            "cluster_scaling": run_cluster_scaling(
+                batches=6, population=48, repeats=2),
         }
         write_bench_pr5(payload, smoke=True)
         write_bench_pr6(payload, smoke=True)
         write_bench_pr7(payload, smoke=True)
         write_bench_pr8(payload, smoke=True)
         write_bench_pr9(payload, smoke=True)
+        write_bench_pr10(payload, smoke=True)
         save_json("perf_micro_smoke", payload)
         return payload
 
@@ -1087,6 +1246,7 @@ def run(smoke: bool = False) -> dict:
         "service_coalescing": run_service_coalescing(),
         "pipeline": run_pipeline_speedup(),
         "checkpoint": run_checkpoint_overhead(),
+        "cluster_scaling": run_cluster_scaling(),
     }
     save_json("perf_micro", payload)
     write_bench_pr5(payload, smoke=False)
@@ -1094,6 +1254,7 @@ def run(smoke: bool = False) -> dict:
     write_bench_pr7(payload, smoke=False)
     write_bench_pr8(payload, smoke=False)
     write_bench_pr9(payload, smoke=False)
+    write_bench_pr10(payload, smoke=False)
     return payload
 
 
@@ -1158,6 +1319,16 @@ def _csv_rows(p: dict, smoke: bool = False) -> list:
             f"replay={cp['replay_speedup']:.1f}x_faster "
             f"pop={cp['population']} "
             f"parity={'ok' if cp['bitwise_parity'] else 'BROKEN'}"))
+    if "cluster_scaling" in p:
+        cs = p["cluster_scaling"]
+        top = str(max(cs["workers"]))
+        rows.append(csv_row(
+            "perf_cluster_scaling", cs["wall_s"][top],
+            f"dispatch_scaling_{top}w={cs['scaling_max_workers']:.2f}x "
+            f"recovery_overhead={100 * cs['recovery_overhead_frac']:+.1f}% "
+            f"pop={cs['population']}x{cs['batches']} "
+            f"parity={'ok' if cs['bitwise_parity'] else 'BROKEN'} "
+            f"target_1p5x={'met' if cs['meets_target'] else 'MISSED'}"))
     if smoke:
         return rows
     ga = p["ga_engine"]
@@ -1197,7 +1368,42 @@ if __name__ == "__main__":
                     help="run only the fused-pipeline benchmark and write "
                          "BENCH_PR7.json (full-suite benchmarks stay "
                          "carried by the earlier BENCH_PR*.json files)")
+    ap.add_argument("--checkpoint", action="store_true",
+                    help="run only the checkpoint-overhead benchmark and "
+                         "write BENCH_PR8.json (full-suite benchmarks stay "
+                         "carried by the earlier BENCH_PR*.json files)")
+    ap.add_argument("--cluster", action="store_true",
+                    help="run only the cluster-scaling benchmark and write "
+                         "BENCH_PR10.json (full-suite benchmarks stay "
+                         "carried by the earlier BENCH_PR*.json files); "
+                         "exit 1 below the 1.5x 3-worker scaling floor")
     args = ap.parse_args()
+    if args.checkpoint:
+        payload = {"checkpoint": run_checkpoint_overhead()}
+        write_bench_pr8(payload, smoke=False)
+        save_json("perf_checkpoint", payload)
+        cp = payload["checkpoint"]
+        print(csv_row(
+            "perf_checkpoint_overhead", cp["checkpointed_median_s"],
+            f"vs_plain_pipeline={100 * cp['overhead_frac']:+.1f}% "
+            f"replay={cp['replay_speedup']:.1f}x_faster "
+            f"pop={cp['population']} "
+            f"parity={'ok' if cp['bitwise_parity'] else 'BROKEN'}"))
+        sys.exit(0 if cp["bitwise_parity"] else 1)
+    if args.cluster:
+        payload = {"cluster_scaling": run_cluster_scaling()}
+        write_bench_pr10(payload, smoke=False)
+        save_json("perf_cluster", payload)
+        cs = payload["cluster_scaling"]
+        top = str(max(cs["workers"]))
+        print(csv_row(
+            "perf_cluster_scaling", cs["wall_s"][top],
+            f"dispatch_scaling_{top}w={cs['scaling_max_workers']:.2f}x "
+            f"recovery_overhead={100 * cs['recovery_overhead_frac']:+.1f}% "
+            f"pop={cs['population']}x{cs['batches']} "
+            f"parity={'ok' if cs['bitwise_parity'] else 'BROKEN'} "
+            f"target_1p5x={'met' if cs['meets_target'] else 'MISSED'}"))
+        sys.exit(0 if cs["meets_target"] and cs["bitwise_parity"] else 1)
     if args.link_fidelity:
         payload = {"link_fidelity": run_link_fidelity_overhead()}
         write_bench_pr9(payload, smoke=False)
@@ -1277,5 +1483,11 @@ if __name__ == "__main__":
         else:
             print(f"perf-smoke: fused-pipeline speedup {pp_spd:.2f}x "
                   f"(floor {pp_floor:.1f}x)")
+        cs = payload["cluster_scaling"]
+        # informational only: smoke-sized runs on a contended CI box are
+        # too noisy to gate — the 1.5x floor is enforced by --cluster
+        print(f"perf-smoke: cluster dispatch scaling "
+              f"{cs['scaling_max_workers']:.2f}x at {max(cs['workers'])} "
+              f"workers (1.5x floor gated by --cluster)")
         if failed:
             sys.exit(1)

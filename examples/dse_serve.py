@@ -11,10 +11,17 @@ run — the fused metrics are batch-composition independent, so the
 coalescing is fidelity-free.
 
   PYTHONPATH=src python examples/dse_serve.py [--samples 8] [--budget 200]
-      [--store results.sqlite] [--tcp]
+      [--store results.sqlite] [--tcp] [--workers 3] [--kill-after 10]
 
 Rerun with ``--store`` pointing at the same file to watch the warm
 persistent store answer most of the work without touching the engine.
+
+With ``--workers N`` (N > 1) the GA tenants refine through a sharded
+``repro.serve.cluster.DSECluster`` over N worker services instead of
+one; add ``--kill-after K`` to stop one worker for real while the Kth
+shard forms and watch the survivors absorb its load — the results are
+bitwise identical either way (that invariant is pinned by the ``-m
+chaos`` suite, ``tests/test_cluster.py``).
 """
 import argparse
 import threading
@@ -45,7 +52,15 @@ def main():
                     help="tenants connect over the JSON-lines TCP front "
                          "instead of in-process (same bytes either way)")
     ap.add_argument("--max-wait-ms", type=float, default=50.0)
+    ap.add_argument("--workers", type=int, default=1, metavar="N",
+                    help="refine through a DSECluster over N worker "
+                         "services (default: one plain service)")
+    ap.add_argument("--kill-after", type=int, default=None, metavar="K",
+                    help="chaos demo: kill one worker while the Kth "
+                         "cluster shard forms (requires --workers > 1)")
     args = ap.parse_args()
+    if args.kill_after is not None and args.workers < 2:
+        ap.error("--kill-after needs --workers > 1")
 
     store = (TieredStore(MemoryLRUStore(), SqliteStore(args.store))
              if args.store else None)
@@ -67,13 +82,37 @@ def main():
         else:
             client = lambda: DSEClient(service=service)      # noqa: E731
 
-        print(f"\n[2/4] two GA tenants refine {args.budget:.0f} mm^2 "
-              f"concurrently through the service ...")
+        cluster, workers = None, []
+        if args.workers > 1:
+            from repro.core.dse.faults import FaultInjector
+            from repro.serve.cluster import DSECluster
+            inj = None
+            if args.kill_after is not None:
+                inj = FaultInjector(seed=0,
+                                    at={"worker_kill": (args.kill_after,)})
+            workers = [DSEService(
+                EvalEngine(args.workloads,
+                           config=EngineConfig(backend="exact")),
+                max_batch=256, max_wait_ms=args.max_wait_ms,
+                worker_id=f"demo-w{i}").start()
+                for i in range(args.workers)]
+            cluster = DSECluster(workers, fault_injector=inj)
+            kill = (f", killing one worker at shard {args.kill_after}"
+                    if inj is not None else "")
+            print(f"\n[2/4] two GA tenants refine {args.budget:.0f} mm^2 "
+                  f"through a {args.workers}-worker cluster{kill} ...")
+        else:
+            print(f"\n[2/4] two GA tenants refine {args.budget:.0f} mm^2 "
+                  f"concurrently through the service ...")
         cfg = GAConfig(population=24, generations=8, seed_top_k=16,
                        early_stop=10_000)
         results = {}
 
         def tenant(seed):
+            if cluster is not None:
+                results[seed] = run_ga(sw, args.budget, cfg, seed=seed,
+                                       engine=cluster)
+                return
             cl = client()
             results[seed] = run_ga(sw, args.budget, cfg, seed=seed,
                                    engine=cl)
@@ -88,6 +127,17 @@ def main():
             chip = decode(ga.best_genome)
             print(f"      tenant seed={seed}: fitness {ga.best_fitness:+.3f}"
                   f" ({len(chip.tiles)} tile types)")
+        if cluster is not None:
+            cs = cluster.cluster_stats
+            print(f"      cluster: {cs.shards} shards / {cs.dispatches} "
+                  f"dispatches, {cs.retried_shards} retried, "
+                  f"{cs.worker_failures} worker failures")
+            for m in cluster.membership():
+                print(f"        {m['name']}: {m['status']} "
+                      f"(failures={m['failures']})")
+            cluster.close()
+            for w in workers:
+                w.stop(drain=False)
 
         print("\n[3/4] streamed server-side search (live Pareto front) ...")
         fit = sw.fitness(cfg.alpha)

@@ -19,7 +19,20 @@ Sites (one counter each):
 * ``engine_exc`` — ``EvalEngine._simulate`` raises (exercises the
   service failing one batch without killing the batcher loop);
 * ``nan_metrics`` — ``_simulate`` returns a NaN row (exercises the
-  engine's non-finite guard).
+  engine's non-finite guard);
+* ``worker_kill`` — a ``DSECluster`` shard dispatch kills its target
+  worker outright (the service stops, no drain) before the call lands
+  (exercises ejection + shard failover onto survivors);
+* ``heartbeat_drop`` — a cluster ``heartbeat()`` probe fails
+  (exercises consecutive-failure ejection and backoff-gated rejoin);
+* ``shard_timeout`` — a cluster shard dispatch is declared lost on its
+  first attempt (exercises the retry-on-surviving-workers path without
+  waiting out a real timeout).
+
+The three cluster sites are consulted only from single-threaded call
+sites (the coordinator's shard-assignment loop and the heartbeat
+prober), so their counters advance deterministically even though shard
+execution itself is concurrent.
 
 Faults can be scheduled two ways, combinable per site:
 
@@ -51,7 +64,8 @@ __all__ = ["FAULT_SITES", "InjectedFault", "InjectedStoreError",
            "inject_engine_faults", "fault_seed_from_env"]
 
 FAULT_SITES = ("store_get", "store_put", "sqlite_lock", "tcp_drop",
-               "engine_exc", "nan_metrics")
+               "engine_exc", "nan_metrics", "worker_kill",
+               "heartbeat_drop", "shard_timeout")
 
 
 class InjectedFault(RuntimeError):

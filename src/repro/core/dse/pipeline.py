@@ -177,7 +177,8 @@ def run_pipeline(workloads: Sequence[str], seeds: Sequence[int] = (0, 1, 2),
                  migrate_k: int = 2, memo_capacity: int = 1 << 15,
                  verbose: bool = False,
                  on_stage: Optional[Callable[[Dict[str, Any]], None]] = None,
-                 checkpoint: Optional[str] = None
+                 checkpoint: Optional[str] = None,
+                 cluster=None
                  ) -> PipelineResult:
     """Run the full multi-seed pipeline (see module docstring).
 
@@ -215,6 +216,20 @@ def run_pipeline(workloads: Sequence[str], seeds: Sequence[int] = (0, 1, 2),
     and must not mutate its arguments.  A checkpointed stage's record
     is durable *before* its event fires, so an ``on_stage`` callback
     that raises (or a kill while it runs) never loses the stage.
+
+    ``cluster=<serve.cluster.DSECluster>`` scores the Stage-1 sweeps
+    through a worker cluster instead of the local engine: shard losses
+    fail over to surviving workers inside the cluster, and the sweep's
+    metric rows are then replayed into the local engine's store
+    (``_import_sweep`` — float64 round-trips bitwise over the wire), so
+    the fused refinements proceed from exactly the warm store an
+    all-local run would have.  The study result is bitwise equal with
+    or without a cluster, so ``checkpoint=`` composes freely: a
+    coordinator crash resumes from the checkpoint, a worker crash never
+    loses a stage (the cluster absorbs it), and a checkpoint written
+    by a clustered run resumes on a local one (the run digest is
+    identical).  The cluster must serve the same engine context as
+    ``engine`` (enforced via ``context_key``).
     """
     cfg = cfg or GAConfig()
     ck = PipelineCheckpoint(checkpoint) if checkpoint is not None else None
@@ -230,6 +245,13 @@ def run_pipeline(workloads: Sequence[str], seeds: Sequence[int] = (0, 1, 2),
     if engine.backend != "exact":
         raise ValueError("run_pipeline requires backend='exact'; got "
                          f"{engine.backend!r}")
+    if cluster is not None:
+        cluster.check_workloads(workloads, calib)
+        if cluster.context_key() != engine.context_key():
+            raise ValueError(
+                "cluster workers serve a different engine context than the "
+                "local pipeline engine — sweep rows would not replay "
+                "bitwise into its store")
     if ck is not None:
         ck.open(run_digest(engine, seeds, brackets, samples_per_stratum,
                            cfg, islands, migrate_every, migrate_k))
@@ -260,7 +282,12 @@ def run_pipeline(workloads: Sequence[str], seeds: Sequence[int] = (0, 1, 2),
             t0 = time.perf_counter()
             swp = run_sweep(workloads, samples_per_stratum, seed=s,
                             calib=calib, brackets=brackets, verbose=verbose,
-                            engine=engine)
+                            engine=engine if cluster is None else cluster)
+            if cluster is not None:
+                # the workers computed the rows; replay them into the
+                # local engine's store so the fused refinements hit the
+                # same warm store an all-local sweep would have left
+                _import_sweep(engine, swp)
             dt = time.perf_counter() - t0
             secs["sweep"] += dt
             sweeps[s] = swp

@@ -215,8 +215,11 @@ class DSEService:
 
     def __init__(self, engine: EvalEngine, max_batch: int = 1024,
                  max_wait_ms: float = 10.0, max_queue: int = 100_000,
-                 fault_injector=None):
+                 fault_injector=None, worker_id: Optional[str] = None):
         self.engine = engine
+        # stable identity for cluster membership (the ``membership`` wire
+        # op); defaults to a per-instance tag
+        self.worker_id = worker_id or f"dse-{id(self) & 0xffffff:x}"
         self.max_batch = max(int(max_batch), 1)
         self.max_wait = max_wait_ms / 1e3
         self.max_queue = max(int(max_queue), 0)   # 0 = unbounded
@@ -335,7 +338,7 @@ class DSEService:
             status = "stopping"
         else:
             status = "ok"
-        return {"status": status,
+        return {"status": status, "worker_id": self.worker_id,
                 "queue_depth": self._queue.qsize() if self._queue else 0,
                 "max_queue": self.max_queue,
                 "inflight": len(self._inflight),
@@ -663,7 +666,8 @@ class DSEService:
     # ------------------------------------------------------------ TCP front
     def _hello(self) -> Dict[str, Any]:
         eng = self.engine
-        return {"ok": True, "workloads": eng.workloads, "mode": eng.mode,
+        return {"ok": True, "worker_id": self.worker_id,
+                "workloads": eng.workloads, "mode": eng.mode,
                 "backend": eng.backend, "fidelity": eng.fidelity,
                 "aggressive_int4": eng.aggressive_int4,
                 "enable_fusion": eng.enable_fusion,
@@ -709,6 +713,26 @@ class DSEService:
                               **{k: res[k].tolist()
                                  for k in ("latency", "energy", "tops_w",
                                            "area")}})
+                    elif op == "shard":
+                        # cluster shard dispatch: the genomes arrive
+                        # already canonical (fixpoints of
+                        # canonical_genomes), so they are their own
+                        # canonical forms — no area/keep handling, the
+                        # coordinator owns both
+                        g = np.asarray(req["genomes"], np.int64)
+                        dl = req.get("deadline_s")
+                        res = await self.evaluate(
+                            g, mode=req.get("mode"), canonical=g,
+                            deadline_s=None if dl is None else float(dl))
+                        send({"ok": True, "worker_id": self.worker_id,
+                              "meta": res["meta"],
+                              **{k: res[k].tolist()
+                                 for k in ("latency", "energy",
+                                           "tops_w")}})
+                    elif op == "membership":
+                        send({"ok": True, "worker_id": self.worker_id,
+                              "context": self.engine.context_key().hex(),
+                              **self.health()})
                     elif op == "rescore":
                         g = np.asarray(req["genomes"], np.int64)
                         fn = functools.partial(
@@ -816,7 +840,8 @@ class DSEClient:
                  address: Optional[tuple] = None,
                  calib: CalibrationTable = DEFAULT_CALIB,
                  timeout: float = 600.0, retries: int = 4,
-                 backoff_s: float = 0.1, backoff_max_s: float = 2.0):
+                 backoff_s: float = 0.1, backoff_max_s: float = 2.0,
+                 deadline_s: Optional[float] = None):
         if (service is None) == (address is None):
             raise ValueError("pass exactly one of service= or address=")
         self._service = service
@@ -825,6 +850,10 @@ class DSEClient:
         self.retries = max(int(retries), 0)
         self.backoff_s = float(backoff_s)
         self.backoff_max_s = float(backoff_max_s)
+        # per-request wall budget: bounds the service-side wait AND the
+        # client's own reconnect/backoff loop, so a dead service costs at
+        # most deadline_s, not retries x backoff x timeout
+        self.deadline_s = None if deadline_s is None else float(deadline_s)
         self._sock = None
         self._io = None
         self._context: Optional[str] = None   # pinned on first connect
@@ -904,19 +933,36 @@ class DSEClient:
             raise ConnectionError("DSE service closed the connection")
         return json.loads(line)
 
-    def _call(self, req: Dict[str, Any]) -> Dict[str, Any]:
+    def _call(self, req: Dict[str, Any],
+              deadline: Optional[float] = None) -> Dict[str, Any]:
         """Single-reply exchange with reconnect-and-retry.  The request
         id assigned here is reused verbatim on every retry, so a resend
         after an ambiguous failure (sent, connection died before the
         reply) is idempotent end to end — evaluation is
-        content-addressed, so the server answers from its store."""
+        content-addressed, so the server answers from its store.
+
+        With ``deadline_s`` set, the retry loop is deadline-aware: a
+        reconnect storm never spends longer than the request's remaining
+        budget (each backoff is checked against it first), and the
+        failure surfaces as ``DeadlineExceededError`` — the caller set a
+        budget and the budget ran out — instead of a generic
+        ``ConnectionError``."""
         req.setdefault("rid", f"c{id(self) & 0xffffff:x}-"
                               f"{next(self._req_ids)}")
+        if deadline is None and self.deadline_s is not None:
+            deadline = time.monotonic() + self.deadline_s
         delay = self.backoff_s
         last: Optional[BaseException] = None
         for attempt in range(self.retries + 1):
             if attempt:
-                time.sleep(delay + random.uniform(0.0, delay / 2))
+                sleep_s = delay + random.uniform(0.0, delay / 2)
+                if deadline is not None and \
+                        deadline - time.monotonic() <= sleep_s:
+                    raise DeadlineExceededError(
+                        f"request deadline exhausted after {attempt} "
+                        f"attempt(s): the next {sleep_s:.2f}s backoff "
+                        "exceeds the remaining budget") from last
+                time.sleep(sleep_s)
                 delay = min(delay * 2, self.backoff_max_s)
             try:
                 with self._lock:
@@ -927,6 +973,10 @@ class DSEClient:
                 with self._lock:
                     self._drop()
                 last = exc
+                if deadline is not None and time.monotonic() >= deadline:
+                    raise DeadlineExceededError(
+                        "connection lost and the request deadline has "
+                        "elapsed") from exc
                 continue
             if out.get("ok", False):
                 return out
@@ -943,18 +993,33 @@ class DSEClient:
 
     def _evaluate_remote(self, genomes: np.ndarray, mode: Optional[str],
                          canonical: Optional[np.ndarray]) -> Dict[str, Any]:
+        deadline = None if self.deadline_s is None else \
+            time.monotonic() + self.deadline_s
         if self._service is not None:
             delay = self.backoff_s
+            last: Optional[BaseException] = None
             for attempt in range(self.retries + 1):
                 if attempt:
-                    time.sleep(delay + random.uniform(0.0, delay / 2))
+                    sleep_s = delay + random.uniform(0.0, delay / 2)
+                    if deadline is not None and \
+                            deadline - time.monotonic() <= sleep_s:
+                        raise DeadlineExceededError(
+                            f"request deadline exhausted after {attempt} "
+                            "attempt(s)") from last
+                    time.sleep(sleep_s)
                     delay = min(delay * 2, self.backoff_max_s)
+                if self._service._loop is None:
+                    raise ConnectionError("DSE service is stopped")
+                remaining = None if deadline is None else \
+                    max(deadline - time.monotonic(), 0.0)
                 fut = asyncio.run_coroutine_threadsafe(
-                    self._service.evaluate(genomes, mode, canonical),
+                    self._service.evaluate(genomes, mode, canonical,
+                                           deadline_s=remaining),
                     self._service._loop)
                 try:
                     return fut.result()
                 except Exception as exc:    # noqa: BLE001 - maybe retryable
+                    last = exc
                     if not getattr(exc, "retryable", False) or \
                             attempt >= self.retries:
                         raise
@@ -962,7 +1027,44 @@ class DSEClient:
         req = {"op": "evaluate", "genomes": genomes.tolist(), "mode": mode}
         if canonical is not None:
             req["canonical"] = canonical.tolist()
-        return self._remote_metrics(self._call(req))
+        if self.deadline_s is not None:
+            req["deadline_s"] = self.deadline_s
+        return self._remote_metrics(self._call(req, deadline=deadline))
+
+    # ------------------------------------------------------- cluster verbs
+    def evaluate_shard(self, canonical: np.ndarray,
+                       mode: Optional[str] = None) -> Dict[str, Any]:
+        """Raw shard dispatch for ``serve.cluster.DSECluster``: the
+        genomes arrive already canonical (fixpoints of
+        ``canonical_genomes``), flow through the worker's coalescing
+        queue, and come back as bare metric arrays — no client-side
+        prefilter, no area recompute; the coordinator owns both.
+        Content-addressed like everything else, so a shard re-dispatched
+        after a failover or a hedge is a store hit, never a second
+        simulation."""
+        canon = np.asarray(canonical, np.int64).reshape(-1, GENOME_LEN)
+        if self._service is not None:
+            res = self._evaluate_remote(canon, mode, canon)
+        else:
+            req = {"op": "shard", "genomes": canon.tolist(), "mode": mode}
+            if self.deadline_s is not None:
+                req["deadline_s"] = self.deadline_s
+            out = self._call(req)
+            res = {k: np.asarray(out[k], np.float64)
+                   for k in ("latency", "energy", "tops_w")}
+        return {k: res[k] for k in ("latency", "energy", "tops_w")}
+
+    def membership(self) -> Dict[str, Any]:
+        """Worker identity + liveness (the ``membership`` wire op):
+        worker_id, engine context digest, and the ``health()``
+        snapshot."""
+        if self._service is not None:
+            return {"worker_id": self._service.worker_id,
+                    "context": self._service.engine.context_key().hex(),
+                    **self._service.health()}
+        out = self._call({"op": "membership"})
+        out.pop("ok", None)
+        return out
 
     # ------------------------------------------------------ engine surface
     def check_workloads(self, workloads: Sequence[str],

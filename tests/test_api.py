@@ -1,8 +1,9 @@
 """The unified engine/evaluator API (PR 9): ``EngineConfig`` as the one
 knob surface, the ``Evaluator`` protocol conformance suite shared by
 every scoring surface (local ``EvalEngine``, in-process ``DSEClient``,
-TCP ``DSEClient``), the legacy-kwarg deprecation shim, and the
-``result["meta"]`` schema stamp."""
+TCP ``DSEClient``, and the sharded ``DSECluster`` coordinator), the
+legacy-kwarg deprecation shim, and the ``result["meta"]`` schema
+stamp."""
 import dataclasses
 import warnings
 
@@ -27,7 +28,8 @@ def service():
     svc.stop()
 
 
-@pytest.fixture(scope="module", params=["engine", "client", "tcp"])
+@pytest.fixture(scope="module", params=["engine", "client", "tcp",
+                                        "cluster"])
 def evaluator(request, service):
     """One fixture per scoring surface; each must satisfy the full
     ``Evaluator`` contract below."""
@@ -38,6 +40,16 @@ def evaluator(request, service):
         cl = DSEClient(service=service)
         yield cl
         cl.close()
+        return
+    if request.param == "cluster":
+        from repro.serve.cluster import DSECluster
+        svcs = [DSEService(EvalEngine(WLS), max_batch=64, max_wait_ms=20.0,
+                           worker_id=f"api-w{i}").start() for i in range(3)]
+        cl = DSECluster(svcs)
+        yield cl
+        cl.close()
+        for svc in svcs:
+            svc.stop()
         return
     host, port = service.listen()
     cl = DSEClient(address=(host, port))

@@ -1,0 +1,279 @@
+"""Cluster chaos suite (PR 10, ``-m chaos``): the sharded
+``DSECluster`` coordinator under deterministic worker loss.
+
+The invariant is the same one the rest of the chaos suite pins: every
+injected fault is transient and value-preserving, so a 3-worker cluster
+losing one or two workers mid-study must return results **bitwise
+equal** to an unfaulted single-engine run — resilience must not cost
+determinism.  ``FAULT_SEED`` (CI matrixes over it) seeds the injector;
+the ``at=`` schedules used here are seed-independent, so every seed
+must pass identically.
+
+The chaos sites fire at deterministic points (``worker_kill`` and
+``shard_timeout`` in ``_form_shards`` on the caller thread,
+``heartbeat_drop`` in the sequential ``heartbeat()`` probe loop), which
+is what makes "kill worker 0 while forming the 16th shard" a replayable
+schedule rather than a race.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.dse.api import EngineConfig
+from repro.core.dse.encoding import random_genomes
+from repro.core.dse.engine import EvalEngine
+from repro.core.dse.faults import FaultInjector, fault_seed_from_env
+from repro.core.dse.ga import GAConfig, run_ga
+from repro.core.dse.pipeline import run_pipeline
+from repro.core.dse.sweep import run_sweep
+from repro.serve.cluster import ClusterError, DSECluster
+from repro.serve.dse_service import DSEService
+
+pytestmark = pytest.mark.chaos
+
+SEED = fault_seed_from_env()
+WLS = ["kan"]
+METRICS = ("latency", "energy", "tops_w", "area")
+
+
+def _genomes(n=8, seed=3):
+    return random_genomes(np.random.default_rng(seed), n)
+
+
+def _engine():
+    return EvalEngine(WLS, config=EngineConfig(backend="exact"))
+
+
+def _cluster(n=3, injector=None, **kw):
+    svcs = [DSEService(_engine(), max_batch=256, max_wait_ms=5.0,
+                       worker_id=f"chaos-w{i}").start() for i in range(n)]
+    kw.setdefault("backoff_s", 0.01)
+    kw.setdefault("rejoin_backoff_s", 0.01)
+    return DSECluster(svcs, fault_injector=injector, **kw), svcs
+
+
+def _stop(cluster, svcs):
+    cluster.close()
+    for s in svcs:
+        s.stop(drain=False)
+
+
+def _ga_setup():
+    cfg = GAConfig(population=12, generations=3, seed_top_k=6,
+                   early_stop=10_000)
+    sweep = run_sweep(WLS, samples_per_stratum=4, seed=0,
+                      brackets=(100.0, 200.0), engine=_engine())
+    return cfg, sweep
+
+
+# =============================================================================
+# rendezvous sharding: deterministic, minimal movement
+# =============================================================================
+
+def test_rendezvous_ranking_is_stable_and_minimal_movement():
+    """Each genome's worker ranking is a deterministic permutation, and
+    ejecting a worker moves only the keys that worker owned — every
+    other key keeps its owner (the HRW property failover relies on for
+    per-worker store locality)."""
+    cl, svcs = _cluster(3)
+    try:
+        keys = [b"latency:" + g.tobytes()
+                for g in np.ascontiguousarray(_genomes(64), np.int64)]
+        ranks = [cl._rank(k) for k in keys]
+        assert ranks == [cl._rank(k) for k in keys]      # stable
+        assert all(sorted(r) == [0, 1, 2] for r in ranks)
+        owners = [r[0] for r in ranks]
+        assert len(set(owners)) == 3                     # spread, not piled
+        # drop worker 0: its keys fail over to their rank-2 worker,
+        # everyone else's owner is untouched
+        cl._workers[0].dead = True
+        for k, r in zip(keys, ranks):
+            w = cl._pick(cl._rank(k))
+            assert w.index == (r[1] if r[0] == 0 else r[0])
+    finally:
+        _stop(cl, svcs)
+
+
+def test_cluster_evaluate_bitwise_equal_to_local_engine():
+    g = _genomes(24, seed=7)
+    clean = _engine().evaluate(g)
+    cl, svcs = _cluster(3)
+    try:
+        res = cl.evaluate(g)
+        for k in METRICS:
+            assert clean[k].tobytes() == res[k].tobytes(), k
+        assert res["meta"]["shards"] >= 2       # genuinely sharded
+        assert res["meta"]["requests"] == len(g)
+    finally:
+        _stop(cl, svcs)
+
+
+# =============================================================================
+# worker loss mid-GA: bitwise equality with the unfaulted run
+# =============================================================================
+
+def test_ga_bitwise_under_one_worker_kill():
+    """A 3-worker cluster losing one worker mid-GA (the service stops
+    for real) fails the dead worker's shards over to the survivors and
+    finishes bitwise equal to a clean single-engine run."""
+    cfg, sweep = _ga_setup()
+    clean = run_ga(sweep, 200.0, cfg, seed=0, engine=_engine())
+
+    inj = FaultInjector(seed=SEED, at={"worker_kill": (5,)})
+    cl, svcs = _cluster(3, injector=inj)
+    try:
+        served = run_ga(sweep, 200.0, cfg, seed=0, engine=cl)
+        assert inj.fired()["worker_kill"] == 1
+        assert served.best_fitness == clean.best_fitness
+        assert served.best_genome.tobytes() == clean.best_genome.tobytes()
+        for k in ("latency", "energy", "tops_w"):
+            assert np.asarray(served.best_metrics[k]).tobytes() == \
+                np.asarray(clean.best_metrics[k]).tobytes(), k
+        assert "dead" in {m["status"] for m in cl.membership()}
+        assert not cl._inflight, "leaked in-flight futures"
+    finally:
+        _stop(cl, svcs)
+
+
+def test_ga_bitwise_under_two_worker_kills_and_timeouts():
+    """Losing two of three workers plus injected shard timeouts: the
+    last survivor absorbs the whole study, retries are visible in the
+    stats, and the bytes still match the clean run."""
+    cfg, sweep = _ga_setup()
+    clean = run_ga(sweep, 100.0, cfg, seed=1, engine=_engine())
+
+    inj = FaultInjector(seed=SEED, at={"worker_kill": (2, 6),
+                                       "shard_timeout": (3, 7)})
+    cl, svcs = _cluster(3, injector=inj)
+    try:
+        served = run_ga(sweep, 100.0, cfg, seed=1, engine=cl)
+        assert inj.fired()["worker_kill"] == 2
+        assert inj.fired()["shard_timeout"] == 2
+        assert cl.cluster_stats.retried_shards >= 2
+        assert served.best_fitness == clean.best_fitness
+        assert served.best_genome.tobytes() == clean.best_genome.tobytes()
+        for k in ("latency", "energy", "tops_w"):
+            assert np.asarray(served.best_metrics[k]).tobytes() == \
+                np.asarray(clean.best_metrics[k]).tobytes(), k
+        statuses = [m["status"] for m in cl.membership()]
+        assert statuses.count("dead") == 2
+        # the survivor still serves fresh work after the carnage
+        g = _genomes(6, seed=8)
+        res = cl.evaluate(g)
+        ref = _engine().evaluate(g)
+        for k in METRICS:
+            assert ref[k].tobytes() == res[k].tobytes(), k
+        assert not cl._inflight, "leaked in-flight futures"
+    finally:
+        _stop(cl, svcs)
+
+
+def test_all_workers_dead_raises_cluster_error_fast():
+    cl, svcs = _cluster(2, shard_retries=2)
+    try:
+        for w in cl._workers:
+            cl._kill_worker(w)
+        t0 = time.time()
+        with pytest.raises(ClusterError):
+            cl.evaluate(_genomes(4, seed=9))
+        assert time.time() - t0 < 30        # terminal, not a hang
+        assert not cl._inflight
+    finally:
+        _stop(cl, svcs)
+
+
+# =============================================================================
+# pipeline through the cluster (+ checkpoint composition)
+# =============================================================================
+
+def test_pipeline_through_faulted_cluster_bitwise(tmp_path):
+    """``run_pipeline(cluster=...)`` under worker loss + checkpointing:
+    the merged Pareto front, per-seed results, and the checkpoint's run
+    digest are bitwise identical to a plain local run — worker loss
+    never changes the study's bytes, and the checkpoint composes."""
+    kw = dict(seeds=(0, 1), brackets=(100.0, 200.0),
+              samples_per_stratum=4,
+              cfg=GAConfig(population=12, generations=2, seed_top_k=6,
+                           early_stop=10_000))
+    ref = run_pipeline(WLS, engine=_engine(), **kw)
+
+    inj = FaultInjector(seed=SEED, at={"worker_kill": (3,),
+                                       "shard_timeout": (1,)})
+    cl, svcs = _cluster(3, injector=inj)
+    try:
+        res = run_pipeline(WLS, engine=_engine(), cluster=cl,
+                           checkpoint=str(tmp_path / "ck"), **kw)
+    finally:
+        _stop(cl, svcs)
+    assert inj.fired()["worker_kill"] == 1
+    assert ref.front_points.tobytes() == res.front_points.tobytes()
+    assert ref.front_genomes.tobytes() == res.front_genomes.tobytes()
+    assert ref.evaluated == res.evaluated
+    for s in kw["seeds"]:
+        for b, r in ref.results[s].items():
+            q = res.results[s][b]
+            assert r.best_fitness == q.best_fitness, (s, b)
+            assert r.best_genome.tobytes() == q.best_genome.tobytes()
+
+
+# =============================================================================
+# health: heartbeat ejection + backoff-gated rejoin
+# =============================================================================
+
+def test_heartbeat_ejects_and_rejoins_deterministically():
+    """Dropping worker 0's heartbeat ``eject_after`` times in a row
+    ejects it; once the probes succeed again after the rejoin backoff,
+    it rejoins and takes traffic."""
+    # 3 workers probed in order each round: indices 0, 3, 6 are w0's
+    # first three probes — exactly eject_after consecutive failures
+    inj = FaultInjector(seed=SEED, at={"heartbeat_drop": (0, 3, 6)})
+    cl, svcs = _cluster(3, injector=inj, eject_after=3)
+    try:
+        cl.heartbeat()
+        cl.heartbeat()
+        assert [m["status"] for m in cl.membership()] == ["ok"] * 3
+        cl.heartbeat()                       # third drop: ejected
+        assert inj.fired()["heartbeat_drop"] == 3
+        assert cl.membership()[0]["status"] in ("ejected", "rejoining")
+        assert cl.cluster_stats.ejections == 1
+        # an ejected worker takes no traffic, the survivors do
+        res = cl.evaluate(_genomes(12, seed=10))
+        assert res["meta"]["workers"] == 2
+        time.sleep(0.05)                     # rejoin backoff (0.01 s)
+        cl.heartbeat()                       # clean probe: rejoined
+        assert [m["status"] for m in cl.membership()] == ["ok"] * 3
+        assert cl.cluster_stats.rejoins == 1
+        ref = _engine().evaluate(_genomes(12, seed=10))
+        res = cl.evaluate(_genomes(12, seed=10))
+        for k in METRICS:
+            assert ref[k].tobytes() == res[k].tobytes(), k
+    finally:
+        _stop(cl, svcs)
+
+
+# =============================================================================
+# TCP workers: same invariants over the wire
+# =============================================================================
+
+def test_tcp_worker_cluster_bitwise_under_faults():
+    """A mixed cluster (one TCP worker, two in-process) with an
+    injected shard timeout still returns local-engine bytes."""
+    svcs = [DSEService(_engine(), max_batch=256, max_wait_ms=5.0,
+                       worker_id=f"tcp-w{i}").start() for i in range(3)]
+    workers = [svcs[0].listen(), svcs[1], svcs[2]]
+    inj = FaultInjector(seed=SEED, at={"shard_timeout": (1,)})
+    cl = DSECluster(workers, fault_injector=inj, backoff_s=0.01)
+    g = _genomes(18, seed=11)
+    try:
+        ref = _engine().evaluate(g)
+        res = cl.evaluate(g)
+        for k in METRICS:
+            assert ref[k].tobytes() == res[k].tobytes(), k
+        assert inj.fired()["shard_timeout"] == 1
+        assert cl.cluster_stats.retried_shards >= 1
+        assert not cl._inflight
+    finally:
+        cl.close()
+        for s in svcs:
+            s.stop(drain=False)

@@ -222,6 +222,46 @@ def test_dead_server_fails_fast_not_600s():
     cl.close()
 
 
+def test_client_deadline_caps_reconnect_storm():
+    """Satellite (PR 10): a client with ``deadline_s`` never spends
+    longer reconnecting than the request's remaining budget, and the
+    failure surfaces as ``DeadlineExceededError`` — not a generic
+    ``ConnectionError`` after the full retries x backoff storm."""
+    import time
+
+    from repro.serve.dse_service import DeadlineExceededError
+    svc = DSEService(EvalEngine(WLS)).start()
+    host, port = svc.listen()
+    # a generous retry policy that would spend many seconds reconnecting
+    # without the deadline: 8 retries, backoff up to 5 s per attempt
+    cl = DSEClient(address=(host, port), retries=8, backoff_s=0.2,
+                   backoff_max_s=5.0, deadline_s=0.5)
+    g = _genomes(3, seed=14)
+    res = cl.evaluate(g)                 # healthy round trip first
+    assert res["latency"].shape == (3, len(WLS))
+    svc.stop()
+    t0 = time.time()
+    with pytest.raises(DeadlineExceededError):
+        cl.evaluate(_genomes(3, seed=15))
+    # the 0.5 s budget bounds the whole storm (with margin for the
+    # in-flight connect attempt), instead of ~8 x backoff
+    assert time.time() - t0 < 3.0
+    cl.close()
+
+
+def test_client_without_deadline_keeps_connectionerror_contract():
+    # no deadline_s: the pre-existing bounded-retry behaviour and error
+    # class are unchanged
+    svc = DSEService(EvalEngine(WLS)).start()
+    host, port = svc.listen()
+    cl = DSEClient(address=(host, port), retries=1, backoff_s=0.01)
+    cl.evaluate(_genomes(2, seed=16))
+    svc.stop()
+    with pytest.raises((ConnectionError, OSError)):
+        cl.evaluate(_genomes(2, seed=16))
+    cl.close()
+
+
 def test_stop_fails_undrained_futures_loudly():
     import time
     svc = DSEService(EvalEngine(WLS)).start()

@@ -222,6 +222,40 @@ def test_tiered_survives_back_tier_failure_lru_only():
     st.close()                                # dead back close absorbed
 
 
+def test_tiered_back_tier_recovery_resumes_writes(tmp_path):
+    """Satellite (PR 10): degradation is not a one-way door.  After the
+    back tier recovers (the injected fault schedule runs out), writes
+    resume to sqlite automatically and ``stats.errors`` stops growing —
+    and a re-put of a degraded-era key re-promotes it to persistence."""
+    from repro.core.dse.faults import FaultInjector, FaultyStore
+
+    sql = SqliteStore(str(tmp_path / "r.sqlite"))
+    inj = FaultInjector(seed=0, at={"store_put": (0, 1)})  # fail, recover
+    st = TieredStore(MemoryLRUStore(), FaultyStore(sql, inj)).bind(b"ctx")
+    rows = {bytes([i]): _row(i) for i in range(4)}
+    with pytest.warns(RuntimeWarning, match="LRU-only"):
+        st.put(b"\x00", rows[b"\x00"])        # injected back failure
+        st.put(b"\x01", rows[b"\x01"])        # injected back failure
+    errs = st.stats.errors
+    assert errs == 2
+    assert not sql.peek(b"\x00") and not sql.peek(b"\x01")
+
+    # the schedule is exhausted: the back tier has "recovered", so
+    # write-through resumes with no state to reset and no new errors
+    st.put(b"\x02", rows[b"\x02"])
+    st.put(b"\x03", rows[b"\x03"])
+    assert st.stats.errors == errs            # stopped growing
+    assert sql.peek(b"\x02") and sql.peek(b"\x03")
+
+    # degraded-era rows still serve from the front, bitwise
+    assert _bitwise(st.get(b"\x00"), rows[b"\x00"])
+    # and a re-put re-promotes one into the recovered sqlite tier
+    st.put(b"\x00", rows[b"\x00"])
+    assert sql.peek(b"\x00")
+    assert st.stats.errors == errs
+    st.close()
+
+
 def test_engine_store_served_results_bitwise(tmp_path):
     path = str(tmp_path / "r.sqlite")
     rng = np.random.default_rng(3)
